@@ -1,0 +1,95 @@
+"""Paper Table 1: model-size feasibility and time-to-converge.
+
+Two parts:
+  (a) feasibility arithmetic at the paper's true scales (Pubmed/Wiki
+      unigram/bigram × K) — per-worker model bytes under MP (V·K/M) vs DP
+      (V·K), against the paper's 8 GB low-end node (and the v5e 16 GB HBM
+      of the target deployment);
+  (b) measured time-to-target-likelihood on a scaled-down grid of model
+      sizes, MP vs DP, on this container.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit_csv_row, save_result
+from repro.configs.lda_paper import LDA_CONFIGS
+from repro.core.counts import model_bytes
+from repro.core.data_parallel import DataParallelLDA
+from repro.core.model_parallel import ModelParallelLDA
+from repro.data.synthetic import synthetic_corpus
+
+NODE_RAM = 8 * 2 ** 30          # paper's low-end cluster node
+V5E_HBM = 16 * 2 ** 30          # target chip
+WORKERS = 64                    # paper's Table-1 cluster size
+
+
+def feasibility():
+    """Dense counts = the TPU adaptation (HBM-resident int32 blocks);
+    sparse bound = the paper's CPU hash-map storage, where nonzeros are
+    bounded by the corpus token count (≈12 B per nonzero entry)."""
+    rows = []
+    for name, cfg in LDA_CONFIGS.items():
+        per_mp, total = model_bytes(cfg.vocab_size, cfg.num_topics, WORKERS)
+        per_dp, _ = model_bytes(cfg.vocab_size, cfg.num_topics, 1)
+        nnz = min(cfg.num_tokens, cfg.model_variables)
+        sparse_total = nnz * 12
+        rows.append({
+            "config": name,
+            "model_variables": cfg.model_variables,
+            "dense_total_gib": round(total / 2 ** 30, 2),
+            "dense_dp_per_worker_gib": round(per_dp / 2 ** 30, 2),
+            "dense_mp_per_worker_gib": round(per_mp / 2 ** 30, 2),
+            "sparse_dp_per_worker_gib": round(sparse_total / 2 ** 30, 2),
+            "sparse_mp_per_worker_gib": round(
+                sparse_total / WORKERS / 2 ** 30, 3),
+            "dp_fits_8gb_node_sparse": sparse_total < NODE_RAM,
+            "mp_fits_8gb_node_sparse": sparse_total / WORKERS < NODE_RAM,
+            "mp_fits_v5e_dense": per_mp * 64 / 256 < V5E_HBM,
+        })
+    return rows
+
+
+def measured(seed=0):
+    """Scaled-down Table 1: grow V×K, measure time to reach a target LL."""
+    rows = []
+    for vocab, topics in [(800, 16), (1600, 32), (3200, 64)]:
+        corpus, _, _ = synthetic_corpus(250, vocab, topics, 50, seed=seed)
+        results = {}
+        for name, engine in [
+                ("mp", ModelParallelLDA(corpus, topics, 8, seed=seed)),
+                ("dp", DataParallelLDA(corpus, topics, 8, seed=seed))]:
+            # target: 97% of the gap from initial LL to a converged LL
+            ll0 = engine.log_likelihood()
+            probe = ModelParallelLDA(corpus, topics, 8, seed=seed + 1)
+            probe.run(20)
+            target = ll0 + 0.97 * (probe.log_likelihood() - ll0)
+            t0 = time.time()
+            iters = 0
+            while engine.log_likelihood() < target and iters < 40:
+                engine.step()
+                iters += 1
+            results[name] = {"iters": iters,
+                             "seconds": round(time.time() - t0, 2),
+                             "reached": engine.log_likelihood() >= target}
+        rows.append({"vocab": vocab, "topics": topics,
+                     "model_vars": vocab * topics, **results})
+    return rows
+
+
+def run():
+    out = {"feasibility_paper_scale": feasibility(),
+           "measured_scaled_down": measured()}
+    save_result("table1_model_size", out)
+    big = out["feasibility_paper_scale"][-1]
+    m = out["measured_scaled_down"][-1]
+    emit_csv_row("table1_model_size", m["mp"]["seconds"] * 1e6,
+                 f"bigram10k_dp_dense_gib={big['dense_dp_per_worker_gib']};"
+                 f"mp_dense_gib={big['dense_mp_per_worker_gib']};"
+                 f"mp_sparse_fits_8gb={big['mp_fits_8gb_node_sparse']};"
+                 f"mp_iters={m['mp']['iters']};dp_iters={m['dp']['iters']}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Paper Figure 4: (a) per-worker memory vs number of workers;
+(b) convergence-speed scaling with workers.
+
+(a) is measured exactly (bytes of the resident model shard).
+(b) on one CPU core, wall-clock speedup cannot manifest; we report the
+    iterations-to-target (which the paper shows stays flat for MP — adding
+    workers does not degrade inference quality) plus the communication
+    volume per iteration, whose O(M) vs O(M²) split is the mechanism behind
+    the paper's Fig-4b speedup/degradation curves.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit_csv_row, save_result
+from repro.core.data_parallel import DataParallelLDA
+from repro.core.model_parallel import ModelParallelLDA
+from repro.data.synthetic import synthetic_corpus
+
+
+def run(vocab=1600, topics=32, seed=0):
+    corpus, _, _ = synthetic_corpus(256, vocab, topics, 50, seed=seed)
+    rows = []
+    target = None
+    for m in (1, 2, 4, 8, 16):
+        mp = ModelParallelLDA(corpus, topics, m, seed=seed)
+        dp = DataParallelLDA(corpus, topics, m, seed=seed)
+        mp_bytes = int(np.asarray(mp.state.ckt)[0].nbytes)
+        dp_bytes = int(np.asarray(dp.ckt_local)[0].nbytes)
+        if target is None:
+            probe = ModelParallelLDA(corpus, topics, 8, seed=seed + 1)
+            probe.run(20)
+            ll0 = mp.log_likelihood()
+            target = ll0 + 0.95 * (probe.log_likelihood() - ll0)
+        iters = 0
+        while mp.log_likelihood() < target and iters < 40:
+            mp.step()
+            iters += 1
+        # communication per iteration (bytes): MP moves M blocks of V/M·K
+        # counts + 2 K-vectors per round; DP all-reduces the V·K table.
+        k = topics
+        mp_comm = m * (mp.partition.block_size * k * 4 * 2 + k * 4 * 2)
+        dp_comm = 2 * vocab * k * 4 * (m - 1) if m > 1 else 0
+        rows.append({"workers": m,
+                     "mp_model_bytes_per_worker": mp_bytes,
+                     "dp_model_bytes_per_worker": dp_bytes,
+                     "mp_iters_to_target": iters,
+                     "mp_comm_bytes_per_iter": mp_comm,
+                     "dp_comm_bytes_per_iter": dp_comm})
+    out = {"rows": rows}
+    # 1/M law check (paper Fig 4a)
+    b1 = rows[0]["mp_model_bytes_per_worker"]
+    out["memory_follows_1_over_m"] = all(
+        abs(r["mp_model_bytes_per_worker"] * r["workers"] / b1 - 1) < 0.2
+        for r in rows)
+    out["dp_memory_flat"] = len({r["dp_model_bytes_per_worker"]
+                                 for r in rows}) == 1
+    save_result("fig4_scaling", out)
+    emit_csv_row("fig4_scaling", 0.0,
+                 f"mem_1_over_M={out['memory_follows_1_over_m']};"
+                 f"dp_flat={out['dp_memory_flat']};"
+                 f"iters@16w={rows[-1]['mp_iters_to_target']}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

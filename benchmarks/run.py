@@ -1,0 +1,48 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (one per benchmark) and writes
+full JSON payloads under benchmarks/results/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_convergence, bench_error, bench_kernel,
+                        bench_model_size, bench_scaling)
+
+BENCHES = {
+    "fig2_convergence": bench_convergence.run,
+    "fig3_error": bench_error.run,
+    "table1_model_size": bench_model_size.run,
+    "fig4_scaling": bench_scaling.run,
+    "kernel_sampler": bench_kernel.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=list(BENCHES), default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        t0 = time.time()
+        try:
+            BENCHES[name]()
+        except Exception:
+            failures += 1
+            print(f"{name},FAILED,", file=sys.stderr)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

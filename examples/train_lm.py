@@ -1,0 +1,45 @@
+"""End-to-end LM training driver example: train a reduced assigned
+architecture for a few hundred steps on CPU and watch the loss fall.
+
+    PYTHONPATH=src python examples/train_lm.py [arch] [steps]
+
+(The full-size configs run through the identical code path on the
+production mesh via ``repro.launch.train``; this example keeps CPU wall
+time reasonable.)
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.train.data_iter import modality_wrapper, synthetic_lm_stream
+from repro.train.optimizer import AdamW
+from repro.train.train_step import make_train_step
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "olmo-1b"
+steps = int(sys.argv[2]) if len(sys.argv) > 2 else 200
+
+cfg = get_config(arch).reduced()
+model = build_model(cfg)
+params = model.init(0)
+opt = AdamW(learning_rate=3e-3, warmup_steps=20, total_steps=steps)
+opt_state = opt.init(params)
+step_fn = jax.jit(make_train_step(model, opt))
+
+stream = modality_wrapper(
+    synthetic_lm_stream(cfg.vocab_size, batch=8, seq_len=64, seed=0),
+    cfg, seed=0)
+losses = []
+for step, batch in zip(range(1, steps + 1), stream):
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    params, opt_state, metrics = step_fn(params, opt_state, batch)
+    losses.append(float(metrics["loss"]))
+    if step % 25 == 0 or step == 1:
+        print(f"step {step:4d}  loss {losses[-1]:.4f}")
+
+first, last = sum(losses[:10]) / 10, sum(losses[-10:]) / 10
+print(f"\nmean loss first 10 steps {first:.4f} -> last 10 steps {last:.4f}")
+assert last < first - 0.5, "model failed to learn the synthetic structure"
+print("learned the planted Markov structure ✓")

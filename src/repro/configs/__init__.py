@@ -1,0 +1,6 @@
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, ArchConfig,
+                                InputShape, all_configs, get_config,
+                                shape_applicable)
+
+__all__ = ["ARCH_IDS", "INPUT_SHAPES", "ArchConfig", "InputShape",
+           "all_configs", "get_config", "shape_applicable"]

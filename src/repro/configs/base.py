@@ -1,0 +1,169 @@
+"""Architecture configuration schema + registry.
+
+One ``ArchConfig`` per assigned architecture (exact sizes from the public
+pool) plus the LDA paper's own workload config.  ``reduced()`` produces the
+CPU smoke-test variant (≤2 layers, d_model ≤ 512, ≤4 experts) of the same
+family, as required by the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    source: str                      # citation for the exact sizes
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    # --- attention ---
+    rope_theta: float = 10000.0
+    sliding_window: int = 0          # 0 = global attention
+    global_every: int = 0            # gemma3: 1 global layer per N (window on rest)
+    qkv_bias: bool = False
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_capacity_factor: float = 1.25
+    # --- SSM / hybrid ---
+    ssm_state_size: int = 0
+    ssm_heads: int = 0               # mamba heads (hymba); 0 = derived
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("mlstm", "slstm")
+    # --- encoder-decoder (audio) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # stub frame count (whisper: 1500)
+    # --- VLM stub ---
+    num_patch_embeds: int = 0        # llava anyres: 5 tiles × 576
+    # --- misc ---
+    norm: str = "rms"                # rms | layernorm | nonparametric
+    tie_embeddings: bool = True
+    # derived capability: can this arch serve the 500k decode shape?
+    subquadratic_decode: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def block_type(self) -> str:
+        if self.family == "moe":
+            return "moe"
+        if self.family == "hybrid":
+            return "hybrid"
+        if self.family == "ssm":
+            return "xlstm"
+        return "dense"
+
+    def layer_windows(self) -> Tuple[int, ...]:
+        """Per-layer sliding windows (0 = global) honoring global_every."""
+        if self.sliding_window <= 0:
+            return tuple(0 for _ in range(self.num_layers))
+        out = []
+        for i in range(self.num_layers):
+            is_global = (self.global_every > 0
+                         and (i + 1) % self.global_every == 0)
+            out.append(0 if is_global else self.sliding_window)
+        return tuple(out)
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: same family/topology, tiny sizes."""
+        layers = min(self.num_layers, 2)
+        if self.block_pattern:
+            layers = max(layers, len(set(self.block_pattern)))
+        d = min(self.d_model, 128)
+        heads = max(min(self.num_heads, 4), 1)
+        kv = max(min(self.num_kv_heads, heads), 1)
+        if heads % kv:
+            kv = 1
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            num_layers=layers,
+            d_model=d,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=32,
+            d_ff=min(self.d_ff, 256) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            num_experts_per_tok=min(self.num_experts_per_tok, 2)
+            if self.num_experts_per_tok else 0,
+            num_shared_experts=min(self.num_shared_experts, 1)
+            if self.num_shared_experts else 0,
+            ssm_state_size=min(self.ssm_state_size, 8)
+            if self.ssm_state_size else 0,
+            ssm_heads=max(min(self.ssm_heads, 4), 1) if self.ssm_heads else 0,
+            encoder_layers=min(self.encoder_layers, 2)
+            if self.encoder_layers else 0,
+            encoder_seq=min(self.encoder_seq, 16) if self.encoder_seq else 0,
+            num_patch_embeds=min(self.num_patch_embeds, 8)
+            if self.num_patch_embeds else 0,
+            sliding_window=min(self.sliding_window, 16)
+            if self.sliding_window else 0,
+            global_every=self.global_every,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = [
+    "qwen2-moe-a2.7b", "hymba-1.5b", "phi3-mini-3.8b",
+    "llava-next-mistral-7b", "xlstm-350m", "gemma3-1b", "olmo-1b",
+    "qwen3-moe-235b-a22b", "whisper-medium", "phi4-mini-3.8b",
+]
+
+_MODULE_OF = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+              for a in ARCH_IDS}
+_CACHE: Dict[str, ArchConfig] = {}
+
+
+def get_config(arch: str) -> ArchConfig:
+    if arch not in _CACHE:
+        if arch not in _MODULE_OF:
+            raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+        mod = importlib.import_module(_MODULE_OF[arch])
+        _CACHE[arch] = mod.CONFIG
+    return _CACHE[arch]
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str    # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: InputShape) -> Optional[str]:
+    """None if the (arch, shape) pair runs; else the documented skip reason."""
+    if shape.name == "long_500k" and not cfg.subquadratic_decode:
+        return ("full-attention architecture: 500k decode requires "
+                "sub-quadratic attention (DESIGN.md §5)")
+    return None

@@ -1,0 +1,26 @@
+"""Gemma-3-1B [hf:google/gemma-3-1b-pt].
+
+26L dense, d 1152, 4 heads (GQA kv=1, head_dim 256), d_ff 6912,
+vocab 262144; 5 sliding-window layers (W=1024) per 1 global layer, 128k
+(extended 500k here) context.  The SWA pattern + single-query decode on
+global layers is sub-quadratic per token ⇒ long_500k runs."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-1b",
+    family="dense",
+    source="hf:google/gemma-3-1b-pt",
+    num_layers=26,
+    d_model=1152,
+    num_heads=4,
+    num_kv_heads=1,
+    d_ff=6912,
+    vocab_size=262144,
+    head_dim=256,
+    rope_theta=1_000_000.0,
+    sliding_window=1024,
+    global_every=6,
+    norm="rms",
+    tie_embeddings=True,
+    subquadratic_decode=True,
+)

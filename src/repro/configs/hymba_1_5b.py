@@ -1,0 +1,30 @@
+"""Hymba-1.5B [arXiv:2411.13676].
+
+32L hybrid-head blocks: every block runs attention heads and Mamba (SSD)
+heads in parallel on the same input and fuses by mean (the paper's
+parallel-fusion).  25 attn heads (GQA kv=5), d_ff 5504, ssm_state 16,
+sliding-window attention on most layers with a few global layers —
+modeled with the 5:1 local:global pattern; SWA + constant SSM state make
+it eligible for the 500k decode shape."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    source="arXiv:2411.13676",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    head_dim=64,
+    rope_theta=10000.0,
+    sliding_window=1024,
+    global_every=8,
+    ssm_state_size=16,
+    ssm_heads=25,
+    norm="rms",
+    tie_embeddings=True,
+    subquadratic_decode=True,
+)

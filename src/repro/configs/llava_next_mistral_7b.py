@@ -1,0 +1,25 @@
+"""LLaVA-NeXT (Mistral-7B backbone) [hf:llava-hf/llava-v1.6-mistral-7b-hf].
+
+The LM backbone: 32L, d 4096, 32H GQA kv=8, d_ff 14336, vocab 32000.
+Vision tower + projector are STUBBED per the assignment: ``input_specs``
+provides 2880 pre-projected anyres patch embeddings (5 tiles × 576) that
+are concatenated ahead of the text tokens."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    head_dim=128,
+    rope_theta=1_000_000.0,
+    num_patch_embeds=2880,
+    norm="rms",
+    tie_embeddings=False,
+    subquadratic_decode=False,
+)

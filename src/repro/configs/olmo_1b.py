@@ -1,0 +1,19 @@
+"""OLMo-1B [arXiv:2402.00838]: 16L dense, non-parametric LayerNorm."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="olmo-1b",
+    family="dense",
+    source="arXiv:2402.00838",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=50304,
+    head_dim=128,
+    rope_theta=10000.0,
+    norm="nonparametric",
+    tie_embeddings=True,
+    subquadratic_decode=False,
+)

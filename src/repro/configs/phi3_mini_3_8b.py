@@ -1,0 +1,19 @@
+"""Phi-3-mini-3.8B [arXiv:2404.14219]: 32L dense, RoPE+SwiGLU, MHA."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    source="arXiv:2404.14219",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+    head_dim=96,
+    rope_theta=10000.0,
+    norm="rms",
+    tie_embeddings=False,
+    subquadratic_decode=False,
+)

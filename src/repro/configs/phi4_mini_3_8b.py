@@ -1,0 +1,19 @@
+"""Phi-4-mini-3.8B [arXiv:2412.08905]: 32L dense, GQA kv=8, 200k vocab."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    source="arXiv:2412.08905",
+    num_layers=32,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=200064,
+    head_dim=128,
+    rope_theta=10000.0,
+    norm="rms",
+    tie_embeddings=True,
+    subquadratic_decode=False,
+)

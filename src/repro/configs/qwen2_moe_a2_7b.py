@@ -1,0 +1,26 @@
+"""Qwen1.5-MoE-A2.7B [hf:Qwen/Qwen1.5-MoE-A2.7B].
+
+24L, d_model 2048, 16 heads (MHA: kv=16), expert d_ff 1408, vocab 151936;
+60 routed experts top-4 plus 4 shared experts (shared FFN 4×1408 = 5632)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=151936,
+    head_dim=128,
+    rope_theta=1_000_000.0,
+    qkv_bias=True,
+    num_experts=60,
+    num_experts_per_tok=4,
+    num_shared_experts=4,
+    norm="rms",
+    tie_embeddings=False,
+    subquadratic_decode=False,
+)

@@ -1,0 +1,26 @@
+"""Qwen3-235B-A22B [hf:Qwen/Qwen3-30B-A3B family scaling].
+
+94L MoE: d 4096, 64 heads (GQA kv=4, head_dim 128), 128 routed experts
+top-8 with expert d_ff 1536, vocab 151936.  The "big model" architecture
+of the assignment (~235B params) — the transformer analogue of the
+paper's 200B-variable LDA table; exercises FSDP+EP+TP sharding."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    source="hf:Qwen/Qwen3-30B-A3B (235B-A22B scaling)",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    d_ff=1536,
+    vocab_size=151936,
+    head_dim=128,
+    rope_theta=1_000_000.0,
+    num_experts=128,
+    num_experts_per_tok=8,
+    norm="rms",
+    tie_embeddings=False,
+    subquadratic_decode=False,
+)

@@ -1,0 +1,28 @@
+"""Whisper-medium [arXiv:2212.04356].
+
+Encoder-decoder: 24 encoder + 24 decoder layers, d 1024, 16 heads,
+d_ff 4096, vocab 51865.  The mel-spectrogram + conv frontend is a STUB —
+``input_specs`` supplies 1500 precomputed frame embeddings (30 s of audio
+after the conv stride-2), per the assignment carve-out.  Decode shapes use
+the decoder with a self-attention cache of seq_len and cross-attention
+over the 1500 frames; long_500k is skipped (no sub-quadratic decoder)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    source="arXiv:2212.04356",
+    num_layers=24,            # decoder layers
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    head_dim=64,
+    rope_theta=0.0,           # whisper uses learned/sinusoidal positions
+    encoder_layers=24,
+    encoder_seq=1500,
+    norm="layernorm",
+    tie_embeddings=True,
+    subquadratic_decode=False,
+)

@@ -1,0 +1,26 @@
+"""xLSTM-350M [arXiv:2405.04517].
+
+24 blocks alternating mLSTM (matrix memory, SSD-form chunked evaluation)
+and sLSTM (scalar memory, sequential scan); d 1024, 4 heads, no separate
+FFN (blocks carry an internal ×2 up-projection); attention-free ⇒
+eligible for the 500k decode shape with O(1) recurrent state."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m",
+    family="ssm",
+    source="arXiv:2405.04517",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    head_dim=256,
+    rope_theta=0.0,
+    ssm_state_size=256,
+    block_pattern=("mlstm", "slstm"),
+    norm="layernorm",
+    tie_embeddings=True,
+    subquadratic_decode=True,
+)

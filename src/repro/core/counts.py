@@ -1,0 +1,105 @@
+"""Count-matrix state for collapsed Gibbs sampling of LDA.
+
+The "model" in the paper's sense is the pair of count matrices
+
+  * ``cdk`` — document-topic counts  ``C_d^k``  with shape ``[D, K]``
+  * ``ckt`` — word-topic counts      ``C_k^t``  stored word-major ``[V, K]``
+  * ``ck``  — topic totals           ``C_k``    with shape ``[K]``
+
+``ckt`` is the object the paper partitions into disjoint word blocks; the
+word-major layout makes a block a contiguous row range, which is what both
+the rotation schedule (``schedule.py``) and the Pallas kernel tile over.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CountState:
+    """Pytree holding the three LDA count tensors."""
+
+    cdk: jax.Array  # [D, K] int32
+    ckt: jax.Array  # [V, K] int32 (word-major)
+    ck: jax.Array   # [K]    int32
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return (self.cdk, self.ckt, self.ck), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -- convenience -----------------------------------------------------
+    @property
+    def num_docs(self) -> int:
+        return self.cdk.shape[0]
+
+    @property
+    def vocab_size(self) -> int:
+        return self.ckt.shape[0]
+
+    @property
+    def num_topics(self) -> int:
+        return self.ck.shape[0]
+
+
+def build_counts(docs: np.ndarray, words: np.ndarray, z: np.ndarray,
+                 num_docs: int, vocab_size: int, num_topics: int) -> CountState:
+    """Accumulate count matrices from token arrays (host-side, numpy)."""
+    docs = np.asarray(docs)
+    words = np.asarray(words)
+    z = np.asarray(z)
+    cdk = np.zeros((num_docs, num_topics), np.int32)
+    ckt = np.zeros((vocab_size, num_topics), np.int32)
+    np.add.at(cdk, (docs, z), 1)
+    np.add.at(ckt, (words, z), 1)
+    ck = ckt.sum(axis=0).astype(np.int32)
+    return CountState(jnp.asarray(cdk), jnp.asarray(ckt), jnp.asarray(ck))
+
+
+def check_invariants(state: CountState, num_tokens: int) -> None:
+    """Assert the conservation laws any amount of Gibbs sampling preserves.
+
+    * every count is non-negative;
+    * ``sum_k C_d^k`` equals the number of tokens per document (constant);
+    * ``sum_d C_d^k == C_k == sum_t C_k^t`` (topic totals agree);
+    * total mass equals the corpus token count.
+    """
+    cdk = np.asarray(state.cdk)
+    ckt = np.asarray(state.ckt)
+    ck = np.asarray(state.ck)
+    assert (cdk >= 0).all(), "negative document-topic count"
+    assert (ckt >= 0).all(), "negative word-topic count"
+    assert (ck >= 0).all(), "negative topic total"
+    np.testing.assert_array_equal(cdk.sum(axis=0), ck,
+                                  err_msg="sum_d C_dk != C_k")
+    np.testing.assert_array_equal(ckt.sum(axis=0), ck,
+                                  err_msg="sum_t C_kt != C_k")
+    assert int(ck.sum()) == num_tokens, (
+        f"total mass {int(ck.sum())} != corpus tokens {num_tokens}")
+
+
+def counts_equal(a: CountState, b: CountState) -> bool:
+    return (bool((np.asarray(a.cdk) == np.asarray(b.cdk)).all())
+            and bool((np.asarray(a.ckt) == np.asarray(b.ckt)).all())
+            and bool((np.asarray(a.ck) == np.asarray(b.ck)).all()))
+
+
+def model_bytes(vocab_size: int, num_topics: int,
+                num_workers: int = 1, dtype_bytes: int = 4) -> Tuple[int, int]:
+    """(per-worker, total) bytes of the word-topic table — Table 1 / Fig 4a math.
+
+    Model-parallel workers hold one ``V/M`` block; a data-parallel worker
+    holds the full table.
+    """
+    total = vocab_size * num_topics * dtype_bytes
+    per_worker = total // num_workers
+    return per_worker, total

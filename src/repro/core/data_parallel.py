@@ -1,0 +1,187 @@
+"""Data-parallel (Yahoo!LDA-style) baseline for the paper's comparisons.
+
+Every worker holds the document shard AND a full local copy of the
+word-topic table; workers sweep their tokens against the (stale) local
+copy and deltas are reconciled by an all-reduce.  ``syncs_per_iter``
+controls staleness: 1 = classic AD-LDA (Newman et al. 2007, reconcile once
+per iteration); larger values approximate Yahoo!LDA's continuous background
+sync; the paper's point (Figs 2–4) is that ANY finite sync rate leaves
+parallelization error in ``{C_k^t}``, which the model-parallel engine
+eliminates by construction.
+
+Per-worker model memory is ``O(V·K)`` regardless of M — the "big model"
+failure mode of Table 1 / Fig 4a.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.counts import CountState
+from repro.core.likelihood import doc_log_likelihood, word_log_likelihood
+from repro.core.sampler import sweep_block_scan
+from repro.data.corpus import Corpus
+from repro.data.sharding import worker_shard
+
+
+@partial(jax.jit, static_argnames=("syncs_per_iter",))
+def _iteration_dp(cdk, ckt_local, ck_local, ckt_global, ck_global,
+                  doc, word, z, mask, u, alpha, beta, vbeta,
+                  syncs_per_iter: int = 1):
+    """One data-parallel iteration, stacked over workers (vmap backend).
+
+    ``doc/word/z/mask/u`` have shape [M, S, T]: per-worker tokens split
+    into ``S = syncs_per_iter`` chunks of capacity T.
+    """
+    num_workers = doc.shape[0]
+
+    def chunk_step(carry, xs):
+        cdk, ckt_loc, ck_loc = carry
+        d, t, zz, mk, uu = xs
+
+        def one(cdk, ckt, ck, d, t, zz, mk, uu):
+            return sweep_block_scan(cdk, ckt, ck, d, t, zz, mk, uu,
+                                    alpha, beta, vbeta, use_eq3=False)
+
+        cdk, ckt_loc, ck_loc, z_new = jax.vmap(one)(
+            cdk, ckt_loc, ck_loc, d, t, zz, mk, uu)
+        return (cdk, ckt_loc, ck_loc), z_new
+
+    z_chunks, errs = [], []
+    ckt_g, ck_g = ckt_global, ck_global
+    carry = (cdk, ckt_local, ck_local)
+    for s in range(syncs_per_iter):
+        xs = (doc[:, s], word[:, s], z[:, s], mask[:, s], u[:, s])
+        carry, z_new = chunk_step(carry, xs)
+        cdk, ckt_loc, ck_loc = carry
+        # all-reduce of deltas (the "background synchronization"):
+        # global' = global + sum_m (local_m - global); locals reset to global'.
+        ckt_g = ckt_g + (ckt_loc - ckt_g[None]).sum(axis=0)
+        ck_g = ck_g + (ck_loc - ck_g[None]).sum(axis=0)
+        # staleness error at reconciliation time (Fig-3 analogue for DP):
+        # each worker sampled the chunk against ckt_loc, which now differs
+        # from the reconciled table by every other worker's updates.
+        n_tokens = jnp.maximum(ck_g.sum(), 1).astype(jnp.float32)
+        errs.append(jnp.abs(ckt_loc - ckt_g[None]).sum().astype(jnp.float32)
+                    / (num_workers * n_tokens))
+        ckt_loc = jnp.broadcast_to(ckt_g, ckt_loc.shape)
+        ck_loc = jnp.broadcast_to(ck_g, ck_loc.shape)
+        carry = (cdk, ckt_loc, ck_loc)
+        z_chunks.append(z_new)
+    z_out = jnp.stack(z_chunks, axis=1)
+    return cdk, ckt_loc, ck_loc, ckt_g, ck_g, z_out, jnp.stack(errs)
+
+
+class DataParallelLDA:
+    """AD-LDA baseline with configurable sync rate (vmap backend)."""
+
+    def __init__(self, corpus: Corpus, num_topics: int, num_workers: int,
+                 alpha: float | np.ndarray = 0.1, beta: float = 0.01,
+                 seed: int = 0, syncs_per_iter: int = 1):
+        corpus.validate()
+        self.corpus = corpus
+        self.num_topics = int(num_topics)
+        self.num_workers = int(num_workers)
+        self.alpha = jnp.full((num_topics,), alpha, jnp.float32) \
+            if np.isscalar(alpha) else jnp.asarray(alpha, jnp.float32)
+        self.beta = float(beta)
+        self.vbeta = float(beta * corpus.vocab_size)
+        self.syncs_per_iter = int(syncs_per_iter)
+        self._rng = np.random.default_rng(seed)
+        self._build(seed)
+        self.iteration_count = 0
+
+    def _build(self, seed: int) -> None:
+        c, m, k, s = (self.corpus, self.num_workers, self.num_topics,
+                      self.syncs_per_iter)
+        shards = [worker_shard(c, w, m) for w in range(m)]
+        self.shards = shards
+        cap = max(1, -(-max(sh.word.shape[0] for sh in shards) // s))
+        self.capacity = cap
+        doc = np.zeros((m, s, cap), np.int32)
+        word = np.zeros((m, s, cap), np.int32)
+        mask = np.zeros((m, s, cap), bool)
+        z0 = self._rng.integers(0, k, size=c.num_tokens).astype(np.int32)
+        zarr = np.zeros((m, s, cap), np.int32)
+        for w, sh in enumerate(shards):
+            n = sh.word.shape[0]
+            flat_doc = np.zeros(s * cap, np.int32)
+            flat_word = np.zeros(s * cap, np.int32)
+            flat_z = np.zeros(s * cap, np.int32)
+            flat_mask = np.zeros(s * cap, bool)
+            flat_doc[:n] = sh.doc_local
+            flat_word[:n] = sh.word
+            flat_z[:n] = z0[sh.token_id]
+            flat_mask[:n] = True
+            doc[w] = flat_doc.reshape(s, cap)
+            word[w] = flat_word.reshape(s, cap)
+            zarr[w] = flat_z.reshape(s, cap)
+            mask[w] = flat_mask.reshape(s, cap)
+        dloc = shards[0].num_local_docs
+        cdk = np.zeros((m, dloc, k), np.int32)
+        ckt_g = np.zeros((c.vocab_size, k), np.int32)
+        for w, sh in enumerate(shards):
+            zz = z0[sh.token_id]
+            np.add.at(cdk[w], (sh.doc_local, zz), 1)
+            np.add.at(ckt_g, (sh.word, zz), 1)
+        ck_g = ckt_g.sum(axis=0).astype(np.int32)
+        self.doc, self.word, self.mask = (jnp.asarray(doc), jnp.asarray(word),
+                                          jnp.asarray(mask))
+        self.z = jnp.asarray(zarr)
+        self.cdk = jnp.asarray(cdk)
+        self.ckt_global = jnp.asarray(ckt_g)
+        self.ck_global = jnp.asarray(ck_g)
+        self.ckt_local = jnp.broadcast_to(self.ckt_global, (m,) + ckt_g.shape)
+        self.ck_local = jnp.broadcast_to(self.ck_global, (m, k))
+
+    def step(self) -> None:
+        m, s, cap = self.num_workers, self.syncs_per_iter, self.capacity
+        u = jnp.asarray(self._rng.random((m, s, cap), np.float32))
+        out = _iteration_dp(self.cdk, self.ckt_local, self.ck_local,
+                            self.ckt_global, self.ck_global,
+                            self.doc, self.word, self.z, self.mask, u,
+                            self.alpha, jnp.float32(self.beta),
+                            jnp.float32(self.vbeta),
+                            syncs_per_iter=s)
+        (self.cdk, self.ckt_local, self.ck_local,
+         self.ckt_global, self.ck_global, self.z, errs) = out
+        self.last_staleness_error = float(np.asarray(errs).mean())
+        self.iteration_count += 1
+
+    def run(self, num_iterations: int,
+            callback: Optional[Callable[[int, "DataParallelLDA"], None]] = None,
+            eval_every: int = 1) -> List[dict]:
+        history = []
+        for i in range(num_iterations):
+            self.step()
+            if (i + 1) % eval_every == 0:
+                history.append({"iteration": self.iteration_count,
+                                "log_likelihood": self.log_likelihood()})
+            if callback is not None:
+                callback(i, self)
+        return history
+
+    def gather_counts(self) -> CountState:
+        cdk_full = np.zeros((self.corpus.num_docs, self.num_topics), np.int32)
+        cdk = np.asarray(self.cdk)
+        for w, sh in enumerate(self.shards):
+            real = sh.doc_global >= 0
+            cdk_full[sh.doc_global[real]] = cdk[w][:real.sum()]
+        return CountState(jnp.asarray(cdk_full), self.ckt_global,
+                          self.ck_global)
+
+    def log_likelihood(self) -> float:
+        state = self.gather_counts()
+        lw = word_log_likelihood(state.ckt, state.ck, self.beta)
+        ld = doc_log_likelihood(state.cdk, self.alpha)
+        return float(lw + ld)
+
+    def model_error(self) -> float:
+        """Normalized ℓ1 staleness of local model copies at the moment of the
+        last reconciliation — the parallelization error the paper's design
+        eliminates (compare Fig 3: the MP engine's ``delta_error``)."""
+        return getattr(self, "last_staleness_error", 0.0)

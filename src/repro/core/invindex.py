@@ -1,0 +1,106 @@
+"""Inverted-index corpus layout (paper §4.2).
+
+Model-parallel rounds touch only the tokens whose word falls in the current
+block.  A bag-of-words (forward) layout would force a scan over all local
+tokens with membership tests every round; the paper's fix is an inverted
+index (word -> token postings).  The JAX analogue: sort each worker's token
+slice by ``(block(word), word, doc)`` so that
+
+  * a round's tokens are one contiguous slice (no comparisons at all), and
+  * within the slice tokens of the same word are adjacent, which is what
+    makes the per-word ``coeff``/``sum_k X_k`` cache of eq (3) (and the
+    Pallas kernel's VMEM row reuse) effective.
+
+Because XLA needs static shapes, the ``M`` per-block slices are padded to a
+common length and carry a validity mask; padded entries are no-ops in the
+samplers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.schedule import VocabPartition
+
+
+@dataclasses.dataclass
+class InvertedIndex:
+    """Per-worker inverted-index token layout, grouped by word block.
+
+    All arrays have shape ``[M, T]`` where ``M`` is the number of blocks and
+    ``T`` the padded per-block token capacity.
+    """
+
+    doc: np.ndarray        # [M, T] int32 — LOCAL document index
+    word_off: np.ndarray   # [M, T] int32 — word offset inside its block
+    word: np.ndarray       # [M, T] int32 — global word id (diagnostics)
+    mask: np.ndarray       # [M, T] bool  — True for real tokens
+    token_id: np.ndarray   # [M, T] int32 — position in the original arrays
+    num_real: np.ndarray   # [M]    int32 — real token count per block
+
+    @property
+    def num_blocks(self) -> int:
+        return self.doc.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.doc.shape[1]
+
+
+def build_inverted_index(doc: np.ndarray, word: np.ndarray,
+                         partition: VocabPartition,
+                         capacity: int | None = None) -> InvertedIndex:
+    """Sort one worker's tokens into the ``[M, T]`` block-major layout.
+
+    ``doc`` must already be local indices (0..D_local-1).  ``capacity`` may
+    be supplied to force a common padding across workers (required so the
+    shard_map engine sees identical shapes on every device).
+    """
+    doc = np.asarray(doc, np.int32)
+    word = np.asarray(word, np.int32)
+    n = doc.shape[0]
+    blk = partition.block_of_word(word)
+    # Stable sort by (block, word, doc): inverted index with postings grouped
+    # by word, postings ordered by document.
+    order = np.lexsort((doc, word, blk))
+    doc_s, word_s, blk_s = doc[order], word[order], blk[order]
+
+    m = partition.num_blocks
+    counts = np.bincount(blk_s, minlength=m).astype(np.int32)
+    cap = int(counts.max()) if counts.size and capacity is None else int(capacity or 1)
+    cap = max(cap, 1)
+    if counts.max(initial=0) > cap:
+        raise ValueError(f"capacity {cap} < max block size {counts.max()}")
+
+    out_doc = np.zeros((m, cap), np.int32)
+    out_off = np.zeros((m, cap), np.int32)
+    out_word = np.zeros((m, cap), np.int32)
+    out_mask = np.zeros((m, cap), bool)
+    out_tid = np.zeros((m, cap), np.int32)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    for b in range(m):
+        s, c = starts[b], counts[b]
+        out_doc[b, :c] = doc_s[s:s + c]
+        out_word[b, :c] = word_s[s:s + c]
+        out_off[b, :c] = partition.word_offset_in_block(word_s[s:s + c])
+        out_mask[b, :c] = True
+        out_tid[b, :c] = order[s:s + c]
+    return InvertedIndex(out_doc, out_off, out_word, out_mask, out_tid, counts)
+
+
+def scatter_assignments(index: InvertedIndex, z_blocks: np.ndarray,
+                        num_tokens: int) -> np.ndarray:
+    """Invert the layout: write per-block assignment arrays back to token order."""
+    z = np.zeros(num_tokens, np.int32)
+    msk = index.mask
+    z[index.token_id[msk]] = np.asarray(z_blocks)[msk]
+    return z
+
+
+def gather_assignments(index: InvertedIndex, z: np.ndarray) -> np.ndarray:
+    """Forward map: token-order assignments -> ``[M, T]`` block layout."""
+    out = np.zeros_like(index.token_id)
+    msk = index.mask
+    out[msk] = np.asarray(z)[index.token_id[msk]]
+    return out

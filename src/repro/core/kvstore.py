@@ -1,0 +1,146 @@
+"""Host-process simulation of the paper's Figure-1 architecture.
+
+On TPU the key-value store dissolves into the sharded array + ppermute ring
+(DESIGN.md §2); this module keeps the original component structure —
+Scheduler / Workers / distributed KV store — as explicit objects, for two
+reasons: (i) it documents Algorithms 1–2 in their native form and is used
+by an example; (ii) it is the checkpointable host representation of a
+sharded model (each block is one KV entry, exactly how ``train/checkpoint``
+persists LDA runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import schedule as sched
+from repro.core.invindex import build_inverted_index
+from repro.core.sampler import gibbs_sweep_np
+from repro.data.corpus import Corpus
+from repro.data.sharding import worker_shard
+
+
+class KVStore:
+    """Distributed in-memory block store (a DHT in the paper; a dict here).
+
+    Keys are block ids for ``C_k^t`` blocks plus the special key ``"ck"``
+    for the non-separable topic totals (§3.3 special channel).
+    """
+
+    def __init__(self):
+        self._blocks: Dict[int, np.ndarray] = {}
+        self._ck: np.ndarray | None = None
+        self.bytes_moved = 0
+
+    # -- word-topic blocks (on-demand, §3.2) --
+    def put_block(self, block_id: int, rows: np.ndarray) -> None:
+        self.bytes_moved += rows.nbytes
+        self._blocks[block_id] = rows.copy()
+
+    def get_block(self, block_id: int) -> np.ndarray:
+        rows = self._blocks[block_id]
+        self.bytes_moved += rows.nbytes
+        return rows.copy()
+
+    # -- topic totals (per-round lazy sync, §3.3) --
+    def put_ck_delta(self, delta: np.ndarray) -> None:
+        self.bytes_moved += delta.nbytes
+        self._ck = self._ck + delta
+
+    def get_ck(self) -> np.ndarray:
+        self.bytes_moved += self._ck.nbytes
+        return self._ck.copy()
+
+    def init_ck(self, ck: np.ndarray) -> None:
+        self._ck = ck.astype(np.int64).copy()
+
+
+@dataclasses.dataclass
+class HostWorker:
+    """Algorithm 2: request block -> Gibbs sweep -> commit block."""
+
+    worker_id: int
+    cdk: np.ndarray            # [D_local, K]
+    index: object              # InvertedIndex
+    z: np.ndarray              # [M, T] block-layout assignments
+
+    def run_round(self, block_id: int, store: KVStore, partition,
+                  alpha, beta, rng) -> None:
+        ckt_block = store.get_block(block_id).astype(np.int32)
+        ck_synced = store.get_ck().astype(np.int32)
+        ck = ck_synced.copy()
+        d = self.index.doc[block_id]
+        off = self.index.word_off[block_id]
+        msk = self.index.mask[block_id]
+        n = int(msk.sum())
+        if n:
+            u = rng.random(n)
+            z_new = gibbs_sweep_np(
+                self.cdk, ckt_block, ck,
+                d[:n], off[:n], self.z[block_id, :n], u, alpha, beta,
+                use_eq3=True)
+            self.z[block_id, :n] = z_new
+        store.put_block(block_id, ckt_block)
+        store.put_ck_delta((ck - ck_synced).astype(np.int64))
+
+
+class HostModelParallelLDA:
+    """Scheduler loop (Algorithm 1) driving host workers round-robin.
+
+    Executes the model-parallel schedule *serially* with the exact same
+    frozen-``C_k``-per-round semantics as the SPMD engine; used by tests as
+    the structural reference and by ``examples/architecture_walkthrough``.
+    """
+
+    def __init__(self, corpus: Corpus, num_topics: int, num_workers: int,
+                 alpha: float = 0.1, beta: float = 0.01, seed: int = 0):
+        corpus.validate()
+        self.corpus = corpus
+        self.num_topics = num_topics
+        self.num_workers = num_workers
+        self.alpha = np.full(num_topics, alpha, np.float32)
+        self.beta = float(beta)
+        self.partition = sched.partition_vocab(corpus.vocab_size, num_workers)
+        self.rng = np.random.default_rng(seed)
+        self.store = KVStore()
+        k = num_topics
+        vb = self.partition.block_size
+        z0 = self.rng.integers(0, k, size=corpus.num_tokens).astype(np.int32)
+        ckt = np.zeros((num_workers, vb, k), np.int32)
+        self.workers: List[HostWorker] = []
+        for w in range(num_workers):
+            s = worker_shard(corpus, w, num_workers)
+            idx = build_inverted_index(s.doc_local, s.word, self.partition)
+            cdk = np.zeros((s.num_local_docs, k), np.int32)
+            zz = z0[s.token_id]
+            np.add.at(cdk, (s.doc_local, zz), 1)
+            blk = self.partition.block_of_word(s.word)
+            off = self.partition.word_offset_in_block(s.word)
+            np.add.at(ckt, (blk, off, zz), 1)
+            zlay = np.zeros_like(idx.token_id)
+            zlay[idx.mask] = zz[idx.token_id[idx.mask]]
+            self.workers.append(HostWorker(w, cdk, idx, zlay))
+        for b in range(num_workers):
+            self.store.put_block(b, ckt[b])
+        self.store.init_ck(ckt.sum(axis=(0, 1)))
+        self.iteration_count = 0
+
+    def step(self) -> None:
+        m = self.num_workers
+        for r in range(m):
+            # scheduler: dispatch tasks, then rotate (Algorithm 1)
+            for w in range(m):
+                b = sched.block_for(w, r, m)
+                self.workers[w].run_round(b, self.store, self.partition,
+                                          self.alpha, self.beta, self.rng)
+        self.iteration_count += 1
+
+    def gather_ckt(self) -> np.ndarray:
+        vb = self.partition.block_size
+        out = np.zeros((self.partition.padded_vocab, self.num_topics),
+                       np.int32)
+        for b in range(self.num_workers):
+            out[b * vb:(b + 1) * vb] = self.store.get_block(b)
+        return out[:self.corpus.vocab_size]

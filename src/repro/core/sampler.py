@@ -1,0 +1,190 @@
+"""Collapsed Gibbs sampling for LDA (paper eq. 1) and the word-major
+bucket decomposition used for inverted-index sampling (paper eq. 3).
+
+Two interchangeable implementations of the *exact* serial sampler:
+
+  * :func:`gibbs_sweep_np` — numpy host oracle, the ground truth the JAX
+    paths are validated against;
+  * :func:`sweep_block_scan` — ``jax.lax.scan`` over a (possibly padded)
+    token slice against a word *block* of the model, the unit of work one
+    worker performs in one round of the model-parallel schedule.
+
+Both consume externally supplied per-token uniforms so runs are exactly
+reproducible and, crucially, so that a model-parallel execution can be
+replayed serially with the *same* randomness (the paper's "parallel equals
+serial" claim becomes a bit-exact test).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Conditional distributions (unnormalized)
+# ---------------------------------------------------------------------------
+
+def conditional_eq1(ckt_row, cdk_row, ck, alpha, beta, vbeta):
+    """Paper eq. (1): p(z=k) ∝ (C_d^k + α_k)(C_k^t + β) / (C_k + Vβ).
+
+    Counts must already EXCLUDE the current token (the ¬dn terms).
+    """
+    return (cdk_row + alpha) * (ckt_row + beta) / (ck + vbeta)
+
+
+def conditional_eq3(ckt_row, cdk_row, ck, alpha, beta, vbeta):
+    """Paper eq. (3): p(z=k) ∝ X_k + Y_k with the shared word-major coeff.
+
+    ``coeff`` and ``sum_k X_k`` depend only on the *word*, so when tokens are
+    visited word-major (inverted index) they are computed once per word and
+    reused — the caching the paper designs for, and exactly what the Pallas
+    kernel exploits as VMEM row reuse.  Algebraically identical to eq. (1).
+    """
+    coeff = (ckt_row + beta) / (ck + vbeta)
+    x = coeff * alpha         # X_k — word-dependent only
+    y = coeff * cdk_row       # Y_k — O(K_d) under row sparsity on hosts
+    return x + y
+
+
+def sample_from_mass(p, u):
+    """Inverse-CDF draw: smallest k with cumsum(p)[k] > u * sum(p)."""
+    csum = jnp.cumsum(p)
+    return jnp.argmax(csum > u * csum[-1])
+
+
+# ---------------------------------------------------------------------------
+# Numpy host oracle (exact serial CGS)
+# ---------------------------------------------------------------------------
+
+def gibbs_sweep_np(cdk, ckt, ck, doc, word, z, u, alpha, beta,
+                   order=None, use_eq3: bool = False):
+    """One exact serial sweep, mutating counts in place.  Returns new ``z``.
+
+    ``u`` holds one uniform per token, consumed in visit ``order``.
+    """
+    doc = np.asarray(doc); word = np.asarray(word)
+    z = np.array(z, np.int32, copy=True)
+    alpha = np.asarray(alpha, np.float32)
+    vbeta = np.float32(beta * ckt.shape[0])
+    beta = np.float32(beta)
+    cond = conditional_eq3 if use_eq3 else conditional_eq1
+    if order is None:
+        order = range(doc.shape[0])
+    for i in order:
+        d, t, k_old = doc[i], word[i], z[i]
+        cdk[d, k_old] -= 1
+        ckt[t, k_old] -= 1
+        ck[k_old] -= 1
+        p = np.asarray(cond(ckt[t].astype(np.float32),
+                            cdk[d].astype(np.float32),
+                            ck.astype(np.float32), alpha, beta, vbeta))
+        csum = np.cumsum(p)
+        k_new = int(np.argmax(csum > u[i] * csum[-1]))
+        z[i] = k_new
+        cdk[d, k_new] += 1
+        ckt[t, k_new] += 1
+        ck[k_new] += 1
+    return z
+
+
+# ---------------------------------------------------------------------------
+# JAX scan sampler over one word block (the per-round unit of work)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("use_eq3",))
+def sweep_block_scan(cdk: jax.Array, ckt_block: jax.Array, ck: jax.Array,
+                     doc: jax.Array, word_off: jax.Array, z: jax.Array,
+                     mask: jax.Array, u: jax.Array,
+                     alpha: jax.Array, beta: jax.Array, vbeta: jax.Array,
+                     use_eq3: bool = True
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Exact serial CGS over a padded token slice of one word block.
+
+    Args:
+      cdk:        [D_local, K] document-topic counts for this worker's shard.
+      ckt_block:  [Vb, K] rows of the word-topic table for the current block.
+      ck:         [K] topic totals (synced value + local drift, §3.3).
+      doc, word_off, z, mask, u: [T] token slice in inverted-index order;
+        ``word_off`` indexes rows of ``ckt_block``; padded entries have
+        ``mask=False`` and are exact no-ops.
+
+    Returns updated ``(cdk, ckt_block, ck, z)``.
+    """
+    cond = conditional_eq3 if use_eq3 else conditional_eq1
+
+    def body(carry, xs):
+        cdk, ckt, ck = carry
+        d, t, k_old, valid, u_i = xs
+        delta = valid.astype(jnp.int32)
+        # -- decrement (the ¬dn exclusion) --
+        cdk = cdk.at[d, k_old].add(-delta)
+        ckt = ckt.at[t, k_old].add(-delta)
+        ck = ck.at[k_old].add(-delta)
+        # -- conditional + inverse-CDF draw --
+        p = cond(ckt[t].astype(jnp.float32), cdk[d].astype(jnp.float32),
+                 ck.astype(jnp.float32), alpha, beta, vbeta)
+        k_new = sample_from_mass(p, u_i).astype(jnp.int32)
+        k_new = jnp.where(valid, k_new, k_old)
+        # -- increment --
+        cdk = cdk.at[d, k_new].add(delta)
+        ckt = ckt.at[t, k_new].add(delta)
+        ck = ck.at[k_new].add(delta)
+        return (cdk, ckt, ck), k_new
+
+    (cdk, ckt_block, ck), z_new = jax.lax.scan(
+        body, (cdk, ckt_block, ck),
+        (doc, word_off, z, mask, u))
+    return cdk, ckt_block, ck, z_new
+
+
+# ---------------------------------------------------------------------------
+# Batched (word-frozen) sampler — the relaxation behind the Pallas kernel
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def sweep_block_batched(cdk, ckt_block, ck, doc, word_off, z, mask, u,
+                        alpha, beta, vbeta, segment_start):
+    """Word-frozen batched CGS over one block (beyond-paper fast path).
+
+    Tokens sharing a word are sampled against the word's ``C_k^t`` row frozen
+    at segment start (``C_d^k`` exclusion stays exact per token because each
+    token's own assignment is subtracted).  ``C_k^t``/``C_k``/``C_d^k`` deltas
+    are folded in afterwards via scatter-add.  DESIGN.md §2 item 2 discusses
+    why this staleness (bounded by one word's postings) is far weaker than
+    the data-parallel baseline's.
+
+    ``segment_start`` marks the first token of each word segment (unused by
+    the math here — the freeze is per-block — but kept so callers can shrink
+    the freeze window; the Pallas kernel freezes per word tile).
+    """
+    del segment_start
+    t = word_off
+    k = ck.shape[0]
+    delta = mask.astype(jnp.int32)
+    # LEAN form (§Perf-LDA iteration "lean-batched"): the ¬dn self-exclusion
+    # is a rank-1 correction at k == z_old (the Pallas kernel's trick) and
+    # the count deltas are two scatter-adds per token, so no [T, K] one-hot
+    # tensor is ever materialized — the original formulation built five of
+    # them per round and was memory-bound on the LDA roofline.
+    ckt_rows = ckt_block[t].astype(jnp.float32)            # [T, K] raw
+    cdk_rows = cdk[doc].astype(jnp.float32)                # [T, K] raw
+    ck_f = ck.astype(jnp.float32)
+    base = (ckt_rows + beta) / (ck_f + vbeta)[None, :] \
+        * (alpha[None, :] + cdk_rows)
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (z.shape[0], k), 1)
+    is_old = (k_iota == z[:, None]) & mask[:, None]
+    corrected = ((ckt_rows - 1.0 + beta) * (alpha[None, :] + cdk_rows - 1.0)
+                 / (ck_f[None, :] - 1.0 + vbeta))
+    p = jnp.maximum(jnp.where(is_old, corrected, base), 0.0)
+    csum = jnp.cumsum(p, axis=-1)
+    z_new = jnp.argmax(csum > (u * csum[:, -1])[:, None], axis=-1)
+    z_new = jnp.where(mask, z_new.astype(jnp.int32), z)
+    # fold deltas exactly: -1 at (row, z_old), +1 at (row, z_new)
+    cdk = cdk.at[doc, z].add(-delta).at[doc, z_new].add(delta)
+    ckt_block = ckt_block.at[t, z].add(-delta).at[t, z_new].add(delta)
+    ck = ck.at[z].add(-delta).at[z_new].add(delta)
+    return cdk, ckt_block, ck, z_new

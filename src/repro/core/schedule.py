@@ -1,0 +1,105 @@
+"""Rotation scheduler (paper Algorithm 1).
+
+The scheduler partitions the vocabulary into ``M`` disjoint word blocks and
+rotates block ownership among the ``M`` workers: in round ``r`` worker ``m``
+owns block ``(m + r) mod M``.  After ``M`` rounds every (worker, block) pair
+has met exactly once — one *iteration* over the data.
+
+Under SPMD the scheduler is not a process: ``owner_of``/``block_of`` define
+a compile-time permutation that ``model_parallel.py`` lowers to a single
+``jax.lax.ppermute`` (HLO ``collective-permute``) per round.  This module is
+also used verbatim by the host-simulation path (``kvstore.py``), where it
+plays the paper's original role of a coordinating component.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class VocabPartition:
+    """Disjoint word blocks ``{V_1 .. V_M}`` of a padded vocabulary."""
+
+    vocab_size: int          # true V
+    num_blocks: int          # M
+    block_size: int          # Vb = ceil(V / M)
+
+    @property
+    def padded_vocab(self) -> int:
+        return self.block_size * self.num_blocks
+
+    def block_of_word(self, word: np.ndarray) -> np.ndarray:
+        return np.asarray(word) // self.block_size
+
+    def word_offset_in_block(self, word: np.ndarray) -> np.ndarray:
+        return np.asarray(word) % self.block_size
+
+    def block_bounds(self, block: int) -> Tuple[int, int]:
+        lo = block * self.block_size
+        return lo, min(lo + self.block_size, self.vocab_size)
+
+    def block_rows(self, ckt: np.ndarray, block: int) -> np.ndarray:
+        """Slice the rows of a word-major ``[V, K]`` table for one block."""
+        lo = block * self.block_size
+        return ckt[lo:lo + self.block_size]
+
+
+def partition_vocab(vocab_size: int, num_blocks: int) -> VocabPartition:
+    if num_blocks <= 0:
+        raise ValueError(f"num_blocks must be positive, got {num_blocks}")
+    block_size = -(-vocab_size // num_blocks)  # ceil division
+    return VocabPartition(vocab_size, num_blocks, block_size)
+
+
+def block_for(worker: int, rnd: int, num_blocks: int) -> int:
+    """Block owned by ``worker`` in round ``rnd`` (Algorithm 1, rotation)."""
+    return (worker + rnd) % num_blocks
+
+
+def owner_for(block: int, rnd: int, num_blocks: int) -> int:
+    """Worker owning ``block`` in round ``rnd`` (inverse of :func:`block_for`)."""
+    return (block - rnd) % num_blocks
+
+
+def rotation_permutation(num_workers: int) -> List[Tuple[int, int]]:
+    """(src, dst) pairs moving each block to its next-round owner.
+
+    Worker ``m`` owns block ``b = m + r``; next round that block belongs to
+    worker ``b - (r+1) = m - 1``.  Hence blocks travel ``m -> m-1`` around the
+    ring — this list feeds ``jax.lax.ppermute``.
+    """
+    return [(m, (m - 1) % num_workers) for m in range(num_workers)]
+
+
+def schedule_table(num_workers: int) -> np.ndarray:
+    """Full iteration schedule: ``table[r, m]`` = block at worker m in round r."""
+    r = np.arange(num_workers)[:, None]
+    m = np.arange(num_workers)[None, :]
+    return (m + r) % num_workers
+
+
+def serial_order(num_workers: int) -> Sequence[Tuple[int, int, int]]:
+    """The canonical serial execution order equivalent to the MP schedule.
+
+    Yields ``(round, worker, block)`` in the order a single machine would
+    execute the same task pool; used by tests to prove parallel == serial.
+    """
+    out = []
+    for r in range(num_workers):
+        for m in range(num_workers):
+            out.append((r, m, block_for(m, r, num_workers)))
+    return out
+
+
+def validate_schedule(num_workers: int) -> None:
+    """Every round is a permutation; every (worker, block) pair met once."""
+    table = schedule_table(num_workers)
+    for r in range(num_workers):
+        assert sorted(table[r]) == list(range(num_workers)), (
+            f"round {r} blocks collide: {table[r]}")
+    for m in range(num_workers):
+        assert sorted(table[:, m]) == list(range(num_workers)), (
+            f"worker {m} misses blocks: {table[:, m]}")

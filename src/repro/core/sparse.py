@@ -1,0 +1,86 @@
+"""Sparse-LDA bucket sampler (Yao et al. 2009; paper eq. 2).
+
+This is the sampler inside Yahoo!LDA, the paper's baseline.  It splits the
+conditional into three buckets
+
+  A_k = α_k β / (C_k + Vβ)                    (dense, precomputed once)
+  B_k = β C_d^k / (C_k + Vβ)                  (document-sparse, cached per doc)
+  C_k = (α_k + C_d^k) C_k^t / (C_k + Vβ)      (word-sparse)
+
+and samples bucket-first, exploiting that mass concentrates in B and C.  We
+implement it host-side, document-major (its natural order), for three
+purposes: (i) a second independent oracle for correctness tests (it must
+define the same distribution as eq. 1/eq. 3); (ii) the per-token sampler of
+the data-parallel baseline's host path; (iii) to document why it is the
+WRONG decomposition for inverted-index order (the per-document B cache
+thrashes), motivating the paper's eq. 3 — see ``cache_recompute_count``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def bucket_masses(ckt_row, cdk_row, ck, alpha, beta, vbeta):
+    """Return (A_k, B_k, C_k) bucket vectors; their sum is eq. (1)."""
+    denom = ck + vbeta
+    a = alpha * beta / denom
+    b = beta * cdk_row / denom
+    c = (alpha + cdk_row) * ckt_row / denom
+    return a, b, c
+
+
+def sparse_gibbs_sweep_np(cdk, ckt, ck, doc, word, z, u, alpha, beta,
+                          order=None):
+    """Exact serial sweep using the A/B/C bucket draw.
+
+    Consumes one uniform per token, like ``gibbs_sweep_np``; the bucket walk
+    uses the same uniform rescaled, so the draw is still exact inverse-CDF
+    over A+B+C mass (bucket-major ordering of the CDF).
+    """
+    doc = np.asarray(doc); word = np.asarray(word)
+    z = np.array(z, np.int32, copy=True)
+    alpha = np.asarray(alpha, np.float64)
+    vbeta = np.float64(beta * ckt.shape[0])
+    beta = np.float64(beta)
+    if order is None:
+        order = range(doc.shape[0])
+    for i in order:
+        d, t, k_old = doc[i], word[i], z[i]
+        cdk[d, k_old] -= 1; ckt[t, k_old] -= 1; ck[k_old] -= 1
+        a, b, c = bucket_masses(ckt[t].astype(np.float64),
+                                cdk[d].astype(np.float64),
+                                ck.astype(np.float64), alpha, beta, vbeta)
+        sa, sb, sc = a.sum(), b.sum(), c.sum()
+        x = u[i] * (sa + sb + sc)
+        if x < sc:                      # word-sparse bucket first (most mass)
+            nz = np.nonzero(ckt[t])[0]
+            cs = np.cumsum(c[nz])
+            k_new = int(nz[np.searchsorted(cs, x, side="right")])
+        elif x < sc + sb:               # document-sparse bucket
+            nz = np.nonzero(cdk[d])[0]
+            cs = np.cumsum(b[nz])
+            k_new = int(nz[np.searchsorted(cs, x - sc, side="right")])
+        else:                           # dense smoothing bucket
+            cs = np.cumsum(a)
+            k_new = int(min(np.searchsorted(cs, x - sc - sb, side="right"),
+                            len(a) - 1))
+        z[i] = k_new
+        cdk[d, k_new] += 1; ckt[t, k_new] += 1; ck[k_new] += 1
+    return z
+
+
+def cache_recompute_count(doc, word, order_doc_major: bool) -> int:
+    """How many times the Sparse-LDA per-document ``Σ_k B_k`` cache must be
+    rebuilt under a visit order (paper §4.2's motivating observation).
+
+    Document-major order rebuilds once per document; word-major (inverted
+    index) order rebuilds on nearly every token, which is why the paper
+    replaces eq. (2) with the word-major eq. (3).
+    """
+    doc = np.asarray(doc); word = np.asarray(word)
+    if order_doc_major:
+        idx = np.lexsort((word, doc))
+    else:
+        idx = np.lexsort((doc, word))
+    d_seq = doc[idx]
+    return int(1 + (d_seq[1:] != d_seq[:-1]).sum())

@@ -1,0 +1,6 @@
+from repro.data.corpus import Corpus, load_corpus, save_corpus
+from repro.data.synthetic import synthetic_corpus
+from repro.data.sharding import shard_documents, worker_shard
+
+__all__ = ["Corpus", "load_corpus", "save_corpus", "synthetic_corpus",
+           "shard_documents", "worker_shard"]

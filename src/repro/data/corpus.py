@@ -1,0 +1,96 @@
+"""Corpus container and I/O.
+
+A corpus is a flat token stream: parallel int32 arrays ``doc``/``word``.
+This is the persistent, conditionally-independent "data" half of the
+data/model dichotomy the paper draws; samplers carry the transient ``z``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Corpus:
+    doc: np.ndarray          # [N] int32 document id per token
+    word: np.ndarray         # [N] int32 word id per token
+    num_docs: int
+    vocab_size: int
+    vocab: List[str] | None = None   # optional id -> string
+
+    @property
+    def num_tokens(self) -> int:
+        return int(self.doc.shape[0])
+
+    def doc_lengths(self) -> np.ndarray:
+        return np.bincount(self.doc, minlength=self.num_docs)
+
+    def word_freqs(self) -> np.ndarray:
+        return np.bincount(self.word, minlength=self.vocab_size)
+
+    def validate(self) -> None:
+        assert self.doc.shape == self.word.shape
+        assert self.doc.min(initial=0) >= 0 and self.word.min(initial=0) >= 0
+        assert self.doc.max(initial=-1) < self.num_docs
+        assert self.word.max(initial=-1) < self.vocab_size
+
+
+def from_documents(docs_as_word_lists: Sequence[Sequence[int]],
+                   vocab_size: int, vocab: List[str] | None = None) -> Corpus:
+    doc_ids, word_ids = [], []
+    for d, ws in enumerate(docs_as_word_lists):
+        doc_ids.extend([d] * len(ws))
+        word_ids.extend(ws)
+    return Corpus(np.asarray(doc_ids, np.int32), np.asarray(word_ids, np.int32),
+                  len(docs_as_word_lists), vocab_size, vocab)
+
+
+def from_texts(texts: Sequence[str], min_count: int = 1) -> Corpus:
+    """Whitespace tokenizer + vocabulary build — enough for the examples."""
+    counts: Dict[str, int] = {}
+    tokenized = []
+    for t in texts:
+        toks = t.lower().split()
+        tokenized.append(toks)
+        for w in toks:
+            counts[w] = counts.get(w, 0) + 1
+    vocab = sorted(w for w, c in counts.items() if c >= min_count)
+    index = {w: i for i, w in enumerate(vocab)}
+    docs = [[index[w] for w in toks if w in index] for toks in tokenized]
+    return from_documents(docs, len(vocab), vocab)
+
+
+def bigram_corpus(corpus: Corpus) -> Corpus:
+    """Augment with bigrams the way the paper builds Wiki-bigram (§5):
+    consecutive token pairs become phrase ids in an enlarged vocabulary."""
+    doc, word = corpus.doc, corpus.word
+    same_doc = doc[1:] == doc[:-1]
+    pairs = word[:-1][same_doc].astype(np.int64) * corpus.vocab_size \
+        + word[1:][same_doc].astype(np.int64)
+    uniq, inv = np.unique(pairs, return_inverse=True)
+    return Corpus(doc[:-1][same_doc].astype(np.int32), inv.astype(np.int32),
+                  corpus.num_docs, int(uniq.shape[0]))
+
+
+def save_corpus(corpus: Corpus, path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez_compressed(path, doc=corpus.doc, word=corpus.word,
+                        num_docs=corpus.num_docs, vocab_size=corpus.vocab_size)
+    if corpus.vocab is not None:
+        with open(path + ".vocab.json", "w") as f:
+            json.dump(corpus.vocab, f)
+
+
+def load_corpus(path: str) -> Corpus:
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    vocab = None
+    vpath = path + ".vocab.json"
+    if os.path.exists(vpath):
+        with open(vpath) as f:
+            vocab = json.load(f)
+    return Corpus(data["doc"], data["word"], int(data["num_docs"]),
+                  int(data["vocab_size"]), vocab)

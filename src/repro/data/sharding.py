@@ -1,0 +1,49 @@
+"""Document sharding across workers (the data-parallel half).
+
+Documents are assigned round-robin by id (load-balanced in expectation);
+each worker re-indexes its documents locally so ``C_d^k`` shards have the
+same row count everywhere (required for SPMD static shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.data.corpus import Corpus
+
+
+@dataclasses.dataclass
+class WorkerShard:
+    worker: int
+    doc_local: np.ndarray    # [n_local] int32 local doc index per token
+    word: np.ndarray         # [n_local] int32 global word id per token
+    token_id: np.ndarray     # [n_local] int32 position in the global stream
+    doc_global: np.ndarray   # [D_local_padded] int32 global doc id per row (-1 pad)
+    num_local_docs: int      # padded row count (same on all workers)
+
+
+def shard_documents(num_docs: int, num_workers: int) -> List[np.ndarray]:
+    """Round-robin document assignment: worker m gets docs {m, m+M, ...}."""
+    return [np.arange(m, num_docs, num_workers, dtype=np.int32)
+            for m in range(num_workers)]
+
+
+def worker_shard(corpus: Corpus, worker: int, num_workers: int) -> WorkerShard:
+    assignment = shard_documents(corpus.num_docs, num_workers)
+    mine = assignment[worker]
+    rows = -(-corpus.num_docs // num_workers)        # padded D_local
+    local_of_global = np.full(corpus.num_docs, -1, np.int32)
+    local_of_global[mine] = np.arange(mine.shape[0], dtype=np.int32)
+    sel = np.nonzero(local_of_global[corpus.doc] >= 0)[0].astype(np.int32)
+    doc_global = np.full(rows, -1, np.int32)
+    doc_global[:mine.shape[0]] = mine
+    return WorkerShard(
+        worker=worker,
+        doc_local=local_of_global[corpus.doc[sel]],
+        word=corpus.word[sel],
+        token_id=sel,
+        doc_global=doc_global,
+        num_local_docs=rows,
+    )

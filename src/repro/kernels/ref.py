@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the Gibbs-conditional kernel.
+
+Identical semantics to ``gibbs_conditional.py`` with no tiling: used by the
+kernel sweep tests (``assert_allclose`` on the mass, exact equality on the
+drawn topics) and as the fallback path on backends without Pallas.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def gibbs_conditional_ref(ckt_group, cdk_rows, z_old, u, mask, ck, alpha,
+                          beta, vbeta):
+    """See ``gibbs_conditional_call`` — same inputs, same [G, Tg] output."""
+    g, tg, k = cdk_rows.shape
+    ckt = ckt_group.astype(jnp.float32)
+    cdk = cdk_rows.astype(jnp.float32)
+    ck = ck.astype(jnp.float32)
+    alpha = alpha.astype(jnp.float32)
+    coeff = (ckt + beta) / (ck + vbeta)[None, :]
+    base = coeff[:, None, :] * (alpha[None, None, :] + cdk)
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (g, tg, k), 2)
+    is_old = k_iota == z_old[:, :, None]
+    corrected = ((ckt[:, None, :] - 1.0 + beta)
+                 * (alpha[None, None, :] + cdk - 1.0)
+                 / (ck[None, None, :] - 1.0 + vbeta))
+    p = jnp.maximum(jnp.where(is_old, corrected, base), 0.0)
+    cum = jnp.cumsum(p, axis=-1)
+    total = cum[:, :, -1:]
+    z_new = jnp.argmax(cum > u[:, :, None] * total, axis=-1).astype(jnp.int32)
+    return jnp.where(mask != 0, z_new, z_old.astype(jnp.int32))
+
+
+@jax.jit
+def conditional_mass_ref(ckt_group, cdk_rows, z_old, ck, alpha, beta, vbeta):
+    """The unnormalized mass [G, Tg, K] — for allclose checks of the math."""
+    g, tg, k = cdk_rows.shape
+    ckt = ckt_group.astype(jnp.float32)
+    cdk = cdk_rows.astype(jnp.float32)
+    ck = ck.astype(jnp.float32)
+    coeff = (ckt + beta) / (ck + vbeta)[None, :]
+    base = coeff[:, None, :] * (alpha[None, None, :] + cdk)
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (g, tg, k), 2)
+    is_old = k_iota == z_old[:, :, None]
+    corrected = ((ckt[:, None, :] - 1.0 + beta)
+                 * (alpha[None, None, :] + cdk - 1.0)
+                 / (ck[None, None, :] - 1.0 + vbeta))
+    return jnp.maximum(jnp.where(is_old, corrected, base), 0.0)

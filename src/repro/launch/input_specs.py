@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct stand-ins for every (architecture × input shape) pair.
+
+``input_specs`` returns the abstract arguments the dry-run lowers against —
+weak-type-correct, shardable, never allocated.  Modality stubs enter here:
+whisper gets [B, 1500, d] frame embeddings, llava gets [B, 2880, d] patch
+embeddings (the assignment's sanctioned frontend carve-out).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models.transformer import Model
+
+
+@dataclasses.dataclass
+class SpecBundle:
+    kind: str                 # train | prefill | decode
+    args: Tuple[Any, ...]     # abstract positional args for the step fn
+    text_len: int             # text tokens actually modeled
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """The {tokens, labels, ...} batch pytree for train/prefill."""
+    b, t = shape.global_batch, shape.seq_len
+    text_t = t
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        # patch embeds occupy the first positions of the LM context
+        text_t = t - cfg.num_patch_embeds
+        batch["patch_embeds"] = _sds((b, cfg.num_patch_embeds, cfg.d_model),
+                                     jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    batch["tokens"] = _sds((b, text_t), jnp.int32)
+    batch["labels"] = _sds((b, text_t), jnp.int32)
+    return batch
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape, model: Model
+                 ) -> Tuple[Any, Any, Any, Any]:
+    """(caches, tokens, pos, enc_out?) abstract values for decode_step."""
+    b = shape.global_batch
+    caches = jax.eval_shape(
+        lambda: model.init_cache(b, shape.seq_len))
+    tokens = _sds((b, 1), jnp.int32)
+    pos = _sds((b,), jnp.int32)
+    enc_out = None
+    if cfg.family == "audio":
+        enc_out = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return caches, tokens, pos, enc_out
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, model: Model
+                ) -> SpecBundle:
+    if shape.kind in ("train", "prefill"):
+        batch = batch_specs(cfg, shape)
+        return SpecBundle(shape.kind, (batch,),
+                          batch["tokens"].shape[1])
+    caches, tokens, pos, enc_out = decode_specs(cfg, shape, model)
+    args = (caches, tokens, pos) + ((enc_out,) if enc_out is not None else ())
+    return SpecBundle("decode", args, 1)

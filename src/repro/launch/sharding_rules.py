@@ -1,0 +1,153 @@
+"""Sharding rules: parameter/batch/cache PartitionSpecs per architecture.
+
+Strategy (DESIGN.md §6):
+  * embeddings & unembeddings: vocab over ``model`` — the direct analogue
+    of the paper's word-block partitioning (the V×d table is the "word
+    model" and no device holds all of it);
+  * attention/MLP: tensor parallel over ``model`` (column- then
+    row-parallel pairs);
+  * MoE: experts over ``model`` (disjoint expert blocks = disjoint model
+    blocks); when the expert count does not divide the axis the expert
+    FFN width is sharded instead;
+  * FSDP: every weight additionally sharded over the data axes
+    (('pod','data')) — optimizer state inherits it, giving the ZeRO
+    property.  On inference shapes this becomes 2-D weight sharding with
+    per-layer gathers.
+
+Every proposed spec is *sanitized*: an axis that does not evenly divide
+its dimension is dropped (jit in_shardings require divisibility).  That
+keeps exact public configs (25 heads, 60 experts, odd vocabs) lowering
+everywhere; the roofline then shows what the irregular sizes cost.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import tree_map_with_path
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch.mesh import data_axes
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def sanitize(mesh: Mesh, spec: P, shape) -> P:
+    """Drop spec axes that do not evenly divide the dimension."""
+    out = []
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            out.append(None)
+        elif dim % _axes_size(mesh, axes) == 0 and dim > 0:
+            out.append(axes)
+        else:
+            # try single-axis fallbacks before giving up
+            cand = axes if isinstance(axes, tuple) else (axes,)
+            kept = None
+            for a in cand:
+                if dim % mesh.shape[a] == 0:
+                    kept = a
+                    break
+            out.append(kept)
+    return P(*out)
+
+
+def _ns(mesh: Mesh, spec: P, shape) -> NamedSharding:
+    return NamedSharding(mesh, sanitize(mesh, spec, shape))
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, abstract_params: Any,
+                    fsdp: bool = True) -> Any:
+    """NamedSharding pytree matching ``abstract_params``."""
+    dp = data_axes(mesh)
+    f: Optional[Any] = dp if (fsdp and dp) else None
+
+    def rule(path, x):
+        name = _path_str(path)
+        nd = x.ndim
+        if "embed" == name:
+            return _ns(mesh, P("model", f), x.shape)
+        if "unembed" in name:
+            return _ns(mesh, P(f, "model"), x.shape)
+        if nd == 4:                       # MoE experts [L, E, in, out]
+            if "w_down" in name:
+                return _ns(mesh, P(None, "model", None, f), x.shape)
+            return _ns(mesh, P(None, "model", f, None), x.shape)
+        if nd == 3:                       # stacked [L, in, out]
+            if ("wo" in name or "w_down" in name or "w_out" in name
+                    or "out_proj" in name):
+                return _ns(mesh, P(None, "model", f), x.shape)
+            if "router" in name:
+                return _ns(mesh, P(None, f, None), x.shape)
+            if "d_skip" in name or "out_scale" in name:   # [L, H, hd]
+                return _ns(mesh, P(None, "model", None), x.shape)
+            return _ns(mesh, P(None, f, "model"), x.shape)
+        if nd == 2:                       # stacked vectors [L, d]
+            return _ns(mesh, P(None, f), x.shape)
+        return _ns(mesh, P(), x.shape)
+
+    return tree_map_with_path(rule, abstract_params)
+
+
+def batch_shardings(cfg: ArchConfig, mesh: Mesh, abstract_batch: Any) -> Any:
+    dp = data_axes(mesh)
+
+    def rule(path, x):
+        spec = [dp] + [None] * (x.ndim - 1)
+        return _ns(mesh, P(*spec), x.shape)
+
+    return tree_map_with_path(rule, abstract_batch)
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, abstract_caches) -> Any:
+    """Cache shardings.  KV tensors ([L,] B, S, kvH, hd): batch over the
+    data axes; kv heads over ``model`` when divisible, else the sequence
+    dimension takes ``model`` (length-sharded cache — the 500k shape with
+    batch 1 relies on this).  Handles both the stacked pytree (uniform
+    layers, leading L dim) and the per-layer list form."""
+    dp = data_axes(mesh)
+
+    def rule(path, x):
+        name = _path_str(path)
+        stacked = not isinstance(abstract_caches, list)
+        lead = (None,) if stacked else ()
+        nd = x.ndim - len(lead)
+        if nd == 4 and name.split("/")[-1] in ("k", "v"):
+            b, s, kvh, hd = x.shape[len(lead):]
+            batch_ok = b % _axes_size(mesh, dp) == 0 and b > 1
+            spec_b = dp if batch_ok else None
+            if kvh % mesh.shape["model"] == 0:
+                return _ns(mesh, P(*lead, spec_b, None, "model", None),
+                           x.shape)
+            if not batch_ok:
+                # batch unshardable (long_500k): spread S over everything
+                return _ns(mesh, P(*lead, None, dp + ("model",), None, None),
+                           x.shape)
+            return _ns(mesh, P(*lead, spec_b, "model", None, None), x.shape)
+        # recurrent states: shard batch; next dim over model when divisible
+        spec = list(lead) + [dp] + [None] * (nd - 1)
+        if nd >= 2:
+            spec[len(lead) + 1] = "model"
+        return _ns(mesh, P(*spec), x.shape)
+
+    if isinstance(abstract_caches, list):
+        return [tree_map_with_path(rule, c) for c in abstract_caches]
+    return tree_map_with_path(rule, abstract_caches)
+
+
+def replicated(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, P()), tree)

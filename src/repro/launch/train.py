@@ -1,0 +1,86 @@
+"""End-to-end LM training driver (runs for real on this CPU container with
+reduced configs; the same code path drives the production mesh).
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+        --steps 200 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.data_iter import modality_wrapper, synthetic_lm_stream
+from repro.train.optimizer import AdamW
+from repro.train.train_step import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="olmo-1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced variant (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(args.seed)
+    opt = AdamW(learning_rate=args.lr, warmup_steps=20,
+                total_steps=args.steps)
+    opt_state = opt.init(params)
+    if args.resume and args.ckpt and os.path.exists(args.ckpt + ".npz"):
+        params = load_checkpoint(args.ckpt, params)
+        print(f"resumed from {args.ckpt}")
+    step_fn = jax.jit(make_train_step(model, opt, accum_steps=args.accum))
+
+    stream = modality_wrapper(
+        synthetic_lm_stream(cfg.vocab_size, args.batch, args.seq,
+                            seed=args.seed), cfg, seed=args.seed)
+    history = []
+    t0 = time.time()
+    tokens_done = 0
+    for step, batch in zip(range(1, args.steps + 1), stream):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        tokens_done += args.batch * args.seq
+        if step % args.log_every == 0 or step == 1:
+            loss = float(metrics["loss"])
+            tps = tokens_done / (time.time() - t0)
+            print(f"step {step:5d}  loss {loss:7.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):7.3f}  "
+                  f"lr {float(metrics['lr']):.2e}  tok/s {tps:,.0f}",
+                  flush=True)
+            history.append({"step": step, "loss": loss, "tokens_per_s": tps})
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, step=args.steps)
+        print(f"saved checkpoint to {args.ckpt}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(history, f, indent=1)
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

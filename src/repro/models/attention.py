@@ -1,0 +1,244 @@
+"""Grouped-query attention with RoPE, sliding windows, cross-attention and
+KV-cache decode — the attention substrate for every assigned architecture.
+
+The sliding-window size is a *traced* per-layer scalar so heterogeneous
+window patterns (gemma3's 5 local : 1 global) ride through a single
+``lax.scan`` over stacked layer parameters.  ``window == 0`` means global
+(full causal) attention.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, apply_rope, cast, dense_init
+
+NEG_INF = -1e30
+
+
+def attention_params(keys, d_model: int, num_heads: int, num_kv_heads: int,
+                     head_dim: int, qkv_bias: bool = False) -> Params:
+    p = {
+        "wq": dense_init(keys(), (d_model, num_heads * head_dim)),
+        "wk": dense_init(keys(), (d_model, num_kv_heads * head_dim)),
+        "wv": dense_init(keys(), (d_model, num_kv_heads * head_dim)),
+        "wo": dense_init(keys(), (num_heads * head_dim, d_model)),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), jnp.float32)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), jnp.float32)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), jnp.float32)
+    return p
+
+
+def _project(x, w, b=None):
+    y = x @ cast(w)
+    if b is not None:
+        y = y + cast(b)
+    return y
+
+
+def _split_heads(x, num_heads, head_dim):
+    b, t, _ = x.shape
+    return x.reshape(b, t, num_heads, head_dim)
+
+
+def _repeat_kv(k, num_heads):
+    """[B, S, kvH, hd] -> [B, S, H, hd] by group broadcast."""
+    b, s, kvh, hd = k.shape
+    if kvh == num_heads:
+        return k
+    rep = num_heads // kvh
+    return jnp.broadcast_to(k[:, :, :, None, :],
+                            (b, s, kvh, rep, hd)).reshape(b, s, num_heads, hd)
+
+
+def _causal_window_mask(q_pos, k_pos, window):
+    """[.., Tq, Tk] boolean; window==0 -> plain causal."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    causal = diff >= 0
+    in_window = jnp.where(window > 0, diff < window, True)
+    return causal & in_window
+
+
+def mha(q, k, v, mask) -> jax.Array:
+    """q: [B,Tq,H,hd], k/v: [B,Tk,H,hd], mask: broadcastable [B,1,Tq,Tk].
+
+    Naive attention: materializes the full [B,H,Tq,Tk] score tensor.  Kept
+    as the §Perf baseline and for short sequences/decode.
+    """
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_mha(q, k, v, q_pos, k_pos, window,
+                q_chunk: int = 512, k_chunk: int = 1024) -> jax.Array:
+    """Online-softmax (flash-style) attention in pure JAX.
+
+    Double-chunked: an outer scan over query blocks, an inner scan over KV
+    blocks carrying (running max, normalizer, accumulator).  Peak buffer is
+    one [B, H, q_chunk, k_chunk] score block instead of [B, H, T, T] —
+    the XLA-level counterpart of a flash kernel, TPU-idiomatic via fused
+    matmul+reduce blocks (§Perf iteration 1 documents the before/after).
+
+    Causal + sliding-window masking via q/k position blocks; ``window`` is
+    a traced scalar (0 = global).
+    """
+    b, tq, h, hd = q.shape
+    tk = k.shape[1]
+    q_chunk = min(q_chunk, tq)
+    k_chunk = min(k_chunk, tk)
+    assert tq % q_chunk == 0 and tk % k_chunk == 0, (tq, tk)
+    nq, nk = tq // q_chunk, tk // k_chunk
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qb = jnp.moveaxis(q.reshape(b, nq, q_chunk, h, hd), 1, 0)
+    qp = jnp.moveaxis(q_pos.reshape(b, nq, q_chunk), 1, 0)
+    kb = jnp.moveaxis(k.reshape(b, nk, k_chunk, h, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nk, k_chunk, h, hd), 1, 0)
+    kp = jnp.moveaxis(k_pos.reshape(b, nk, k_chunk), 1, 0)
+
+    def q_block(_, q_xs):
+        q_i, qp_i = q_xs
+
+        def kv_block(carry, kv_xs):
+            m, l, acc = carry
+            k_j, v_j, kp_j = kv_xs
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_j).astype(jnp.float32)
+            s = s * scale
+            msk = _causal_window_mask(qp_i, kp_j, window)[:, None]
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(v_j.dtype), v_j)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), (kb, vb, kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, jnp.moveaxis(out, 1, 2)         # [B, q_chunk, H, hd]
+
+    _, blocks = jax.lax.scan(q_block, None, (qb, qp))
+    return jnp.moveaxis(blocks, 0, 1).reshape(b, tq, h, hd).astype(q.dtype)
+
+
+# sequences at or above this length use chunked attention in the
+# full-sequence path; overridable for §Perf baseline measurements
+CHUNKED_ATTN_MIN_LEN = 2048
+
+
+def self_attention(p: Params, x: jax.Array, positions: jax.Array,
+                   num_heads: int, num_kv_heads: int, head_dim: int,
+                   rope_theta: float, window,
+                   causal: bool = True) -> jax.Array:
+    """Full-sequence self-attention (train / prefill path)."""
+    b, t, _ = x.shape
+    q = _split_heads(_project(x, p["wq"], p.get("bq")), num_heads, head_dim)
+    k = _split_heads(_project(x, p["wk"], p.get("bk")), num_kv_heads, head_dim)
+    v = _split_heads(_project(x, p["wv"], p.get("bv")), num_kv_heads, head_dim)
+    if rope_theta > 0:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    k = _repeat_kv(k, num_heads)
+    v = _repeat_kv(v, num_heads)
+    force_naive = os.environ.get("REPRO_ATTN_IMPL") == "naive"
+    if causal and t >= CHUNKED_ATTN_MIN_LEN and not force_naive:
+        out = chunked_mha(q, k, v, positions, positions, window)
+    else:
+        if causal:
+            mask = _causal_window_mask(positions, positions, window)[:, None]
+        else:
+            mask = jnp.ones((b, 1, t, t), bool)
+        out = mha(q, k, v, mask)
+    return out.reshape(b, t, num_heads * head_dim) @ cast(p["wo"])
+
+
+def cross_attention(p: Params, x: jax.Array, enc_kv: Tuple[jax.Array, jax.Array],
+                    num_heads: int, head_dim: int) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder K/V (whisper)."""
+    b, t, _ = x.shape
+    q = _split_heads(_project(x, p["wq"], p.get("bq")), num_heads, head_dim)
+    k, v = enc_kv
+    mask = jnp.ones((b, 1, t, k.shape[1]), bool)
+    out = mha(q, k, v, mask)
+    return out.reshape(b, t, num_heads * head_dim) @ cast(p["wo"])
+
+
+def encode_cross_kv(p: Params, enc_out: jax.Array, num_kv_heads: int,
+                    head_dim: int) -> Tuple[jax.Array, jax.Array]:
+    k = _split_heads(_project(enc_out, p["wk"], p.get("bk")),
+                     num_kv_heads, head_dim)
+    v = _split_heads(_project(enc_out, p["wv"], p.get("bv")),
+                     num_kv_heads, head_dim)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, max_len: int, num_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.zeros((batch, max_len, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, num_kv_heads, head_dim), dtype),
+    }
+
+
+def decode_self_attention(p: Params, cache: Dict[str, jax.Array],
+                          x: jax.Array, pos: jax.Array,
+                          num_heads: int, num_kv_heads: int, head_dim: int,
+                          rope_theta: float, window
+                          ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    # Repeated-KV cache mode (§Perf HC2): when the cache was allocated with
+    # num_heads kv slots, K/V are expanded to full heads BEFORE the cache
+    # write, so the cache shards over the `model` axis on the head dim and
+    # every device updates only its resident slice — no resharding, no
+    # all-gather per step.  Trades kv-cache bytes for collective-free decode.
+    """One-token decode: update ring cache at ``pos`` and attend over it.
+
+    x: [B, 1, d]; pos: [B] current absolute position.  For windowed layers
+    (``window > 0``) the cache length is the window and indexing is modular
+    (ring buffer) — the 500k-context configs rely on this to keep local
+    layers O(window) instead of O(S).
+    """
+    b = x.shape[0]
+    s = cache["k"].shape[1]
+    q = _split_heads(_project(x, p["wq"], p.get("bq")), num_heads, head_dim)
+    k = _split_heads(_project(x, p["wk"], p.get("bk")), num_kv_heads, head_dim)
+    v = _split_heads(_project(x, p["wv"], p.get("bv")), num_kv_heads, head_dim)
+    if rope_theta > 0:
+        q = apply_rope(q, pos[:, None], rope_theta)
+        k = apply_rope(k, pos[:, None], rope_theta)
+    if cache["k"].shape[2] != num_kv_heads:
+        k = _repeat_kv(k, cache["k"].shape[2])
+        v = _repeat_kv(v, cache["k"].shape[2])
+    slot = jnp.where(window > 0, pos % s, jnp.minimum(pos, s - 1))
+    bidx = jnp.arange(b)
+    ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    # positions stored at each cache slot (ring for windowed layers)
+    slots = jnp.arange(s)
+    if_window = pos[:, None] - ((slot[:, None] - slots[None, :]) % s)
+    if_global = jnp.broadcast_to(slots[None, :], (b, s))
+    k_pos = jnp.where(window > 0, if_window, if_global)
+    valid = (k_pos >= 0) & (k_pos <= pos[:, None])
+    in_window = jnp.where(window > 0,
+                          pos[:, None] - k_pos < window, True)
+    mask = (valid & in_window)[:, None, None, :]            # [B,1,1,S]
+    kk = _repeat_kv(ck.astype(q.dtype), num_heads)
+    vv = _repeat_kv(cv.astype(q.dtype), num_heads)
+    out = mha(q, kk, vv, mask)
+    out = out.reshape(b, 1, num_heads * head_dim) @ cast(p["wo"])
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,208 @@
+"""Shared building blocks for the architecture zoo: norms, activations,
+RoPE, and initialization helpers.
+
+All models are pure functions over nested-dict parameter pytrees.  Params
+are stored fp32 and cast to the compute dtype (bf16 by default) at use —
+standard mixed precision, matching the roofline's bf16 peak-FLOP basis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x: jax.Array) -> jax.Array:
+    return x.astype(COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array | None, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array | None,
+               bias: jax.Array | None, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def apply_norm(x: jax.Array, p: Params | None, kind: str) -> jax.Array:
+    """kind: 'rms' | 'layernorm' | 'nonparametric' (OLMo §non-param LN)."""
+    if kind == "rms":
+        return rms_norm(x, p["scale"] if p else None)
+    if kind == "layernorm":
+        return layer_norm(x, p["scale"] if p else None,
+                          p.get("bias") if p else None)
+    if kind == "nonparametric":
+        return layer_norm(x, None, None)
+    raise ValueError(kind)
+
+
+def norm_params(d: int, kind: str) -> Params:
+    if kind == "rms":
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    if kind == "nonparametric":
+        return {}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, T, H, hd]; positions: [B, T] int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                     # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, T, hd/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0) -> jax.Array:
+    fan_in = int(np.prod([shape[i] for i in range(len(shape))
+                          if i == in_axis]))
+    std = 1.0 / max(np.sqrt(fan_in), 1.0)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std)
+
+
+def embed_init(key, shape) -> jax.Array:
+    return jax.random.normal(key, shape, jnp.float32) * 0.02
+
+
+class KeyGen:
+    """Deterministic split stream for parameter init."""
+
+    def __init__(self, seed: int):
+        self._key = jax.random.PRNGKey(seed)
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def count_params(params: Params) -> int:
+    return sum(int(np.prod(x.shape))
+               for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (set by the launcher, no-op otherwise)
+# ---------------------------------------------------------------------------
+# GSPMD propagates sharding from weights into activations; with a
+# vocab/d-sharded embedding table the gather output inherits the *weight*
+# sharding and the batch axis silently de-shards downstream (observed:
+# 86 GiB/device on olmo-1b train_4k).  The launcher pins the batch axes of
+# activations explicitly; models call ``shard_activations`` at block
+# boundaries.  See EXPERIMENTS.md §Perf iteration "activation-sharding".
+
+_ACT_DP = None          # tuple of mesh axis names for the batch dim
+_MODEL_AXIS = None      # mesh axis name for tensor-parallel dims
+
+
+def set_activation_sharding(dp_axes, model_axis="model") -> None:
+    global _ACT_DP, _MODEL_AXIS
+    _ACT_DP = tuple(dp_axes) if dp_axes else None
+    _MODEL_AXIS = model_axis
+
+
+def clear_activation_sharding() -> None:
+    set_activation_sharding(None)
+
+
+def shard_activations(x: jax.Array) -> jax.Array:
+    """Constrain [B, ...] activations: batch over the data axes."""
+    if _ACT_DP is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(_ACT_DP, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def shard_logits(x: jax.Array) -> jax.Array:
+    """Constrain [B, T, V] logits: batch over data, vocab over model."""
+    if _ACT_DP is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(_ACT_DP, *([None] * (x.ndim - 2)), _MODEL_AXIS)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def shard_experts(x: jax.Array) -> jax.Array:
+    """Constrain [E, C, d] expert-dispatched tokens: experts over model."""
+    if _ACT_DP is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(_MODEL_AXIS, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Scan unrolling (roofline accounting mode)
+# ---------------------------------------------------------------------------
+# XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+# count.  The dry-run's cost-extrapolation variants therefore lower with
+# layer scans UNROLLED (L ∈ {1, 2}), making the L2−L1 delta the exact
+# per-layer cost including its collectives.  Production lowering keeps
+# rolled scans (compile time, memory analysis unaffected).
+
+_SCAN_UNROLL = False
+
+
+def set_scan_unroll(on: bool) -> None:
+    global _SCAN_UNROLL
+    _SCAN_UNROLL = bool(on)
+
+
+def scan_unroll() -> bool:
+    return _SCAN_UNROLL

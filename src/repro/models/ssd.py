@@ -1,0 +1,286 @@
+"""State-space / linear-recurrent sequence mixers.
+
+Two primitives cover the assigned SSM-family architectures:
+
+* ``ssd_chunked`` — chunked scalar-decay linear attention (the SSD form of
+  Mamba-2 / the mLSTM matrix memory).  Exact chunkwise evaluation: within a
+  chunk the decay-weighted attention is a dense matmul (MXU-friendly);
+  across chunks a ``lax.scan`` carries the [dk, dv] state.  This is the TPU
+  adaptation called out in DESIGN.md: per-channel diagonal recurrences are
+  restated as scalar-per-head decays so the inner loop is matmuls over
+  128-aligned tiles instead of elementwise gather/scatter chains.
+
+* ``slstm_scan`` — the sLSTM scalar recurrence (xLSTM), inherently
+  sequential (nonlinear state feedback), evaluated with ``lax.scan`` over
+  time; the carry is O(d) so backward-pass storage is T × d, not T × d².
+
+Both have single-step forms for decode with O(1) state — which is what
+makes the ssm/hybrid architectures eligible for the 500k-token decode
+shape.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import os
+
+from repro.models.common import Params, cast, dense_init
+
+# SSD chunk width: VMEM/HBM trade-off knob for the §Perf iterations
+DEFAULT_CHUNK = int(os.environ.get("REPRO_SSD_CHUNK", "128"))
+
+
+# ---------------------------------------------------------------------------
+# SSD / gated linear attention, chunked
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                log_decay: jax.Array,
+                chunk: int | None = None) -> jax.Array:
+    """Exact chunked evaluation of  h_t = a_t h_{t-1} + k_t v_t^T,
+    y_t = q_t h_t  with per-step scalar decay ``a_t = exp(log_decay_t)``.
+
+    q, k: [B, T, H, dk]; v: [B, T, H, dv]; log_decay: [B, T, H] (≤ 0).
+    Returns y: [B, T, H, dv].  T must be a multiple of ``chunk``.
+    """
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk or DEFAULT_CHUNK, t)
+    assert t % chunk == 0, (t, chunk)
+    n = t // chunk
+    # ONE scan over chunks does both the intra-chunk attention and the
+    # cross-chunk state carry, so at most one [B, c, c, H] block lives at a
+    # time (materializing all N chunks at once cost ~800 GiB/device on
+    # hymba train_4k — §Perf iteration "ssd-single-scan").
+    qc = jnp.moveaxis(q.reshape(b, n, chunk, h, dk), 1, 0)
+    kc = jnp.moveaxis(k.reshape(b, n, chunk, h, dk), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n, chunk, h, dv), 1, 0)
+    gc = jnp.moveaxis(log_decay.reshape(b, n, chunk, h), 1, 0
+                      ).astype(jnp.float32)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def scan_body(state, xs):
+        q_i, k_i, v_i, g_i = xs                   # [B, c, H, ·]
+        gcum = jnp.cumsum(g_i, axis=1)            # [B, c, H]
+        gtot = gcum[:, -1]                        # [B, H]
+        # intra-chunk decay attention
+        rel = gcum[:, :, None, :] - gcum[:, None, :, :]       # [B,c,c,H]
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)
+        scores = jnp.einsum("bchd,bshd->bcsh", q_i, k_i).astype(jnp.float32)
+        y_i = jnp.einsum("bcsh,bshv->bchv", scores * decay,
+                         v_i.astype(jnp.float32))
+        # inter-chunk: contribution of the carried state
+        y_i = y_i + jnp.einsum("bchd,bch,bhdv->bchv",
+                               q_i.astype(jnp.float32), jnp.exp(gcum), state)
+        # state update: decay old state, absorb this chunk
+        carry_w = jnp.exp(gtot[:, None, :] - gcum)            # [B,c,H]
+        add = jnp.einsum("bshd,bsh,bshv->bhdv", k_i.astype(jnp.float32),
+                         carry_w, v_i.astype(jnp.float32))
+        state = jnp.exp(gtot)[:, :, None, None] * state + add
+        return state, y_i.astype(v.dtype)
+
+    state0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    _, ys = jax.lax.scan(scan_body, state0, (qc, kc, vc, gc))
+    y = jnp.moveaxis(ys, 0, 1)                    # [B, N, c, H, dv]
+    return y.reshape(b, t, h, dv)
+
+
+def ssd_ref(q, k, v, log_decay):
+    """O(T²) reference for tests: direct masked decay attention."""
+    b, t, h, dk = q.shape
+    g = jnp.cumsum(log_decay.astype(jnp.float32), axis=1)      # [B,T,H]
+    rel = g[:, :, None, :] - g[:, None, :, :]                  # [B,T,S,H]
+    causal = jnp.tril(jnp.ones((t, t), bool))[None, :, :, None]
+    decay = jnp.where(causal, jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bthd,bshd->btsh", q, k).astype(jnp.float32)
+    return jnp.einsum("btsh,bshv->bthv", scores * decay,
+                      v.astype(jnp.float32)).astype(v.dtype)
+
+
+def ssd_decode_step(state: jax.Array, q, k, v, log_decay):
+    """One decode step.  state: [B, H, dk, dv]; q/k: [B, H, dk];
+    v: [B, H, dv]; log_decay: [B, H].  Returns (y [B, H, dv], new state)."""
+    a = jnp.exp(log_decay.astype(jnp.float32))[:, :, None, None]
+    state = a * state + jnp.einsum("bhd,bhv->bhdv", k.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), state)
+    return y.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style head block (used by Hymba's parallel SSM heads)
+# ---------------------------------------------------------------------------
+
+def mamba_params(keys, d_model: int, num_heads: int, head_dim: int,
+                 d_state: int) -> Params:
+    d_inner = num_heads * head_dim
+    return {
+        "in_proj": dense_init(keys(), (d_model, 2 * d_inner)),
+        "bc_proj": dense_init(keys(), (d_model, 2 * num_heads * d_state)),
+        "dt_proj": dense_init(keys(), (d_model, num_heads)),
+        "dt_bias": jnp.zeros((num_heads,), jnp.float32),
+        "a_log": jnp.zeros((num_heads,), jnp.float32),
+        "d_skip": jnp.ones((num_heads, head_dim), jnp.float32) * 0.0,
+        "out_proj": dense_init(keys(), (d_inner, d_model)),
+    }
+
+
+def _mamba_gates(p, x):
+    b, t, _ = x.shape
+    dt = jax.nn.softplus(x @ cast(p["dt_proj"])
+                         + cast(p["dt_bias"]))             # [B,T,H]
+    a = -jax.nn.softplus(p["a_log"]).astype(jnp.float32)   # [H] (negative)
+    log_decay = dt.astype(jnp.float32) * a                 # [B,T,H]
+    return dt, log_decay
+
+
+def mamba_mixer(p: Params, x: jax.Array, num_heads: int, head_dim: int,
+                d_state: int, chunk: int | None = None) -> jax.Array:
+    """Full-sequence Mamba-2/SSD head mixer.  x: [B, T, d]."""
+    b, t, _ = x.shape
+    xz = x @ cast(p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = xs.reshape(b, t, num_heads, head_dim)
+    bc = x @ cast(p["bc_proj"])
+    bb, cc = jnp.split(bc, 2, axis=-1)
+    bb = bb.reshape(b, t, num_heads, d_state)
+    cc = cc.reshape(b, t, num_heads, d_state)
+    dt, log_decay = _mamba_gates(p, x)
+    # input scaled by dt (ZOH discretization, scalar-per-head form)
+    v = xs * dt[..., None].astype(xs.dtype)
+    y = ssd_chunked(cc, bb, v, log_decay, chunk=chunk)
+    y = y + xs * cast(p["d_skip"])[None, None]
+    y = y * jax.nn.silu(z.reshape(b, t, num_heads, head_dim))
+    return y.reshape(b, t, num_heads * head_dim) @ cast(p["out_proj"])
+
+
+def mamba_init_state(batch: int, num_heads: int, head_dim: int,
+                     d_state: int) -> jax.Array:
+    return jnp.zeros((batch, num_heads, d_state, head_dim), jnp.float32)
+
+
+def mamba_decode(p: Params, state: jax.Array, x: jax.Array,
+                 num_heads: int, head_dim: int, d_state: int
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, 1, d] -> (y [B, 1, d], new state)."""
+    b = x.shape[0]
+    xz = x[:, 0] @ cast(p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = xs.reshape(b, num_heads, head_dim)
+    bc = x[:, 0] @ cast(p["bc_proj"])
+    bb, cc = jnp.split(bc, 2, axis=-1)
+    bb = bb.reshape(b, num_heads, d_state)
+    cc = cc.reshape(b, num_heads, d_state)
+    dt, log_decay = _mamba_gates(p, x)       # dt: [B, 1, H]
+    v = xs * dt[:, 0][..., None].astype(xs.dtype)
+    y, state = ssd_decode_step(state, cc, bb, v, log_decay[:, 0])
+    y = y + xs * cast(p["d_skip"])[None]
+    y = y * jax.nn.silu(z.reshape(b, num_heads, head_dim))
+    return (y.reshape(b, 1, num_heads * head_dim) @ cast(p["out_proj"]),
+            state)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory block)
+# ---------------------------------------------------------------------------
+
+def slstm_params(keys, d_model: int) -> Params:
+    return {
+        "wi": dense_init(keys(), (d_model, 4 * d_model)),
+        "wr": dense_init(keys(), (d_model, 4 * d_model)),
+        "b": jnp.zeros((4 * d_model,), jnp.float32),
+    }
+
+
+def slstm_scan(p: Params, x: jax.Array) -> jax.Array:
+    """Sequential sLSTM over [B, T, d] (sigmoid-stabilized gates)."""
+    b, t, d = x.shape
+    pre = (x @ cast(p["wi"]) + cast(p["b"])).astype(jnp.float32)
+
+    def step(carry, pre_t):
+        h, c = carry
+        gates = pre_t + (h.astype(x.dtype) @ cast(p["wr"])).astype(jnp.float32)
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+        c = f * c + i * jnp.tanh(g)
+        h = o * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((b, d), jnp.float32)
+    (_, _), hs = jax.lax.scan(step, (h0, h0), jnp.moveaxis(pre, 1, 0))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+
+
+def slstm_init_state(batch: int, d_model: int) -> Tuple[jax.Array, jax.Array]:
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return (z, z)
+
+
+def slstm_decode(p: Params, state, x: jax.Array):
+    """x: [B, 1, d] -> (y [B, 1, d], new state)."""
+    h, c = state
+    pre = (x[:, 0] @ cast(p["wi"]) + cast(p["b"])).astype(jnp.float32)
+    gates = pre + (h.astype(x.dtype) @ cast(p["wr"])).astype(jnp.float32)
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    c = f * c + i * jnp.tanh(g)
+    h = o * jnp.tanh(c)
+    return h[:, None].astype(x.dtype), (h, c)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block) — ssd-form
+# ---------------------------------------------------------------------------
+
+def mlstm_params(keys, d_model: int, num_heads: int, head_dim: int) -> Params:
+    return {
+        "wq": dense_init(keys(), (d_model, num_heads * head_dim)),
+        "wk": dense_init(keys(), (d_model, num_heads * head_dim)),
+        "wv": dense_init(keys(), (d_model, num_heads * head_dim)),
+        "wf": dense_init(keys(), (d_model, num_heads)),
+        "wi": dense_init(keys(), (d_model, num_heads)),
+        "f_bias": jnp.ones((num_heads,), jnp.float32) * 3.0,
+        "wo": dense_init(keys(), (num_heads * head_dim, d_model)),
+        "out_scale": jnp.ones((num_heads, head_dim), jnp.float32),
+    }
+
+
+def _mlstm_qkv(p, x, num_heads, head_dim):
+    b, t, _ = x.shape
+    q = (x @ cast(p["wq"])).reshape(b, t, num_heads, head_dim)
+    k = (x @ cast(p["wk"])).reshape(b, t, num_heads, head_dim)
+    v = (x @ cast(p["wv"])).reshape(b, t, num_heads, head_dim)
+    log_f = jax.nn.log_sigmoid(
+        (x @ cast(p["wf"])).astype(jnp.float32) + p["f_bias"])      # [B,T,H]
+    i_gate = jax.nn.sigmoid((x @ cast(p["wi"])).astype(jnp.float32))
+    k = k * (i_gate[..., None] / jnp.sqrt(jnp.float32(head_dim))).astype(k.dtype)
+    return q, k, v, log_f
+
+
+def _mlstm_out(p, y, num_heads, head_dim):
+    b, t = y.shape[0], y.shape[1]
+    from repro.models.common import rms_norm
+    y = rms_norm(y, None) * cast(p["out_scale"])[None, None]
+    return y.reshape(b, t, num_heads * head_dim) @ cast(p["wo"])
+
+
+def mlstm_mixer(p: Params, x: jax.Array, num_heads: int, head_dim: int,
+                chunk: int | None = None) -> jax.Array:
+    """Full-sequence mLSTM: C_t = f_t C_{t-1} + i_t k_t v_t^T, y_t = q_t C_t."""
+    q, k, v, log_f = _mlstm_qkv(p, x, num_heads, head_dim)
+    y = ssd_chunked(q, k, v, log_f, chunk=chunk)
+    return _mlstm_out(p, y, num_heads, head_dim)
+
+
+def mlstm_init_state(batch: int, num_heads: int, head_dim: int) -> jax.Array:
+    return jnp.zeros((batch, num_heads, head_dim, head_dim), jnp.float32)
+
+
+def mlstm_decode(p: Params, state: jax.Array, x: jax.Array,
+                 num_heads: int, head_dim: int):
+    q, k, v, log_f = _mlstm_qkv(p, x, num_heads, head_dim)
+    y, state = ssd_decode_step(state, q[:, 0], k[:, 0], v[:, 0], log_f[:, 0])
+    return _mlstm_out(p, y[:, None], num_heads, head_dim), state

@@ -1,0 +1,516 @@
+"""Generic architecture-zoo model: one functional implementation covering
+dense / MoE / hybrid (attn ∥ SSD) / xLSTM / VLM / encoder-decoder families,
+driven entirely by ``ArchConfig``.
+
+Structure
+  * ``init(seed)`` materializes fp32 params (reduced configs only);
+    ``abstract_params()`` gives ShapeDtypeStructs for the dry-run.
+  * ``forward``/``loss`` — full-sequence path (train & prefill), layers run
+    under ``lax.scan`` over stacked parameters with per-layer window sizes
+    as scanned scalars, each block wrapped in ``jax.checkpoint`` (remat).
+  * ``init_cache``/``decode_step`` — single-token serving path; layers are
+    a Python loop so per-layer cache shapes may differ (gemma3's local
+    layers keep a 1024-slot ring while global layers keep the full
+    context — the sub-quadratic-decode requirement of the 500k shape).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssd
+from repro.models.common import (KeyGen, Params, apply_norm, cast,
+                                 dense_init, embed_init, gelu, norm_params,
+                                 scan_unroll, shard_activations,
+                                 shard_logits, swiglu)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_params(keys, d_model: int, d_ff: int, gated: bool) -> Params:
+    if gated:
+        return {"w_gate": dense_init(keys(), (d_model, d_ff)),
+                "w_up": dense_init(keys(), (d_model, d_ff)),
+                "w_down": dense_init(keys(), (d_ff, d_model))}
+    return {"w_in": dense_init(keys(), (d_model, d_ff)),
+            "w_out": dense_init(keys(), (d_ff, d_model))}
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    if "w_gate" in p:
+        return swiglu(x @ cast(p["w_gate"]), x @ cast(p["w_up"])) \
+            @ cast(p["w_down"])
+    return gelu(x @ cast(p["w_in"])) @ cast(p["w_out"])
+
+
+def sinusoid_at(pos: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal embedding at traced positions.  pos: [B] -> [B, d]."""
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    angle = pos[:, None].astype(jnp.float32) / jnp.power(10000.0, dim / d)
+    out = jnp.zeros((pos.shape[0], d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(angle))
+    out = out.at[:, 1::2].set(jnp.cos(angle))
+    return out
+
+
+def sinusoid_positions(t: int, d: int, offset: int = 0) -> jax.Array:
+    pos = np.arange(offset, offset + t)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    angle = pos / np.power(10000.0, dim / d)
+    out = np.zeros((t, d), np.float32)
+    out[:, 0::2] = np.sin(angle)
+    out[:, 1::2] = np.cos(angle)
+    return jnp.asarray(out)
+
+
+class Model:
+    """Functional model bound to an ``ArchConfig``."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.head_dim = cfg.resolved_head_dim
+        self.gated_mlp = cfg.family != "audio"
+        self.windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+
+    # ------------------------------------------------------------------
+    # Parameter construction
+    # ------------------------------------------------------------------
+    def _layer_params(self, keys) -> Params:
+        c = self.cfg
+        hd = self.head_dim
+        kind = c.block_type
+        p: Params = {"ln1": norm_params(c.d_model, c.norm)}
+        if kind == "xlstm":
+            p["mlstm"] = ssd.mlstm_params(keys, c.d_model, c.num_heads, hd)
+            p["ln2"] = norm_params(c.d_model, c.norm)
+            p["slstm"] = ssd.slstm_params(keys, c.d_model)
+            return p
+        p["attn"] = attn.attention_params(keys, c.d_model, c.num_heads,
+                                          c.num_kv_heads, hd, c.qkv_bias)
+        if kind == "hybrid":
+            p["mamba"] = ssd.mamba_params(keys, c.d_model,
+                                          c.ssm_heads or c.num_heads,
+                                          hd, c.ssm_state_size)
+        p["ln2"] = norm_params(c.d_model, c.norm)
+        if kind == "moe":
+            p["moe"] = moe_lib.moe_params(
+                keys, c.d_model, c.d_ff, c.num_experts,
+                c.num_shared_experts,
+                c.num_shared_experts * c.d_ff if c.num_shared_experts else 0)
+        else:
+            p["mlp"] = mlp_params(keys, c.d_model, c.d_ff, self.gated_mlp)
+        return p
+
+    def _encoder_layer_params(self, keys) -> Params:
+        c = self.cfg
+        return {
+            "ln1": norm_params(c.d_model, c.norm),
+            "attn": attn.attention_params(keys, c.d_model, c.num_heads,
+                                          c.num_kv_heads, self.head_dim),
+            "ln2": norm_params(c.d_model, c.norm),
+            "mlp": mlp_params(keys, c.d_model, c.d_ff, self.gated_mlp),
+        }
+
+    def _decoder_xattn_params(self, keys) -> Params:
+        c = self.cfg
+        return {
+            "ln_x": norm_params(c.d_model, c.norm),
+            "xattn": attn.attention_params(keys, c.d_model, c.num_heads,
+                                           c.num_kv_heads, self.head_dim),
+        }
+
+    def _num_scan_layers(self) -> int:
+        if self.cfg.block_pattern:   # xlstm pairs
+            return self.cfg.num_layers // len(self.cfg.block_pattern)
+        return self.cfg.num_layers
+
+    def init(self, seed: int = 0) -> Params:
+        c = self.cfg
+        keys = KeyGen(seed)
+        layers = [self._layer_params(keys) for _ in range(self._num_scan_layers())]
+        if c.family == "audio":
+            for lp, _ in zip(layers, range(len(layers))):
+                lp.update(self._decoder_xattn_params(keys))
+        params: Params = {
+            "embed": embed_init(keys(), (c.vocab_size, c.d_model)),
+            "layers": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *layers),
+            "final_norm": norm_params(c.d_model, c.norm),
+        }
+        if not c.tie_embeddings:
+            params["unembed"] = dense_init(keys(), (c.d_model, c.vocab_size))
+        if c.family == "audio":
+            enc_layers = [self._encoder_layer_params(keys)
+                          for _ in range(c.encoder_layers)]
+            params["encoder"] = {
+                "layers": jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *enc_layers),
+                "final_norm": norm_params(c.d_model, c.norm),
+            }
+        return params
+
+    def abstract_params(self) -> Params:
+        return jax.eval_shape(lambda: self.init(0))
+
+    # ------------------------------------------------------------------
+    # Blocks (full-sequence)
+    # ------------------------------------------------------------------
+    def _block(self, p: Params, x: jax.Array, positions: jax.Array,
+               window) -> Tuple[jax.Array, jax.Array]:
+        """One decoder block; returns (x, aux_loss)."""
+        c = self.cfg
+        hd = self.head_dim
+        aux = jnp.float32(0.0)
+        kind = c.block_type
+        if kind == "xlstm":
+            h = apply_norm(x, p["ln1"], c.norm)
+            x = x + ssd.mlstm_mixer(p["mlstm"], h, c.num_heads, hd)
+            h = apply_norm(x, p["ln2"], c.norm)
+            x = x + ssd.slstm_scan(p["slstm"], h)
+            return x, aux
+        h = apply_norm(x, p["ln1"], c.norm)
+        a = attn.self_attention(p["attn"], h, positions, c.num_heads,
+                                c.num_kv_heads, hd, c.rope_theta, window)
+        if kind == "hybrid":
+            m = ssd.mamba_mixer(p["mamba"], h, c.ssm_heads or c.num_heads,
+                                hd, c.ssm_state_size)
+            x = x + 0.5 * (a + m)       # Hymba parallel-head fusion (mean)
+        else:
+            x = x + a
+        h = apply_norm(x, p["ln2"], c.norm)
+        if kind == "moe":
+            y, aux = moe_lib.moe_layer(p["moe"], h, c.num_experts,
+                                       c.num_experts_per_tok,
+                                       c.moe_capacity_factor)
+            x = x + y
+        else:
+            x = x + mlp(p["mlp"], h)
+        return x, aux
+
+    def _stack(self, params: Params, x: jax.Array, positions: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+        c = self.cfg
+        if c.block_pattern:
+            windows = jnp.zeros((self._num_scan_layers(),), jnp.int32)
+        else:
+            windows = self.windows
+
+        def body(carry, xs):
+            x, aux = carry
+            p, w = xs
+            x, a = self._block(p, x, positions, w)
+            return (shard_activations(x), aux + a), None
+
+        body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                   (params["layers"], windows),
+                                   unroll=scan_unroll())
+        return x, aux
+
+    # ------------------------------------------------------------------
+    # Encoder (audio)
+    # ------------------------------------------------------------------
+    def _encode(self, params: Params, frames: jax.Array) -> jax.Array:
+        c = self.cfg
+        x = cast(frames) + cast(sinusoid_positions(frames.shape[1],
+                                                   c.d_model))[None]
+        positions = jnp.broadcast_to(jnp.arange(frames.shape[1]),
+                                     frames.shape[:2]).astype(jnp.int32)
+
+        def body(carry, p):
+            x = carry
+            h = apply_norm(x, p["ln1"], c.norm)
+            x = x + attn.self_attention(p["attn"], h, positions,
+                                        c.num_heads, c.num_kv_heads,
+                                        self.head_dim, 0.0, 0,
+                                        causal=False)
+            h = apply_norm(x, p["ln2"], c.norm)
+            x = x + mlp(p["mlp"], h)
+            return shard_activations(x), None
+
+        body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["encoder"]["layers"],
+                            unroll=scan_unroll())
+        return apply_norm(x, params["encoder"]["final_norm"], c.norm)
+
+    # ------------------------------------------------------------------
+    # Forward / loss (train & prefill)
+    # ------------------------------------------------------------------
+    def forward(self, params: Params, tokens: jax.Array,
+                patch_embeds: Optional[jax.Array] = None,
+                frames: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+        """Returns (logits [B, T_total, V], aux_loss)."""
+        c = self.cfg
+        x = shard_activations(cast(params["embed"])[tokens])
+        if c.family == "vlm":
+            assert patch_embeds is not None
+            x = shard_activations(
+                jnp.concatenate([cast(patch_embeds), x], axis=1))
+        if c.family == "audio":
+            assert frames is not None
+            # encoder runs once; each decoder layer builds its own cross
+            # K/V from the shared encoder output inside the layer scan.
+            self._enc_out = self._encode(params, frames)
+            x = x + cast(sinusoid_positions(x.shape[1], c.d_model))[None]
+        b, t, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(t), (b, t)).astype(jnp.int32)
+        if c.family == "audio":
+            x, aux = self._stack_audio(params, x, positions)
+        else:
+            x, aux = self._stack(params, x, positions)
+        x = apply_norm(x, params["final_norm"], c.norm)
+        if c.tie_embeddings:
+            logits = x @ cast(params["embed"]).T
+        else:
+            logits = x @ cast(params["unembed"])
+        return logits, aux
+
+    def _stack_audio(self, params, x, positions):
+        c = self.cfg
+        enc_out = self._enc_out
+
+        def body(carry, p):
+            x, aux = carry
+            h = apply_norm(x, p["ln1"], c.norm)
+            x = x + attn.self_attention(p["attn"], h, positions,
+                                        c.num_heads, c.num_kv_heads,
+                                        self.head_dim, c.rope_theta, 0)
+            hx = apply_norm(x, p["ln_x"], c.norm)
+            kv = attn.encode_cross_kv(p["xattn"], enc_out, c.num_kv_heads,
+                                      self.head_dim)
+            kv = (attn._repeat_kv(kv[0], c.num_heads),
+                  attn._repeat_kv(kv[1], c.num_heads))
+            x = x + attn.cross_attention(p["xattn"], hx, kv, c.num_heads,
+                                         self.head_dim)
+            h = apply_norm(x, p["ln2"], c.norm)
+            x = x + mlp(p["mlp"], h)
+            return (shard_activations(x), aux), None
+
+        body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                   params["layers"], unroll=scan_unroll())
+        return x, aux
+
+    def hidden(self, params: Params, tokens, patch_embeds=None, frames=None
+               ) -> Tuple[jax.Array, jax.Array]:
+        """Final hidden states (pre-unembed) — shared by loss/prefill."""
+        c = self.cfg
+        x = shard_activations(cast(params["embed"])[tokens])
+        if c.family == "vlm":
+            assert patch_embeds is not None
+            x = shard_activations(
+                jnp.concatenate([cast(patch_embeds), x], axis=1))
+        if c.family == "audio":
+            assert frames is not None
+            self._enc_out = self._encode(params, frames)
+            x = x + cast(sinusoid_positions(x.shape[1], c.d_model))[None]
+        b, t, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(t), (b, t)).astype(jnp.int32)
+        if c.family == "audio":
+            x, aux = self._stack_audio(params, x, positions)
+        else:
+            x, aux = self._stack(params, x, positions)
+        return apply_norm(x, params["final_norm"], c.norm), aux
+
+    def _unembed_matrix(self, params: Params) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            return cast(params["embed"]).T
+        return cast(params["unembed"])
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array],
+             ce_chunk: int = 512) -> jax.Array:
+        """Next-token cross-entropy; labels == -1 are masked (e.g. the VLM
+        patch positions).  Adds the MoE load-balance auxiliary.
+
+        The CE is computed in sequence chunks under ``jax.checkpoint`` so
+        the fp32 [B, T, V] logits tensor is never materialized — peak is
+        one [B, ce_chunk, V] block (§Perf iteration: 13.5 GiB -> 1.6 GiB
+        on olmo-1b train_4k).
+        """
+        x, aux = self.hidden(params, batch["tokens"],
+                             batch.get("patch_embeds"), batch.get("frames"))
+        labels = batch["labels"]
+        if self.cfg.family == "vlm":
+            pad = -jnp.ones((labels.shape[0], self.cfg.num_patch_embeds),
+                            labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        w = self._unembed_matrix(params)
+        b, t, d = x.shape
+        chunk = min(ce_chunk, t)
+        while t % chunk:
+            chunk -= 1
+        n = t // chunk
+        xs = (jnp.moveaxis(x.reshape(b, n, chunk, d), 1, 0),
+              jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0))
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def ce_block(carry, xs_i):
+            nll_sum, cnt = carry
+            xc, lc = xs_i
+            logits = shard_logits((xc @ w).astype(jnp.float32))
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+            mask = (lc >= 0).astype(jnp.float32)
+            return (nll_sum + jnp.sum((logz - gold) * mask),
+                    cnt + jnp.sum(mask)), None
+
+        (nll_sum, cnt), _ = jax.lax.scan(
+            ce_block, (jnp.float32(0.0), jnp.float32(0.0)), xs)
+        ce = nll_sum / jnp.maximum(cnt, 1.0)
+        return ce + 0.01 * aux
+
+    # ------------------------------------------------------------------
+    # Serving: cache + single-token decode
+    # ------------------------------------------------------------------
+    def uniform_cache(self) -> bool:
+        """True when every layer's cache has identical shape — then the
+        cache is kept STACKED [L, ...] and decode runs as a ``lax.scan``
+        over layers (compile time O(1) in depth — the 94-layer MoE decode
+        went from a pathological unrolled compile to seconds).  Mixed
+        window/global stacks (gemma3, hymba) keep per-layer lists and an
+        unrolled loop so local layers can hold ring buffers of a different
+        size."""
+        c = self.cfg
+        return len(set(c.layer_windows())) == 1 or bool(c.block_pattern)
+
+    def _layer_cache(self, batch: int, seq_len: int, window: int, dtype):
+        c = self.cfg
+        hd = self.head_dim
+        if c.block_pattern:
+            return {
+                "mlstm_state": ssd.mlstm_init_state(batch, c.num_heads, hd),
+                "slstm_state": ssd.slstm_init_state(batch, c.d_model),
+            }
+        size = min(window, seq_len) if window > 0 else seq_len
+        import os as _os
+        env = _os.environ.get("REPRO_REPEAT_KV_CACHE")
+        if env:  # store KV repeated to >= this many heads (model-axis width)
+            target = c.num_heads if env == "1" else int(env)
+            kvh = c.num_kv_heads
+            while kvh < min(target, c.num_heads):
+                kvh *= 2
+        else:
+            kvh = c.num_kv_heads
+        entry = attn.init_kv_cache(batch, size, kvh, hd, dtype)
+        if c.block_type == "hybrid":
+            entry["ssm_state"] = ssd.mamba_init_state(
+                batch, c.ssm_heads or c.num_heads, hd, c.ssm_state_size)
+        return entry
+
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16):
+        """Stacked [L, ...] cache pytree for uniform stacks, else a
+        per-layer list (windowed ring buffers differ in size)."""
+        c = self.cfg
+        n = self._num_scan_layers()
+        windows = (c.layer_windows() if not c.block_pattern
+                   else (0,) * n)
+        if self.uniform_cache():
+            one = self._layer_cache(batch, seq_len, windows[0], dtype)
+            return jax.tree_util.tree_map(
+                lambda x: jnp.zeros((n,) + x.shape, x.dtype), one)
+        return [self._layer_cache(batch, seq_len, w, dtype) for w in windows]
+
+    def _decode_layer(self, p: Params, cache: Params, x: jax.Array,
+                      pos: jax.Array, window, enc_out
+                      ) -> Tuple[jax.Array, Params]:
+        """One layer of single-token decode; shared by the unrolled and
+        scanned paths."""
+        c = self.cfg
+        hd = self.head_dim
+        if c.block_pattern:
+            h = apply_norm(x, p["ln1"], c.norm)
+            y, mstate = ssd.mlstm_decode(p["mlstm"], cache["mlstm_state"],
+                                         h, c.num_heads, hd)
+            x = x + y
+            h = apply_norm(x, p["ln2"], c.norm)
+            y, sstate = ssd.slstm_decode(p["slstm"], cache["slstm_state"], h)
+            x = x + y
+            return x, {"mlstm_state": mstate, "slstm_state": sstate}
+        h = apply_norm(x, p["ln1"], c.norm)
+        a, kv = attn.decode_self_attention(
+            p["attn"], {"k": cache["k"], "v": cache["v"]}, h, pos,
+            c.num_heads, c.num_kv_heads, hd, c.rope_theta, window)
+        entry = dict(kv)
+        if c.block_type == "hybrid":
+            m, sstate = ssd.mamba_decode(
+                p["mamba"], cache["ssm_state"], h,
+                c.ssm_heads or c.num_heads, hd, c.ssm_state_size)
+            x = x + 0.5 * (a + m)
+            entry["ssm_state"] = sstate
+        else:
+            x = x + a
+        if c.family == "audio":
+            hx = apply_norm(x, p["ln_x"], c.norm)
+            kv_x = attn.encode_cross_kv(p["xattn"], enc_out,
+                                        c.num_kv_heads, hd)
+            kv_x = (attn._repeat_kv(kv_x[0], c.num_heads),
+                    attn._repeat_kv(kv_x[1], c.num_heads))
+            x = x + attn.cross_attention(p["xattn"], hx, kv_x,
+                                         c.num_heads, hd)
+        h = apply_norm(x, p["ln2"], c.norm)
+        if c.block_type == "moe":
+            y, _ = moe_lib.moe_layer(p["moe"], h, c.num_experts,
+                                     c.num_experts_per_tok,
+                                     c.moe_capacity_factor)
+            x = x + y
+        else:
+            x = x + mlp(p["mlp"], h)
+        return x, entry
+
+    def decode_step(self, params: Params, caches,
+                    tokens: jax.Array, pos: jax.Array,
+                    enc_out: Optional[jax.Array] = None):
+        """tokens: [B, 1]; pos: [B] absolute positions.  Returns
+        (logits [B, 1, V], new caches).
+
+        Stacked caches (uniform layers) run under ``lax.scan`` — constant
+        compile time in depth; per-layer cache lists (heterogeneous window
+        sizes) run an unrolled loop."""
+        c = self.cfg
+        x = shard_activations(cast(params["embed"])[tokens])
+        if c.family == "audio":
+            assert enc_out is not None
+            x = x + cast(sinusoid_at(pos, c.d_model))[:, None]
+        if isinstance(caches, list):
+            windows = (list(c.layer_windows()) if not c.block_pattern
+                       else [0] * self._num_scan_layers())
+            layers = params["layers"]
+            new_caches = []
+            for i, w in enumerate(windows):
+                p = jax.tree_util.tree_map(lambda a, i=i: a[i], layers)
+                x, entry = self._decode_layer(p, caches[i], x, pos,
+                                              jnp.int32(w), enc_out)
+                new_caches.append(entry)
+        else:
+            window = jnp.int32(c.layer_windows()[0]
+                               if not c.block_pattern else 0)
+
+            def body(x, xs):
+                p, cache = xs
+                x, entry = self._decode_layer(p, cache, x, pos, window,
+                                              enc_out)
+                return x, entry
+
+            x, new_caches = jax.lax.scan(body, x,
+                                         (params["layers"], caches),
+                                         unroll=scan_unroll())
+        x = apply_norm(x, params["final_norm"], c.norm)
+        if c.tie_embeddings:
+            logits = x @ cast(params["embed"]).T
+        else:
+            logits = x @ cast(params["unembed"])
+        return logits, new_caches
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,251 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Terms per (arch × shape × mesh), all per-device per-step seconds:
+
+    compute    = HLO_FLOPs / peak_FLOPs            (197 TF/s bf16, v5e)
+    memory     = HLO_bytes_accessed / HBM_bw       (819 GB/s)
+    collective = collective_bytes / ICI_link_bw    (~50 GB/s/link)
+
+``cost_analysis`` counts a ``lax.scan`` body ONCE regardless of trip count,
+so raw numbers for scanned layer stacks are per-layer-ish.  We correct by
+layer-count extrapolation: lower the same program at L=1 and L=2 layers;
+the difference is the exact per-layer cost, and
+
+    full = cost(L=1) + (L_scan − 1) · (cost(L=2) − cost(L=1))
+
+which is exact for homogeneous stacks (all of ours are, per scan group).
+Collective bytes are parsed from the SPMD-partitioned HLO text, where
+operand shapes are already per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict
+
+# --- TPU v5e constants (per chip) ------------------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\w+\[[^\]]*\]\S*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Per-device bytes moved by each collective family, from HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if m.group(0).endswith("-done("):
+            continue  # avoid double-count of async pairs (counted at -start)
+        out[kind] += _shape_bytes(shape_str)
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+@dataclasses.dataclass
+class RawCosts:
+    flops: float             # per device (scan bodies counted once)
+    bytes_accessed: float    # per device
+    coll_bytes: float        # per device
+    coll_detail: Dict[str, Any]
+
+
+def raw_costs(compiled) -> RawCosts:
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    return RawCosts(float(ca.get("flops", 0.0)),
+                    float(ca.get("bytes accessed", 0.0)),
+                    float(coll["total_bytes"]), coll)
+
+
+def extrapolate(c1: RawCosts, c2: RawCosts, scan_layers: int) -> RawCosts:
+    """full = c1 + (L−1)(c2 − c1) applied term-wise (exact for homogeneous
+    scan stacks; the L-independent prologue/epilogue cancels)."""
+    f = c1.flops + (scan_layers - 1) * (c2.flops - c1.flops)
+    b = c1.bytes_accessed + (scan_layers - 1) * (c2.bytes_accessed
+                                                 - c1.bytes_accessed)
+    cb = c1.coll_bytes + (scan_layers - 1) * (c2.coll_bytes - c1.coll_bytes)
+    detail = {
+        "bytes": {k: c1.coll_detail["bytes"][k] + (scan_layers - 1) * (
+            c2.coll_detail["bytes"][k] - c1.coll_detail["bytes"][k])
+            for k in c1.coll_detail["bytes"]},
+        "counts": c2.coll_detail["counts"],
+    }
+    return RawCosts(max(f, 0.0), max(b, 0.0), max(cb, 0.0), detail)
+
+
+def roofline_terms(costs: RawCosts) -> Dict[str, float]:
+    compute = costs.flops / PEAK_FLOPS
+    memory = costs.bytes_accessed / HBM_BW
+    coll = costs.coll_bytes / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": coll}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    total = max(compute, memory, coll)
+    terms["bound_fraction"] = {
+        k: (terms[k] / total if total else 0.0)
+        for k in ("compute_s", "memory_s", "collective_s")}
+    return terms
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (the "useful compute" yardstick)
+# ---------------------------------------------------------------------------
+
+def active_params(cfg) -> float:
+    """Matmul-active parameters per token (MoE: routed fraction only;
+    embedding lookups excluded, unembed projection included)."""
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    attn = d * hd * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+    if cfg.block_pattern:          # xlstm pair: mlstm qkvo + gates + slstm
+        mlstm = d * hd * cfg.num_heads * 4 + 2 * d * cfg.num_heads
+        slstm = 8 * d * d
+        per_pair = mlstm + slstm
+        layer = per_pair
+        n_layers = cfg.num_layers // len(cfg.block_pattern)
+    else:
+        n_layers = cfg.num_layers
+        if cfg.num_experts:
+            expert = 3 * d * cfg.d_ff
+            routed = expert * cfg.num_experts_per_tok
+            shared = 3 * d * (cfg.num_shared_experts * cfg.d_ff) \
+                + d * 1 if cfg.num_shared_experts else 0
+            router = d * cfg.num_experts
+            ffn = routed + shared + router
+        elif cfg.d_ff:
+            mult = 3 if cfg.family != "audio" else 2
+            ffn = mult * d * cfg.d_ff
+        else:
+            ffn = 0
+        mamba = 0
+        if cfg.family == "hybrid":
+            h = cfg.ssm_heads or cfg.num_heads
+            di = h * hd
+            mamba = d * 2 * di + d * 2 * h * cfg.ssm_state_size \
+                + d * h + di * d
+        layer = attn + ffn + mamba
+        if cfg.family == "audio":
+            layer += attn  # cross-attention
+    total = n_layers * layer + d * cfg.vocab_size   # + unembed
+    if cfg.family == "audio":
+        enc_layer = attn + 2 * d * cfg.d_ff
+        total += cfg.encoder_layers * enc_layer
+    return float(total)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D train / 2·N_active·D forward (global, per step)."""
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch      # decode: one token per seq
+
+
+# ---------------------------------------------------------------------------
+# Analytic corrections for inner (non-layer) scans
+# ---------------------------------------------------------------------------
+# The L-extrapolation recovers everything that scales with the layer count,
+# but the chunked-attention and SSD chunk scans INSIDE a layer are still
+# counted once by cost_analysis (one [q_chunk × k_chunk] block instead of
+# nq·nk blocks).  Their cost is analytically exact — the chunked
+# implementations compute every (masked) block — so we add closed-form
+# terms.  Methodology documented in EXPERIMENTS.md §Roofline.
+
+def attention_correction(cfg, shape) -> Dict[str, float]:
+    """Per-DEVICE flops/bytes of full-sequence attention score/PV matmuls
+    (train & prefill; decode unrolls and needs no correction)."""
+    if shape.kind == "decode" or cfg.block_pattern:
+        return {"flops": 0.0, "bytes": 0.0}
+    b, t = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        pass  # patch positions replace text positions; total length is t
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    # chunked attention computes ALL blocks (masking, not skipping)
+    per_layer = 4.0 * b * h * t * t * hd          # scores + PV, fwd
+    n_layers = cfg.num_layers
+    if cfg.family == "audio":
+        # decoder self (t×t) + cross (t×enc) + encoder self (enc×enc)
+        enc = cfg.encoder_seq
+        per_layer = 4.0 * b * h * hd * (t * t + t * enc)
+        per_layer_enc = 4.0 * b * h * hd * enc * enc
+        flops = cfg.num_layers * per_layer + cfg.encoder_layers * per_layer_enc
+    else:
+        flops = n_layers * per_layer
+    mult = 4.0 if shape.kind == "train" else 1.0   # fwd + remat-fwd + bwd(2x)
+    flops *= mult
+    # HBM traffic: K and V re-read once per query block; Q/O once
+    nq = max(t // 512, 1)
+    kv_bytes = 2.0 * b * t * h * hd * 2            # K+V, bf16
+    qo_bytes = 2.0 * b * t * h * hd * 2
+    bytes_ = n_layers * (nq * kv_bytes + qo_bytes) * (3.0 if mult > 1 else 1.0)
+    return {"flops": flops, "bytes": bytes_}
+
+
+def ssd_correction(cfg, shape) -> Dict[str, float]:
+    """Per-DEVICE flops of the SSD/mLSTM chunk scan (linear in T)."""
+    if shape.kind == "decode":
+        return {"flops": 0.0, "bytes": 0.0}
+    b, t = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    chunk = 128
+    per_layer_extra = 0.0
+    if cfg.block_pattern:                        # xlstm: mLSTM half
+        h, dk, dv = cfg.num_heads, hd, hd
+        layers = cfg.num_layers // len(cfg.block_pattern)
+        # plus the sLSTM recurrent matmul, one [d,4d] per time step
+        # (sequential scan: counted once by cost_analysis, T times real)
+        d = cfg.d_model
+        per_layer_extra = (2.0 * b * t * 4 * d * d
+                           * (4.0 if shape.kind == "train" else 1.0))
+    elif cfg.family == "hybrid":                 # hymba mamba heads
+        h, dk, dv = (cfg.ssm_heads or cfg.num_heads), cfg.ssm_state_size, hd
+        layers = cfg.num_layers
+    else:
+        return {"flops": 0.0, "bytes": 0.0}
+    per_layer = 2.0 * b * t * h * (chunk * (dk + dv) + 2.0 * dk * dv)
+    mult = 4.0 if shape.kind == "train" else 1.0
+    flops = layers * (per_layer * mult + per_layer_extra)
+    bytes_ = layers * 4.0 * b * t * h * (dk + dv) * 2 * (3.0 if mult > 1 else 1)
+    return {"flops": flops, "bytes": bytes_}
+
+
+def inner_scan_corrections(cfg, shape, devices: int) -> Dict[str, float]:
+    """Global->per-device analytic correction to add to extrapolated costs."""
+    a = attention_correction(cfg, shape)
+    s = ssd_correction(cfg, shape)
+    return {"flops": (a["flops"] + s["flops"]) / devices,
+            "bytes": (a["bytes"] + s["bytes"]) / devices}

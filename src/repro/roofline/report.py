@@ -1,0 +1,87 @@
+"""Render the dry-run JSON records into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.roofline.report benchmarks/results/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+def load(outdir: str) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _fmt(x: float) -> str:
+    return f"{x:.2e}" if x else "0"
+
+
+def dryrun_table(recs: List[Dict], mesh: str) -> str:
+    rows = ["| arch | shape | status | mem/dev GiB | compile s | "
+            "collectives (per-device bytes) |",
+            "|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "ok":
+            det = r["costs"]["collective_detail"]["bytes"]
+            coll = ", ".join(f"{k.split('-')[-1] if False else k}:"
+                             f"{_fmt(v)}" for k, v in det.items() if v)
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | ok | "
+                f"{r['memory']['total_gib_per_device']} | "
+                f"{r.get('compile_s', '')} | {coll or '-'} |")
+        elif r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP | - | - | "
+                        f"{r['reason'][:70]} |")
+        else:
+            rows.append(f"| {r['arch']} | {r['shape']} | **FAIL** | - | - | "
+                        f"{r.get('error', '')[:70]} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs: List[Dict], mesh: str) -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | MODEL_FLOPs | useful ratio |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh or r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        dom = t["dominant"].replace("_s", "")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt(t['compute_s'])} | "
+            f"{_fmt(t['memory_s'])} | {_fmt(t['collective_s'])} | "
+            f"**{dom}** | {_fmt(r['model_flops_global'])} | "
+            f"{r['useful_compute_ratio']} |")
+    return "\n".join(rows)
+
+
+def summarize(recs: List[Dict]) -> Dict:
+    out = {"ok": 0, "skipped": 0, "failed": 0}
+    for r in recs:
+        out[r["status"] if r["status"] in out else "failed"] += 1
+    return out
+
+
+def main() -> None:
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "benchmarks/results/dryrun"
+    recs = load(outdir)
+    for mesh in sorted({r["mesh"] for r in recs}):
+        sub = [r for r in recs if r["mesh"] == mesh]
+        print(f"\n## Mesh: {mesh}  ({summarize(sub)})\n")
+        print("### Dry-run\n")
+        print(dryrun_table(recs, mesh))
+        print("\n### Roofline\n")
+        print(roofline_table(recs, mesh))
+
+
+if __name__ == "__main__":
+    main()

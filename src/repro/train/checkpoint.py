@@ -1,0 +1,63 @@
+"""Sharded checkpointing to flat .npz archives.
+
+Paths are flattened ``a/b/c`` keys; each save also records a manifest so
+restores verify structure.  Works for model params, optimizer state and
+LDA engine state (whose KV-store blocks map naturally to one entry each —
+the host-side persistence story of the paper's key-value store).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **flat)
+    manifest = {"step": step, "keys": sorted(flat),
+                "shapes": {k: list(v.shape) for k, v in flat.items()}}
+    with open(path + ".manifest.json", "w") as f:
+        json.dump(manifest, f)
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a pytree template)."""
+    path_npz = path if path.endswith(".npz") else path + ".npz"
+    data = np.load(path_npz)
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(tree[k], f"{prefix}{k}/") for k in tree}
+        if isinstance(tree, (list, tuple)):
+            vals = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+            return type(tree)(vals)
+        key = prefix.rstrip("/")
+        arr = data[key]
+        assert arr.shape == tuple(np.shape(tree)), (key, arr.shape)
+        return jnp.asarray(arr)
+
+    return rebuild(like)
+
+
+def checkpoint_step(path: str) -> int:
+    with open(path + ".manifest.json") as f:
+        return json.load(f)["step"]

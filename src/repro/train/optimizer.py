@@ -1,0 +1,93 @@
+"""Hand-rolled AdamW (no optax in this environment).
+
+State is a pytree mirroring params (m, v) plus a step counter; everything
+is fp32 and inherits the parameter sharding, so under FSDP the optimizer
+state is fully sharded too (the ZeRO property).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array
+    m: Any
+    v: Any
+
+    def tree_flatten(self):
+        return (self.step, self.m, self.v), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), p)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros(params),
+                          zeros(params))
+
+    def schedule(self, step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = step / max(self.warmup_steps, 1)
+        prog = jnp.clip((step - self.warmup_steps)
+                        / max(self.total_steps - self.warmup_steps, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return self.learning_rate * jnp.minimum(warm, 1.0) * jnp.maximum(
+            cos, 0.1)
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            mh = m / b1c
+            vh = v / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, m, v
+
+        out = jax.tree_util.tree_map(upd, grads, state.m, state.v, params)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(step, new_m, new_v)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda x: x * scale, tree), norm

@@ -1,0 +1,81 @@
+"""Training step assembly: loss → grad (w/ microbatch accumulation) →
+clip → AdamW update."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import shard_activations
+from repro.models.transformer import Model
+from repro.train.optimizer import AdamW, AdamWState, clip_by_global_norm
+
+
+def make_train_step(model: Model, opt: AdamW, clip_norm: float = 1.0,
+                    accum_steps: int = 1, ce_chunk: int = 512):
+    """Returns ``train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)`` ready for ``jax.jit`` (the launcher adds
+    in/out shardings).
+
+    ``accum_steps > 1`` splits the global batch into microbatches processed
+    under a ``lax.scan`` with fp32 gradient accumulation — the standard
+    device-memory lever for the big-model train shapes (backward residuals
+    scale with the microbatch, the accumulator with the sharded parameter
+    count)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p, b: model.loss(p, b, ce_chunk=ce_chunk))(params, batch)
+
+    def train_step(params, opt_state: AdamWState,
+                   batch: Dict[str, jax.Array]
+                   ) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+        if accum_steps == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]), batch)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                mb = jax.tree_util.tree_map(shard_activations, mb)
+                loss, g = grads_of(params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), None
+
+            gzero = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (gzero, jnp.float32(0.0)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, gsum)
+            loss = lsum / accum_steps
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": opt.schedule(opt_state.step)}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def pick_accum_steps(cfg, shape, data_shards: int,
+                     target_elems: int = 2 ** 25) -> int:
+    """Largest power-of-2 microbatch split keeping per-device activation
+    rows (tokens × d_model) under ``target_elems`` (≈64 MB bf16/layer)."""
+    local_batch = max(shape.global_batch // data_shards, 1)
+    tokens_per_dev = local_batch * shape.seq_len
+    accum = 1
+    while (accum < local_batch
+           and shape.global_batch % (accum * 2) == 0
+           and tokens_per_dev // accum * cfg.d_model > target_elems):
+        accum *= 2
+    return max(accum, 1)
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        return model.loss(params, batch)
+    return eval_step

@@ -1,0 +1,27 @@
+import numpy as np
+import pytest
+
+from repro.data.synthetic import synthetic_corpus
+
+
+@pytest.fixture(scope="session")
+def tiny_corpus():
+    """~1.2k tokens, 40 docs, V=120, planted 8-topic structure."""
+    corpus, phi, theta = synthetic_corpus(
+        num_docs=40, vocab_size=120, num_topics=8, doc_len=30, seed=0)
+    return corpus, phi, theta
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    """~6k tokens, 120 docs, V=400 — big enough for convergence ordering."""
+    corpus, phi, theta = synthetic_corpus(
+        num_docs=120, vocab_size=400, num_topics=10, doc_len=50, seed=7)
+    return corpus, phi, theta
+
+
+def make_random_counts(rng, num_docs, vocab, topics, tokens):
+    doc = rng.integers(0, num_docs, tokens).astype(np.int32)
+    word = rng.integers(0, vocab, tokens).astype(np.int32)
+    z = rng.integers(0, topics, tokens).astype(np.int32)
+    return doc, word, z

@@ -1,0 +1,30 @@
+"""Count-state construction and invariants."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.counts import build_counts, check_invariants, model_bytes
+
+
+@given(st.integers(1, 500), st.integers(1, 30), st.integers(1, 20),
+       st.integers(2, 12), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_build_counts_invariants(n, d, v, k, seed):
+    rng = np.random.default_rng(seed)
+    doc = rng.integers(0, d, n)
+    word = rng.integers(0, v, n)
+    z = rng.integers(0, k, n)
+    state = build_counts(doc, word, z, d, v, k)
+    check_invariants(state, n)
+    # row sums
+    np.testing.assert_array_equal(np.asarray(state.cdk).sum(axis=1),
+                                  np.bincount(doc, minlength=d))
+    np.testing.assert_array_equal(np.asarray(state.ckt).sum(axis=1),
+                                  np.bincount(word, minlength=v))
+
+
+def test_model_bytes_scaling():
+    per1, total = model_bytes(2_500_000, 10_000, num_workers=1)
+    per64, _ = model_bytes(2_500_000, 10_000, num_workers=64)
+    assert total == per1 == 2_500_000 * 10_000 * 4
+    assert per64 == per1 // 64  # the paper's Fig-4a 1/M memory law

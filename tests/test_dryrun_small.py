@@ -1,0 +1,83 @@
+"""Dry-run integration on a tiny 8-device mesh (subprocess, one arch per
+family) — keeps CI honest without the 512-device full sweep."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, AxisType, NamedSharding, PartitionSpec as P
+from repro.configs import get_config, INPUT_SHAPES, shape_applicable
+from repro.models import build_model
+from repro.launch.sharding_rules import (param_shardings, batch_shardings,
+                                         cache_shardings, replicated)
+from repro.launch.input_specs import input_specs
+from repro.models.common import set_activation_sharding
+from repro.train.optimizer import AdamW, AdamWState
+from repro.train.train_step import make_train_step
+import dataclasses
+import numpy as np
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+set_activation_sharding(("data",))
+
+SMALL_SHAPE = dataclasses.replace(INPUT_SHAPES["train_4k"],
+                                  seq_len=256, global_batch=8)
+DEC_SHAPE = dataclasses.replace(INPUT_SHAPES["decode_32k"],
+                                seq_len=512, global_batch=8)
+
+for arch in ["olmo-1b", "qwen2-moe-a2.7b", "hymba-1.5b", "xlstm-350m",
+             "whisper-medium", "llava-next-mistral-7b"]:
+    cfg = dataclasses.replace(
+        get_config(arch).reduced(), num_patch_embeds=min(
+            get_config(arch).num_patch_embeds, 64))
+    model = build_model(cfg)
+    params = model.abstract_params()
+    pshard = param_shardings(cfg, mesh, params)
+    # train
+    bundle = input_specs(cfg, SMALL_SHAPE, model)
+    batch = bundle.args[0]
+    bshard = batch_shardings(cfg, mesh, batch)
+    opt = AdamW()
+    opt_state = jax.eval_shape(opt.init, params)
+    oshard = AdamWState(replicated(mesh, opt_state.step), pshard, pshard)
+    step = make_train_step(model, opt)
+    with jax.set_mesh(mesh):
+        c = jax.jit(step, in_shardings=(pshard, oshard, bshard)).lower(
+            params, opt_state, batch).compile()
+        assert c.cost_analysis().get("flops", 0) > 0
+    # decode
+    bundle = input_specs(cfg, DEC_SHAPE, model)
+    caches, tokens, pos = bundle.args[:3]
+    enc = bundle.args[3] if len(bundle.args) > 3 else None
+    cshard = cache_shardings(cfg, mesh, caches)
+    tsh = batch_shardings(cfg, mesh, {"t": tokens, "p": pos})
+    in_sh = [pshard, cshard, tsh["t"], tsh["p"]]
+    args = [params, caches, tokens, pos]
+    if enc is not None:
+        in_sh.append(batch_shardings(cfg, mesh, {"e": enc})["e"])
+        args.append(enc)
+    def decode(params, caches, tokens, pos, *rest, _m=model):
+        return _m.decode_step(params, caches, tokens, pos, *rest)
+    with jax.set_mesh(mesh):
+        jax.jit(decode, in_shardings=tuple(in_sh)).lower(*args).compile()
+    print(arch, "OK", flush=True)
+print("SMALL_DRYRUN_OK")
+"""
+
+
+@pytest.mark.slow
+def test_small_mesh_dryrun_all_families():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    assert "SMALL_DRYRUN_OK" in out.stdout

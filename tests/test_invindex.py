@@ -1,0 +1,48 @@
+"""Inverted-index layout properties (paper §4.2)."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.invindex import (build_inverted_index, gather_assignments,
+                                 scatter_assignments)
+from repro.core.schedule import partition_vocab
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 300), st.integers(1, 50),
+       st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_inverted_index_roundtrip(seed, n, v, m):
+    rng = np.random.default_rng(seed)
+    doc = rng.integers(0, 10, n).astype(np.int32)
+    word = rng.integers(0, v, n).astype(np.int32)
+    part = partition_vocab(v, m)
+    idx = build_inverted_index(doc, word, part)
+    # every real token appears exactly once
+    assert int(idx.mask.sum()) == n
+    tids = np.sort(idx.token_id[idx.mask])
+    np.testing.assert_array_equal(tids, np.arange(n))
+    # block purity: tokens in row b belong to block b
+    for b in range(m):
+        msk = idx.mask[b]
+        if msk.any():
+            np.testing.assert_array_equal(
+                part.block_of_word(idx.word[b][msk]), b)
+    # word-major within block (the cache-friendly order)
+    for b in range(m):
+        w = idx.word[b][idx.mask[b]]
+        assert (np.diff(w) >= 0).all()
+    # z scatter/gather roundtrip
+    z = rng.integers(0, 7, n).astype(np.int32)
+    z_blocks = gather_assignments(idx, z)
+    z_back = scatter_assignments(idx, z_blocks, n)
+    np.testing.assert_array_equal(z_back, z)
+
+
+def test_common_capacity_padding():
+    rng = np.random.default_rng(0)
+    doc = rng.integers(0, 5, 100).astype(np.int32)
+    word = rng.integers(0, 20, 100).astype(np.int32)
+    part = partition_vocab(20, 4)
+    idx = build_inverted_index(doc, word, part, capacity=64)
+    assert idx.capacity == 64
+    assert int(idx.mask.sum()) == 100

@@ -1,0 +1,163 @@
+"""Unit tests for the model substrate: attention, SSD mixers, MoE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.attention import (_causal_window_mask, chunked_mha, mha)
+from repro.models.common import KeyGen
+from repro.models.moe import moe_layer, moe_layer_dense_ref, moe_params
+from repro.models.ssd import (mamba_decode, mamba_init_state, mamba_mixer,
+                              mamba_params, mlstm_decode, mlstm_init_state,
+                              mlstm_mixer, mlstm_params, slstm_decode,
+                              slstm_init_state, slstm_params, slstm_scan,
+                              ssd_chunked, ssd_decode_step, ssd_ref)
+
+
+# -- attention ---------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [0, 5, 64, 1000])
+@pytest.mark.parametrize("t", [64, 96, 256])
+def test_chunked_equals_naive_attention(window, t):
+    rng = np.random.default_rng(t + window)
+    b, h, hd = 2, 3, 16
+    q = jnp.asarray(rng.normal(size=(b, t, h, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, t, h, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, t, h, hd)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(t), (b, t)).astype(jnp.int32)
+    mask = _causal_window_mask(pos, pos, jnp.int32(window))[:, None]
+    out_naive = mha(q, k, v, mask)
+    out_chunk = chunked_mha(q, k, v, pos, pos, jnp.int32(window),
+                            q_chunk=32, k_chunk=32)
+    np.testing.assert_allclose(np.asarray(out_naive), np.asarray(out_chunk),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_window_mask_properties():
+    pos = jnp.arange(10)[None]
+    m = np.asarray(_causal_window_mask(pos, pos, jnp.int32(3))[0])
+    assert not m[2, 5]          # no future
+    assert m[5, 5] and m[5, 3]  # self + within window
+    assert not m[5, 2]          # outside window
+    m_global = np.asarray(_causal_window_mask(pos, pos, jnp.int32(0))[0])
+    assert m_global[9, 0]       # global causal sees everything behind
+
+
+# -- SSD ----------------------------------------------------------------------
+
+@given(st.integers(0, 1000), st.sampled_from([32, 64, 128]),
+       st.sampled_from([16, 32]))
+@settings(max_examples=8, deadline=None)
+def test_ssd_chunked_matches_quadratic_ref(seed, t, chunk):
+    rng = np.random.default_rng(seed)
+    b, h, dk, dv = 2, 2, 8, 12
+    q = jnp.asarray(rng.normal(size=(b, t, h, dk)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, t, h, dk)).astype(np.float32)) * 0.2
+    v = jnp.asarray(rng.normal(size=(b, t, h, dv)).astype(np.float32))
+    g = jnp.asarray(-rng.random((b, t, h)).astype(np.float32))
+    out = ssd_chunked(q, k, v, g, chunk=chunk)
+    ref = ssd_ref(q, k, v, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_decode_matches_ref():
+    rng = np.random.default_rng(0)
+    b, t, h, dk, dv = 1, 32, 2, 4, 6
+    q = jnp.asarray(rng.normal(size=(b, t, h, dk)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, t, h, dk)).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.normal(size=(b, t, h, dv)).astype(np.float32))
+    g = jnp.asarray(-rng.random((b, t, h)).astype(np.float32))
+    ref = np.asarray(ssd_ref(q, k, v, g))
+    state = jnp.zeros((b, h, dk, dv))
+    for i in range(t):
+        y, state = ssd_decode_step(state, q[:, i], k[:, i], v[:, i], g[:, i])
+        np.testing.assert_allclose(np.asarray(y), ref[:, i], rtol=1e-4,
+                                   atol=1e-4)
+
+
+def _decode_vs_scan(mixer_full, mixer_step, state0, t):
+    """Full-sequence mixer output must equal step-by-step decode."""
+    full = np.asarray(mixer_full())
+    state = state0
+    for i in range(t):
+        y, state = mixer_step(i, state)
+        np.testing.assert_allclose(np.asarray(y)[:, 0], full[:, i],
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_mamba_decode_consistency():
+    rng = np.random.default_rng(1)
+    keys = KeyGen(0)
+    b, t, d, h, hd, ds = 2, 16, 32, 4, 8, 8
+    p = mamba_params(keys, d, h, hd, ds)
+    x = jnp.asarray(rng.normal(size=(b, t, d)).astype(np.float32)) * 0.3
+    _decode_vs_scan(
+        lambda: mamba_mixer(p, x, h, hd, ds, chunk=8),
+        lambda i, s: mamba_decode(p, s, x[:, i:i + 1], h, hd, ds),
+        mamba_init_state(b, h, hd, ds), t)
+
+
+def test_mlstm_decode_consistency():
+    rng = np.random.default_rng(2)
+    keys = KeyGen(0)
+    b, t, d, h, hd = 2, 16, 32, 2, 16
+    p = mlstm_params(keys, d, h, hd)
+    x = jnp.asarray(rng.normal(size=(b, t, d)).astype(np.float32)) * 0.3
+    _decode_vs_scan(
+        lambda: mlstm_mixer(p, x, h, hd, chunk=8),
+        lambda i, s: mlstm_decode(p, s, x[:, i:i + 1], h, hd),
+        mlstm_init_state(b, h, hd), t)
+
+
+def test_slstm_decode_consistency():
+    rng = np.random.default_rng(3)
+    keys = KeyGen(0)
+    b, t, d = 2, 12, 24
+    p = slstm_params(keys, d)
+    x = jnp.asarray(rng.normal(size=(b, t, d)).astype(np.float32)) * 0.3
+    _decode_vs_scan(
+        lambda: slstm_scan(p, x),
+        lambda i, s: slstm_decode(p, s, x[:, i:i + 1]),
+        slstm_init_state(b, d), t)
+
+
+# -- MoE -----------------------------------------------------------------------
+
+@given(st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_moe_matches_dense_ref_with_ample_capacity(seed):
+    keys = KeyGen(seed)
+    p = moe_params(keys, 32, 64, 4, num_shared=1, shared_d_ff=64)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, 8, 32)).astype(np.float32))
+    y, aux = moe_layer(p, x, 4, 2, capacity_factor=4.0)
+    y_ref = moe_layer_dense_ref(p, x, 4, 2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    assert float(aux) >= 0.99  # balance loss >= 1 at optimum (=E·1/E·1/E·E)
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    keys = KeyGen(0)
+    p = moe_params(keys, 32, 64, 4)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 16, 32)).astype(np.float32))
+    y_tight, _ = moe_layer(p, x, 4, 2, capacity_factor=0.25)
+    assert np.isfinite(np.asarray(y_tight)).all()
+    # dropped tokens produce zero expert output (residual passthrough lives
+    # in the transformer block, not here)
+    y_ample, _ = moe_layer(p, x, 4, 2, capacity_factor=8.0)
+    assert np.abs(np.asarray(y_tight)).sum() < np.abs(np.asarray(y_ample)).sum()
+
+
+def test_moe_grad_finite():
+    keys = KeyGen(1)
+    p = moe_params(keys, 32, 64, 4)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(2, 8, 32)).astype(np.float32))
+    g = jax.grad(lambda pp: moe_layer(pp, x, 4, 2)[0].sum())(p)
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert np.isfinite(np.asarray(leaf)).all()

@@ -1,0 +1,62 @@
+"""Rotation-schedule properties (paper Algorithm 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import schedule as sched
+
+
+@given(st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_schedule_is_latin_square(m):
+    sched.validate_schedule(m)
+
+
+@given(st.integers(1, 64), st.integers(0, 200))
+@settings(max_examples=50, deadline=None)
+def test_owner_block_inverse(m, r):
+    for w in range(m):
+        b = sched.block_for(w, r, m)
+        assert sched.owner_for(b, r, m) == w
+
+
+@given(st.integers(1, 1000), st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_partition_covers_vocab(v, m):
+    p = sched.partition_vocab(v, m)
+    assert p.padded_vocab >= v
+    assert p.block_size * m == p.padded_vocab
+    words = np.arange(v)
+    blocks = p.block_of_word(words)
+    offs = p.word_offset_in_block(words)
+    assert (blocks >= 0).all() and (blocks < m).all()
+    assert (offs >= 0).all() and (offs < p.block_size).all()
+    # bijection: (block, offset) identifies the word
+    recon = blocks * p.block_size + offs
+    np.testing.assert_array_equal(recon, words)
+
+
+def test_rotation_permutation_is_ring():
+    perm = sched.rotation_permutation(8)
+    srcs = sorted(s for s, _ in perm)
+    dsts = sorted(d for _, d in perm)
+    assert srcs == list(range(8)) and dsts == list(range(8))
+    # after 8 applications every block returns home
+    loc = list(range(8))
+    mapping = dict(perm)
+    for _ in range(8):
+        loc = [mapping[x] for x in loc]
+    assert loc == list(range(8))
+
+
+def test_rotation_matches_schedule_table():
+    m = 6
+    table = sched.schedule_table(m)
+    # applying the ppermute (block moves m -> m-1) to round r's layout
+    # must produce round r+1's layout
+    for r in range(m - 1):
+        moved = np.empty(m, int)
+        for src, dst in sched.rotation_permutation(m):
+            moved[dst] = table[r, src]
+        np.testing.assert_array_equal(moved, table[r + 1])

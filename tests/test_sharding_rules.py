@@ -1,0 +1,56 @@
+"""Sharding-rule logic against a stub mesh (no devices needed)."""
+import dataclasses
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding_rules as sr
+
+
+@dataclasses.dataclass
+class StubMesh:
+    shape: dict
+
+
+MESH = StubMesh({"data": 16, "model": 16})
+MESH3 = StubMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("spec,shape,expect", [
+    (P("data", "model"), (32, 64), ("data", "model")),
+    (P("data", "model"), (25, 64), (None, "model")),      # 25 % 16 != 0
+    (P("data", "model"), (32, 60), ("data", None)),       # 60 % 16 != 0
+    (P(("pod", "data"), None), (64, 7), (("pod", "data"), None)),
+    (P(("pod", "data"), None), (16, 7), ("pod", None)),   # falls to 1 axis
+    (P(None, "model"), (5, 128), (None, "model")),
+])
+def test_sanitize(spec, shape, expect):
+    mesh = MESH3 if any("pod" in str(a) for a in tuple(spec)) else MESH
+    out = sr.sanitize(mesh, spec, shape)
+    assert tuple(out) == tuple(expect), (spec, shape, out)
+
+
+def test_sanitize_pads_missing_dims():
+    out = sr.sanitize(MESH, P("model"), (32, 64, 128))
+    assert tuple(out) == ("model", None, None)
+
+
+def test_axes_size():
+    assert sr._axes_size(MESH3, ("pod", "data")) == 32
+    assert sr._axes_size(MESH, "model") == 16
+    assert sr._axes_size(MESH, None) == 1
+
+
+def test_hymba_exact_heads_survive():
+    """25 heads / 60 experts: the exact public configs must sanitize to
+    legal (if less parallel) shardings rather than erroring."""
+    # wq [d, H*hd] = [1600, 1600]: both divisible by 16
+    assert tuple(sr.sanitize(MESH, P(None, "data", "model"),
+                             (32, 1600, 1600))) == (None, "data", "model")
+    # dt_proj out dim 25: model axis dropped
+    assert tuple(sr.sanitize(MESH, P(None, "data", "model"),
+                             (32, 1600, 25))) == (None, "data", None)
+    # qwen2 60 experts: expert dim unsharded, ffn dim over model
+    assert tuple(sr.sanitize(MESH, P(None, "model", "data", None),
+                             (24, 60, 2048, 1408))) == (None, None, "data",
+                                                        None)
