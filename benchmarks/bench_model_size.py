@@ -1,12 +1,16 @@
 """Paper Table 1: model-size feasibility and time-to-converge.
 
-Two parts:
+Three parts:
   (a) feasibility arithmetic at the paper's true scales (Pubmed/Wiki
-      unigram/bigram × K) — per-worker model bytes under MP (V·K/M) vs DP
-      (V·K), against the paper's 8 GB low-end node (and the v5e 16 GB HBM
-      of the target deployment);
+      unigram/bigram × K) — per-worker model bytes under MP (V·K/(S·M))
+      vs DP (V·K), against the paper's 8 GB low-end node (and the v5e
+      16 GB HBM of the target deployment), swept over the
+      ``blocks_per_worker`` pipeline depth S;
   (b) measured time-to-target-likelihood on a scaled-down grid of model
-      sizes, MP vs DP, on this container.
+      sizes, MP vs DP, on this container;
+  (c) measured ``blocks_per_worker`` sweep: peak resident block bytes vs
+      total model bytes (asserting the ceil(V/(S·M))×K law) and the
+      per-iteration cost of deeper pipelining.
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ from repro.data.synthetic import synthetic_corpus
 NODE_RAM = 8 * 2 ** 30          # paper's low-end cluster node
 V5E_HBM = 16 * 2 ** 30          # target chip
 WORKERS = 64                    # paper's Table-1 cluster size
+BLOCK_SWEEP = (1, 2, 4)         # blocks_per_worker (S) pipeline depths
 
 
 def feasibility():
@@ -40,12 +45,52 @@ def feasibility():
             "dense_total_gib": round(total / 2 ** 30, 2),
             "dense_dp_per_worker_gib": round(per_dp / 2 ** 30, 2),
             "dense_mp_per_worker_gib": round(per_mp / 2 ** 30, 2),
+            # resident block under an S-deep pipeline: V·K/(S·M) — the
+            # model-capacity lever independent of worker count
+            "dense_mp_resident_gib_by_s": {
+                s: round(model_bytes(cfg.vocab_size, cfg.num_topics,
+                                     WORKERS,
+                                     blocks_per_worker=s)[0] / 2 ** 30, 3)
+                for s in BLOCK_SWEEP},
             "sparse_dp_per_worker_gib": round(sparse_total / 2 ** 30, 2),
             "sparse_mp_per_worker_gib": round(
                 sparse_total / WORKERS / 2 ** 30, 3),
             "dp_fits_8gb_node_sparse": sparse_total < NODE_RAM,
             "mp_fits_8gb_node_sparse": sparse_total / WORKERS < NODE_RAM,
             "mp_fits_v5e_dense": per_mp * 64 / 256 < V5E_HBM,
+        })
+    return rows
+
+
+def pipeline_sweep(seed=0, workers=8):
+    """Measured S sweep: peak resident block bytes vs total model bytes.
+
+    Asserts the resident-memory law the refactor exists for — the block a
+    worker actively holds is exactly ``ceil(V/(S·M)) × K`` int32 rows —
+    and reports the wall-clock cost of the deeper rotation."""
+    vocab, topics = 1600, 32
+    corpus, _, _ = synthetic_corpus(250, vocab, topics, 50, seed=seed)
+    total_bytes = vocab * topics * 4
+    rows = []
+    for s in BLOCK_SWEEP:
+        lda = ModelParallelLDA(corpus, topics, workers, seed=seed,
+                               blocks_per_worker=s)
+        rep = lda.memory_report()
+        vb = -(-vocab // (s * workers))
+        assert lda.resident_block_rows == vb, (s, lda.resident_block_rows)
+        assert rep["resident_block_bytes"] == vb * topics * 4, rep
+        t0 = time.time()
+        lda.run(3)
+        rows.append({
+            "blocks_per_worker": s,
+            "num_blocks": rep["num_blocks"],
+            "resident_block_shape": list(rep["resident_block_shape"]),
+            "peak_resident_block_bytes": rep["resident_block_bytes"],
+            "total_model_bytes": total_bytes,
+            "resident_fraction": round(
+                rep["resident_block_bytes"] / total_bytes, 4),
+            "seconds_3_iters": round(time.time() - t0, 2),
+            "log_likelihood": lda.log_likelihood(),
         })
     return rows
 
@@ -79,15 +124,19 @@ def measured(seed=0):
 
 def run():
     out = {"feasibility_paper_scale": feasibility(),
-           "measured_scaled_down": measured()}
+           "measured_scaled_down": measured(),
+           "blocks_per_worker_sweep": pipeline_sweep()}
     save_result("table1_model_size", out)
     big = out["feasibility_paper_scale"][-1]
     m = out["measured_scaled_down"][-1]
+    deep = out["blocks_per_worker_sweep"][-1]
     emit_csv_row("table1_model_size", m["mp"]["seconds"] * 1e6,
                  f"bigram10k_dp_dense_gib={big['dense_dp_per_worker_gib']};"
                  f"mp_dense_gib={big['dense_mp_per_worker_gib']};"
                  f"mp_sparse_fits_8gb={big['mp_fits_8gb_node_sparse']};"
-                 f"mp_iters={m['mp']['iters']};dp_iters={m['dp']['iters']}")
+                 f"mp_iters={m['mp']['iters']};dp_iters={m['dp']['iters']};"
+                 f"s{deep['blocks_per_worker']}_resident_frac="
+                 f"{deep['resident_fraction']}")
     return out
 
 

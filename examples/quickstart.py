@@ -38,3 +38,16 @@ for k in range(8):
 score = topic_recovery_score(ckt, true_phi)
 print(f"topic recovery vs planted topics: {score:.3f} (1.0 = perfect)")
 assert score > 0.5
+
+# 5. Model capacity beyond worker RAM: pipeline S blocks per worker —
+#    the resident block shrinks S-fold at the same worker count while
+#    inference stays exact (DESIGN.md §3).
+deep = ModelParallelLDA(corpus, num_topics=8, num_workers=4,
+                        alpha=0.1, beta=0.01, seed=1, blocks_per_worker=4)
+rep = deep.memory_report()
+print(f"\nblocks_per_worker=4: {rep['num_blocks']} blocks, resident block "
+      f"{rep['resident_block_shape']} = {rep['resident_block_bytes']:,} B "
+      f"of a {rep['total_model_bytes']:,} B model")
+deep.run(5)
+print(f"pipelined engine log-likelihood after 5 iters: "
+      f"{deep.log_likelihood():,.0f}")

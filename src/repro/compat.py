@@ -1,0 +1,145 @@
+"""JAX version compatibility layer (DESIGN.md §7).
+
+The repo targets the newest JAX API surface (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.set_mesh``) but must run on
+whatever JAX the container bakes in.  Every version-sensitive construct is
+resolved HERE, once, so the engine (`core/engine`) and the launch layer
+(`launch/*`) share one set of fallbacks instead of sprinkling try/except
+at call sites.
+
+Resolution order, newest first:
+
+* ``shard_map``  — ``jax.shard_map`` -> ``jax.experimental.shard_map``;
+  the ``check_vma=`` kwarg (new name) is translated to ``check_rep=``
+  (old name) when falling back.
+* ``make_mesh``  — ``jax.make_mesh`` with ``axis_types`` dropped when the
+  installed signature does not accept it (older JAX treats every axis as
+  Auto anyway, which is what the callers want); final fallback builds a
+  ``Mesh`` from ``jax.devices()`` directly.
+* ``set_mesh``   — ``jax.set_mesh`` -> ``jax.sharding.use_mesh`` -> the
+  ``Mesh`` object's own context manager.
+* ``AxisType``   — re-exported when present, else a minimal stand-in with
+  the ``Auto``/``Explicit``/``Manual`` members callers name.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import inspect
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["AxisType", "cost_analysis_dict", "make_mesh", "set_mesh",
+           "shard_map"]
+
+
+# ---------------------------------------------------------------------------
+# AxisType
+# ---------------------------------------------------------------------------
+
+try:  # JAX >= 0.5-era explicit-sharding API
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stand-in for ``jax.sharding.AxisType`` on older JAX.
+
+        Old JAX has no axis-type concept — every mesh axis behaves like
+        ``Auto`` — so the members only need to exist for callers that pass
+        ``axis_types=(AxisType.Auto, ...)`` through :func:`make_mesh`.
+        """
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+def _resolve_shard_map():
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn, True
+    from jax.experimental.shard_map import shard_map as exp_shard_map
+    return exp_shard_map, False
+
+
+_SHARD_MAP, _SHARD_MAP_IS_TOPLEVEL = _resolve_shard_map()
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_SHARD_MAP).parameters)
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None, **kwargs):
+    """Version-portable ``shard_map``.
+
+    Accepts the modern keyword set; translates ``check_vma`` to the old
+    ``check_rep`` spelling and drops keywords the resolved implementation
+    does not know (they are semantic no-ops on those versions).
+    """
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    kwargs = {k: v for k, v in kwargs.items() if k in _SHARD_MAP_PARAMS}
+    return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# make_mesh
+# ---------------------------------------------------------------------------
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, axis_types: Any = None, devices=None) -> Mesh:
+    """``jax.make_mesh`` accepting ``axis_types`` on every JAX version."""
+    native = getattr(jax, "make_mesh", None)
+    if native is not None:
+        params = inspect.signature(native).parameters
+        kw = {}
+        if devices is not None and "devices" in params:
+            kw["devices"] = devices
+        if axis_types is not None and "axis_types" in params:
+            kw["axis_types"] = axis_types
+        return native(tuple(axis_shapes), tuple(axis_names), **kw)
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    n = int(np.prod(axis_shapes))
+    return Mesh(devs[:n].reshape(tuple(axis_shapes)), tuple(axis_names))
+
+
+# ---------------------------------------------------------------------------
+# cost_analysis
+# ---------------------------------------------------------------------------
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every JAX version.
+
+    Older JAX returns a one-element list of per-program dicts; newer JAX
+    returns the dict directly (and may return ``None`` for trivial
+    programs).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+# ---------------------------------------------------------------------------
+# set_mesh
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def _mesh_ctx(mesh: Mesh):
+    with mesh:
+        yield mesh
+
+
+def set_mesh(mesh: Mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    native = getattr(jax, "set_mesh", None)
+    if native is not None:
+        return native(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return _mesh_ctx(mesh)

@@ -94,12 +94,18 @@ def counts_equal(a: CountState, b: CountState) -> bool:
 
 
 def model_bytes(vocab_size: int, num_topics: int,
-                num_workers: int = 1, dtype_bytes: int = 4) -> Tuple[int, int]:
-    """(per-worker, total) bytes of the word-topic table — Table 1 / Fig 4a math.
+                num_workers: int = 1, dtype_bytes: int = 4,
+                blocks_per_worker: int = 1) -> Tuple[int, int]:
+    """(per-worker resident, total) bytes of the word-topic table —
+    Table 1 / Fig 4a math.
 
-    Model-parallel workers hold one ``V/M`` block; a data-parallel worker
+    Model-parallel workers hold one ``ceil(V/(S·M))``-row block resident
+    at a time (``S = blocks_per_worker`` pipelines ``S·M`` blocks through
+    ``M`` workers, DESIGN.md §3) — the same padded-block size the engine
+    allocates (``VocabPartition.block_size``); a data-parallel worker
     holds the full table.
     """
     total = vocab_size * num_topics * dtype_bytes
-    per_worker = total // num_workers
+    rows = -(-vocab_size // (num_workers * blocks_per_worker))  # ceil
+    per_worker = rows * num_topics * dtype_bytes
     return per_worker, total

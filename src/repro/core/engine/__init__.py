@@ -1,0 +1,27 @@
+"""Model-parallel LDA engine package (DESIGN.md §2–§3).
+
+Layout:
+
+* ``state.py``    — :class:`MPState` (slot-queue per-worker state) plus
+  layout construction, initialization, and gather/observation helpers;
+* ``rounds.py``   — the shared per-(worker, round) sampling step and the
+  sampler registry both backends draw from;
+* ``backends.py`` — the two bit-identical execution backends
+  (``vmap`` single-device batch, ``shard_map`` one-worker-per-device);
+* ``api.py``      — the :class:`ModelParallelLDA` facade.
+
+``repro.core.model_parallel`` re-exports the public names so pre-package
+imports keep working.
+"""
+from repro.core.engine.api import ModelParallelLDA
+from repro.core.engine.backends import (iteration_vmap,
+                                        make_shard_map_iteration)
+from repro.core.engine.rounds import (available_samplers, register_sampler,
+                                      resolve_sampler, worker_round)
+from repro.core.engine.state import EngineLayout, MPState
+
+__all__ = [
+    "EngineLayout", "ModelParallelLDA", "MPState", "available_samplers",
+    "iteration_vmap", "make_shard_map_iteration", "register_sampler",
+    "resolve_sampler", "worker_round",
+]

@@ -1,0 +1,207 @@
+"""Public engine facade: :class:`ModelParallelLDA` (the paper's full
+system, generalized to ``S`` blocks per worker — DESIGN.md §2–§3).
+
+Example::
+
+    lda = ModelParallelLDA(corpus, num_topics=64, num_workers=8,
+                           blocks_per_worker=4)   # 32-block pipeline
+    history = lda.run(num_iterations=50)
+    state = lda.gather_counts()
+
+``blocks_per_worker`` (``S``) is the model-capacity lever: the resident
+word-topic block per worker is ``ceil(V / (S·M)) × K`` rows, so growing
+``S`` shrinks the per-worker resident model without adding workers —
+the paper's "model size exceeds any single node's RAM" claim as a tunable.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.counts import CountState
+from repro.core.engine import state as engine_state
+from repro.core.engine.backends import (iteration_vmap,
+                                        make_shard_map_iteration)
+from repro.core.likelihood import doc_log_likelihood, word_log_likelihood
+from repro.data.corpus import Corpus
+
+
+class ModelParallelLDA:
+    """Model-parallel LDA trainer over an ``S·M``-block pipeline."""
+
+    def __init__(self, corpus: Corpus, num_topics: int, num_workers: int,
+                 alpha: float | np.ndarray = 0.1, beta: float = 0.01,
+                 seed: int = 0, sampler_mode: str = "scan",
+                 sync_ck: bool = True, backend: str = "vmap",
+                 mesh: Optional[Mesh] = None, axis: str = "w",
+                 blocks_per_worker: int = 1):
+        corpus.validate()
+        if blocks_per_worker < 1:
+            raise ValueError(
+                f"blocks_per_worker must be >= 1, got {blocks_per_worker}")
+        self.corpus = corpus
+        self.num_topics = int(num_topics)
+        self.num_workers = int(num_workers)
+        self.blocks_per_worker = int(blocks_per_worker)
+        self.alpha = jnp.full((num_topics,), alpha, jnp.float32) \
+            if np.isscalar(alpha) else jnp.asarray(alpha, jnp.float32)
+        self.beta = float(beta)
+        self.vbeta = float(beta * corpus.vocab_size)
+        self.sampler_mode = sampler_mode
+        self.sync_ck = bool(sync_ck)
+        self.backend = backend
+        self.axis = axis
+        self._rng = np.random.default_rng(seed)
+        self._build()
+        if backend == "shard_map":
+            if mesh is None:
+                devs = np.array(jax.devices()[:num_workers])
+                if devs.size < num_workers:
+                    raise ValueError(
+                        f"shard_map backend needs {num_workers} devices, "
+                        f"have {len(jax.devices())}")
+                mesh = Mesh(devs, (axis,))
+            self.mesh = mesh
+            self._iter_fn = make_shard_map_iteration(
+                mesh, axis, sampler_mode, sync_ck)
+        else:
+            self.mesh = None
+            self._iter_fn = None
+
+    # -- construction ------------------------------------------------------
+    def _build(self) -> None:
+        self.layout = engine_state.build_layout(
+            self.corpus, self.num_workers, self.blocks_per_worker)
+        z0 = self._rng.integers(
+            0, self.num_topics, size=self.corpus.num_tokens).astype(np.int32)
+        self.z_init = z0
+        self.state = engine_state.init_state(self.layout, self.num_topics,
+                                             z0)
+        self.iteration_count = 0
+
+    # -- layout views (kept as attributes of the facade) -------------------
+    @property
+    def partition(self):
+        return self.layout.partition
+
+    @property
+    def shards(self):
+        return self.layout.shards
+
+    @property
+    def indexes(self):
+        return self.layout.indexes
+
+    @property
+    def capacity(self) -> int:
+        return self.layout.capacity
+
+    @property
+    def doc(self):
+        return self.layout.doc
+
+    @property
+    def woff(self):
+        return self.layout.woff
+
+    @property
+    def mask(self):
+        return self.layout.mask
+
+    @property
+    def num_blocks(self) -> int:
+        return self.layout.num_blocks
+
+    @property
+    def num_rounds(self) -> int:
+        return self.layout.num_rounds
+
+    @property
+    def resident_block_rows(self) -> int:
+        """``ceil(V / (S·M))`` — rows of the block a worker actively holds."""
+        return self.layout.resident_block_rows
+
+    def memory_report(self) -> dict:
+        """Resident-vs-total model bytes (the paper's capacity claim)."""
+        k = self.num_topics
+        vb = self.resident_block_rows
+        return {
+            "num_workers": self.num_workers,
+            "blocks_per_worker": self.blocks_per_worker,
+            "num_blocks": self.num_blocks,
+            "resident_block_shape": (vb, k),
+            "resident_block_bytes": vb * k * 4,
+            "parked_bytes_per_worker": (self.blocks_per_worker - 1)
+            * vb * k * 4,
+            "total_model_bytes": self.corpus.vocab_size * k * 4,
+        }
+
+    # -- stepping ----------------------------------------------------------
+    def _uniforms(self) -> jax.Array:
+        b, m, cap = self.num_rounds, self.num_workers, self.capacity
+        u = self._rng.random((b, m, cap), np.float32)  # [rounds, workers, T]
+        return jnp.asarray(u)
+
+    def step(self) -> None:
+        """Run one iteration (= S·M rounds, every token sampled once)."""
+        u = self._uniforms()
+        if self.backend == "vmap":
+            self.state, errs = iteration_vmap(
+                self.state, u, self.doc, self.woff, self.mask,
+                self.alpha, jnp.float32(self.beta), jnp.float32(self.vbeta),
+                sampler_mode=self.sampler_mode, sync_ck=self.sync_ck)
+        else:
+            s = self.state
+            out = self._iter_fn(
+                s.cdk, s.ckt, s.block_id, s.ck_synced, s.ck_local, s.z,
+                jnp.swapaxes(u, 0, 1), self.doc, self.woff, self.mask,
+                self.alpha, jnp.float32(self.beta), jnp.float32(self.vbeta))
+            self.state = engine_state.MPState(*out[:6])
+            errs = out[6]
+        self.round_errors = np.asarray(errs).reshape(-1)
+        self.iteration_count += 1
+
+    def run(self, num_iterations: int,
+            callback: Optional[Callable[[int, "ModelParallelLDA"],
+                                        None]] = None,
+            eval_every: int = 1) -> List[dict]:
+        history = []
+        for i in range(num_iterations):
+            self.step()
+            if (i + 1) % eval_every == 0:
+                history.append({"iteration": self.iteration_count,
+                                "log_likelihood": self.log_likelihood()})
+            if callback is not None:
+                callback(i, self)
+        return history
+
+    # -- observation -------------------------------------------------------
+    def gather_counts(self) -> CountState:
+        """Reassemble the global model (the KV-store "dump")."""
+        return engine_state.gather_counts(self.layout, self.state,
+                                          self.num_topics)
+
+    def assignments(self) -> np.ndarray:
+        """Current z in original token order."""
+        return engine_state.gather_assignments(self.layout, self.state)
+
+    def log_likelihood(self) -> float:
+        state = self.gather_counts()
+        lw = word_log_likelihood(state.ckt, state.ck, self.beta)
+        ld = doc_log_likelihood(state.cdk, self.alpha)
+        return float(lw + ld)
+
+    def delta_error(self) -> float:
+        """Mean pre-sync Δ_{r,i} over the rounds of the last iteration
+        (paper Fig 3).  Falls back to the current post-sync drift if no
+        iteration has run yet."""
+        errs = getattr(self, "round_errors", None)
+        if errs is not None and errs.size:
+            return float(errs.mean())
+        from repro.core.metrics import delta_error
+        return delta_error(self.state.true_ck(),
+                           self.state.local_ck_views())

@@ -1,0 +1,125 @@
+"""The two bit-identical execution backends (DESIGN.md §2–§3).
+
+One iteration = ``B = S·M`` rounds.  Every round each worker samples its
+resident block (slot 0 of its queue), hands exactly that block to ring
+neighbour ``m - 1`` (``ppermute`` — parked slots never travel), and
+enqueues the received block at the tail of its queue, where it surfaces
+``S`` rounds later.  At ``S = 1`` the queue degenerates to the paper's
+original rotation: the received block is resident immediately.
+
+* ``vmap`` backend — the worker axis is a batch axis on one device;
+  ``ppermute`` becomes ``jnp.roll``, ``psum`` a sum.  Runs anywhere, used
+  by tests/benchmarks on the single-CPU container.
+* ``shard_map`` backend — the worker axis is a mesh axis; collectives are
+  real.  This is the production path; on the dry-run mesh the round
+  rotation lowers to HLO ``collective-permute``.
+
+Both backends share :func:`repro.core.engine.rounds.worker_round`, so
+agreement tests are meaningful, and the non-separable topic totals
+``{C_k}`` are synchronized once per round via ``psum`` of per-worker
+deltas and drift in between (§3.3).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
+from repro.core import schedule as sched
+from repro.core.engine.rounds import resolve_sampler, worker_round
+from repro.core.engine.state import MPState
+
+
+@partial(jax.jit, static_argnames=("sampler_mode", "sync_ck"))
+def iteration_vmap(state: MPState, u, doc, woff, mask, alpha, beta, vbeta,
+                   sampler_mode: str = "scan", sync_ck: bool = True):
+    """One full iteration = S·M rounds with rotation, stacked on one device.
+
+    ``u`` is ``[B, M, T]`` — one uniform per (round, worker, token slot).
+    """
+    sampler = resolve_sampler(sampler_mode)
+    round_fn = partial(worker_round, sampler=sampler)
+
+    def round_step(carry, u_r):
+        cdk, ckt, blk, ck_syn, ck_loc, z = carry
+        res_ckt = ckt[:, 0]
+        res_blk = blk[:, 0]
+        cdk, res_ckt, ck_loc, z = jax.vmap(
+            round_fn, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0,
+                               None, None, None))(
+            cdk, res_ckt, res_blk, ck_loc, z, u_r, doc, woff, mask,
+            alpha, beta, vbeta)
+        # rotation m -> m-1: worker m-1 receives worker m's resident block
+        # and parks it at the tail of its queue (immediately resident when
+        # S == 1).  Parked slots shift one toward the head.
+        res_ckt = jnp.roll(res_ckt, -1, axis=0)
+        res_blk = jnp.roll(res_blk, -1, axis=0)
+        ckt = jnp.concatenate([ckt[:, 1:], res_ckt[:, None]], axis=1)
+        blk = jnp.concatenate([blk[:, 1:], res_blk[:, None]], axis=1)
+        # paper Fig-3 error: pre-sync ℓ1 drift of local {C_k} vs true totals
+        ck_true = ck_syn + (ck_loc - ck_syn[None, :]).sum(axis=0)
+        n_tok = jnp.maximum(ck_true.sum(), 1).astype(jnp.float32)
+        err = (jnp.abs(ck_loc - ck_true[None, :]).sum().astype(jnp.float32)
+               / (ck_loc.shape[0] * n_tok))
+        if sync_ck:
+            ck_loc = jnp.broadcast_to(ck_true, ck_loc.shape)
+            ck_syn = ck_true
+        return (cdk, ckt, blk, ck_syn, ck_loc, z), err
+
+    carry = (state.cdk, state.ckt, state.block_id, state.ck_synced,
+             state.ck_local, state.z)
+    carry, errs = jax.lax.scan(round_step, carry, u)
+    return MPState(*carry), errs
+
+
+def make_shard_map_iteration(mesh: Mesh, axis: str, sampler_mode: str,
+                             sync_ck: bool):
+    """Build the jitted per-device iteration function for ``mesh``."""
+    perm = sched.rotation_permutation(mesh.shape[axis])
+    sampler = resolve_sampler(sampler_mode)
+
+    def per_device(cdk, ckt, blk, ck_syn, ck_loc, z, u, doc, woff, mask,
+                   alpha, beta, vbeta):
+        # local shards arrive with a leading worker axis of size 1
+        cdk, ckt, blk, ck_loc, z = (x[0] for x in (cdk, ckt, blk, ck_loc, z))
+        doc, woff, mask, u = (x[0] for x in (doc, woff, mask, u))
+
+        def round_step(carry, u_r):
+            cdk, ckt, blk, ck_syn, ck_loc, z = carry
+            res_ckt = ckt[0]
+            res_blk = blk[0]
+            cdk, res_ckt, ck_loc, z = worker_round(
+                cdk, res_ckt, res_blk, ck_loc, z, u_r, doc, woff, mask,
+                alpha, beta, vbeta, sampler=sampler)
+            # Algorithm 2 commit+request: ONLY the resident block travels —
+            # per-round traffic stays one [Vb, K] block per worker no
+            # matter how large S makes the total model.
+            res_ckt = jax.lax.ppermute(res_ckt, axis, perm)
+            res_blk = jax.lax.ppermute(res_blk, axis, perm)
+            ckt = jnp.concatenate([ckt[1:], res_ckt[None]], axis=0)
+            blk = jnp.concatenate([blk[1:], res_blk[None]], axis=0)
+            ck_true = ck_syn + jax.lax.psum(ck_loc - ck_syn, axis)
+            n_tok = jnp.maximum(ck_true.sum(), 1).astype(jnp.float32)
+            err = jax.lax.pmean(
+                jnp.abs(ck_loc - ck_true).sum().astype(jnp.float32),
+                axis) / n_tok
+            if sync_ck:
+                ck_loc = ck_true
+                ck_syn = ck_true
+            return (cdk, ckt, blk, ck_syn, ck_loc, z), err
+
+        carry, errs = jax.lax.scan(
+            round_step, (cdk, ckt, blk, ck_syn, ck_loc, z), u)
+        cdk, ckt, blk, ck_syn, ck_loc, z = carry
+        return (cdk[None], ckt[None], blk[None], ck_syn, ck_loc[None],
+                z[None], errs)
+
+    w = P(axis)
+    return jax.jit(compat.shard_map(
+        per_device, mesh=mesh,
+        in_specs=(w, w, w, P(), w, w, w, w, w, w, P(), P(), P()),
+        out_specs=(w, w, w, P(), w, w, P()),
+        check_vma=False))

@@ -1,0 +1,89 @@
+"""Per-round worker step and the sampler registry.
+
+``worker_round`` is Algorithm 2 lines 2–5 for ONE worker and ONE round:
+sample the token group of the resident block.  Both execution backends
+(`backends.py`) call this exact function — vmapped over the worker axis or
+per-device under shard_map — which is what makes backend-agreement tests
+bit-exact rather than statistical.
+
+Samplers are pluggable through a registry so new kernels (e.g. an
+alternative Pallas variant) can be added without touching the engine:
+register a factory with :func:`register_sampler` and select it via
+``ModelParallelLDA(..., sampler_mode=<name>)``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict
+
+from repro.core.sampler import sweep_block_batched, sweep_block_scan
+
+# A sampler factory returns fn(cdk, ckt_block, ck, doc, woff, z, mask, u,
+# alpha, beta, vbeta) -> (cdk, ckt_block, ck, z_new).
+_SAMPLERS: Dict[str, Callable[[], Callable]] = {}
+
+
+def register_sampler(name: str):
+    """Decorator registering a sampler factory under ``name``."""
+    def deco(factory: Callable[[], Callable]):
+        _SAMPLERS[name] = factory
+        return factory
+    return deco
+
+
+def resolve_sampler(mode: str) -> Callable:
+    """Instantiate the sampler registered under ``mode``."""
+    try:
+        factory = _SAMPLERS[mode]
+    except KeyError:
+        raise ValueError(
+            f"unknown sampler mode {mode!r}; "
+            f"registered: {sorted(_SAMPLERS)}") from None
+    return factory()
+
+
+def available_samplers() -> list:
+    return sorted(_SAMPLERS)
+
+
+@register_sampler("scan")
+def _scan_sampler():
+    return partial(sweep_block_scan, use_eq3=True)
+
+
+@register_sampler("scan_eq1")
+def _scan_eq1_sampler():
+    return partial(sweep_block_scan, use_eq3=False)
+
+
+@register_sampler("batched")
+def _batched_sampler():
+    def f(cdk, ckt, ck, d, t, z, mk, u, alpha, beta, vbeta):
+        return sweep_block_batched(cdk, ckt, ck, d, t, z, mk, u,
+                                   alpha, beta, vbeta, None)
+    return f
+
+
+@register_sampler("pallas")
+def _pallas_sampler():
+    from repro.kernels.ops import sweep_block_pallas
+    return sweep_block_pallas
+
+
+def worker_round(cdk, ckt_blk, block_id, ck_loc, z_all, u_r,
+                 doc, woff, mask, alpha, beta, vbeta, *, sampler):
+    """One worker, one round: sample the token group of the resident block.
+
+    ``block_id`` (the resident block's id, in ``[0, S·M)``) addresses the
+    per-block token group directly; the "request model block" / "commit
+    model block" steps of Algorithm 2 are the surrounding rotation
+    collective in `backends.py`.
+    """
+    d = doc[block_id]
+    t = woff[block_id]
+    zz = z_all[block_id]
+    mk = mask[block_id]
+    cdk, ckt_blk, ck_loc, z_new = sampler(
+        cdk, ckt_blk, ck_loc, d, t, zz, mk, u_r, alpha, beta, vbeta)
+    z_all = z_all.at[block_id].set(z_new)
+    return cdk, ckt_blk, ck_loc, z_all

@@ -1,0 +1,205 @@
+"""Engine state: per-worker slot queues + construction and gathering.
+
+State layout (DESIGN.md §3).  With ``M`` workers and ``S`` blocks per
+worker the vocabulary is split into ``B = S·M`` blocks; each worker keeps a
+length-``S`` FIFO of ``[Vb, K]`` word-topic blocks.  Slot 0 is the
+*resident* block — the only one touched by compute and the only one that
+travels in the per-round rotation; slots ``1..S-1`` are *parked* (they
+model the paper's distributed key-value store / host offload, where
+non-resident blocks live outside worker RAM).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schedule as sched
+from repro.core.counts import CountState
+from repro.core.invindex import (InvertedIndex, build_inverted_index,
+                                 common_block_capacity, scatter_assignments)
+from repro.data.corpus import Corpus
+from repro.data.sharding import WorkerShard, worker_shard
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MPState:
+    """Stacked per-worker state (leading axis = workers)."""
+
+    cdk: jax.Array        # [M, Dloc, K]
+    ckt: jax.Array        # [M, S, Vb, K] slot queue; slot 0 = resident
+    block_id: jax.Array   # [M, S] which block sits in each slot
+    ck_synced: jax.Array  # [K] totals agreed at last round boundary
+    ck_local: jax.Array   # [M, K] per-worker drifting view (§3.3)
+    z: jax.Array          # [M, B, T] assignments in inverted-index layout
+
+    def tree_flatten(self):
+        return ((self.cdk, self.ckt, self.block_id, self.ck_synced,
+                 self.ck_local, self.z), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -- shape views -------------------------------------------------------
+    @property
+    def num_workers(self) -> int:
+        return self.ckt.shape[0]
+
+    @property
+    def blocks_per_worker(self) -> int:
+        return self.ckt.shape[1]
+
+    @property
+    def resident_ckt(self) -> jax.Array:
+        """[M, Vb, K] — the block each worker is actively sampling."""
+        return self.ckt[:, 0]
+
+    @property
+    def resident_block(self) -> jax.Array:
+        """[M] — id of each worker's resident block."""
+        return self.block_id[:, 0]
+
+    def local_ck_views(self) -> np.ndarray:
+        return np.asarray(self.ck_local)
+
+    def true_ck(self) -> np.ndarray:
+        return np.asarray(self.ck_synced) + (
+            np.asarray(self.ck_local)
+            - np.asarray(self.ck_synced)[None, :]).sum(axis=0)
+
+
+@dataclasses.dataclass
+class EngineLayout:
+    """Static (non-pytree) engine geometry: shards, indexes, partition.
+
+    Built once per ``(corpus, M, S)``; everything here is host-side numpy
+    plus the device-resident token-layout arrays shared by every round.
+    """
+
+    corpus: Corpus
+    num_workers: int
+    blocks_per_worker: int
+    partition: sched.VocabPartition
+    shards: List[WorkerShard]
+    indexes: List[InvertedIndex]
+    capacity: int
+    doc: jax.Array    # [M, B, T] int32
+    woff: jax.Array   # [M, B, T] int32
+    mask: jax.Array   # [M, B, T] bool
+
+    @property
+    def num_blocks(self) -> int:
+        return self.partition.num_blocks
+
+    @property
+    def num_rounds(self) -> int:
+        """Rounds per iteration — every (worker, block) pair meets once."""
+        return self.num_blocks
+
+    @property
+    def resident_block_rows(self) -> int:
+        """Rows of the resident ``ckt`` block: ``ceil(V / (S·M))``."""
+        return self.partition.block_size
+
+
+def build_layout(corpus: Corpus, num_workers: int,
+                 blocks_per_worker: int = 1) -> EngineLayout:
+    """Shard documents, partition the vocabulary into ``S·M`` blocks, and
+    build each worker's per-block inverted index with a common capacity."""
+    num_blocks = num_workers * blocks_per_worker
+    partition = sched.partition_vocab(corpus.vocab_size, num_blocks)
+    sched.validate_schedule(num_workers, blocks_per_worker)
+    shards = [worker_shard(corpus, w, num_workers)
+              for w in range(num_workers)]
+    cap = common_block_capacity((s.word for s in shards), partition)
+    indexes = [build_inverted_index(s.doc_local, s.word, partition, cap)
+               for s in shards]
+    doc = np.stack([i.doc for i in indexes])
+    woff = np.stack([i.word_off for i in indexes])
+    mask = np.stack([i.mask for i in indexes])
+    return EngineLayout(
+        corpus=corpus, num_workers=num_workers,
+        blocks_per_worker=blocks_per_worker, partition=partition,
+        shards=shards, indexes=indexes, capacity=cap,
+        doc=jnp.asarray(doc), woff=jnp.asarray(woff),
+        mask=jnp.asarray(mask))
+
+
+def init_state(layout: EngineLayout, num_topics: int,
+               z0: np.ndarray) -> MPState:
+    """Build the initial :class:`MPState` from token-order assignments.
+
+    Slot-major placement: block ``b = s·M + m`` starts in slot ``s`` of
+    worker ``m`` (``schedule.home_slot``), so at ``S = 1`` worker ``m``
+    opens holding block ``m`` exactly as the original engine did.
+    """
+    m, s_ = layout.num_workers, layout.blocks_per_worker
+    b, k = layout.num_blocks, num_topics
+    part, cap = layout.partition, layout.capacity
+    vb = part.block_size
+    dloc = layout.shards[0].num_local_docs
+
+    cdk = np.zeros((m, dloc, k), np.int32)
+    ckt_blocks = np.zeros((b, vb, k), np.int32)
+    zarr = np.zeros((m, b, cap), np.int32)
+    for w, (shard, idx) in enumerate(zip(layout.shards, layout.indexes)):
+        zz = z0[shard.token_id]
+        np.add.at(cdk[w], (shard.doc_local, zz), 1)
+        blk = part.block_of_word(shard.word)
+        off = part.word_offset_in_block(shard.word)
+        np.add.at(ckt_blocks, (blk, off, zz), 1)
+        real = idx.mask
+        zarr[w][real] = zz[idx.token_id[real]]
+    ck = ckt_blocks.sum(axis=(0, 1)).astype(np.int32)
+
+    # [B, Vb, K] -> [M, S, Vb, K]: block s·M + m into (worker m, slot s)
+    slots = ckt_blocks.reshape(s_, m, vb, k).swapaxes(0, 1)
+    block_id = (np.arange(s_)[None, :] * m
+                + np.arange(m)[:, None]).astype(np.int32)
+    return MPState(
+        cdk=jnp.asarray(cdk),
+        ckt=jnp.asarray(np.ascontiguousarray(slots)),
+        block_id=jnp.asarray(block_id),
+        ck_synced=jnp.asarray(ck),
+        ck_local=jnp.broadcast_to(jnp.asarray(ck), (m, k)),
+        z=jnp.asarray(zarr),
+    )
+
+
+def gather_counts(layout: EngineLayout, state: MPState,
+                  num_topics: int) -> CountState:
+    """Reassemble the global model (the KV-store "dump")."""
+    m, s_ = layout.num_workers, layout.blocks_per_worker
+    vb = layout.partition.block_size
+    v, k = layout.corpus.vocab_size, num_topics
+    ckt_full = np.zeros((layout.num_blocks * vb, k), np.int32)
+    blocks = np.asarray(state.block_id)
+    ckt = np.asarray(state.ckt)
+    for w in range(m):
+        for s in range(s_):
+            blk = int(blocks[w, s])
+            ckt_full[blk * vb:(blk + 1) * vb] = ckt[w, s]
+    ckt_full = ckt_full[:v]
+    cdk_full = np.zeros((layout.corpus.num_docs, k), np.int32)
+    cdk = np.asarray(state.cdk)
+    for w, shard in enumerate(layout.shards):
+        real = shard.doc_global >= 0
+        cdk_full[shard.doc_global[real]] = cdk[w][:real.sum()]
+    ck = ckt_full.sum(axis=0).astype(np.int32)
+    return CountState(jnp.asarray(cdk_full), jnp.asarray(ckt_full),
+                      jnp.asarray(ck))
+
+
+def gather_assignments(layout: EngineLayout, state: MPState) -> np.ndarray:
+    """Current z in original token order."""
+    z = np.zeros(layout.corpus.num_tokens, np.int32)
+    zs = np.asarray(state.z)
+    for w, (shard, idx) in enumerate(zip(layout.shards, layout.indexes)):
+        z_local = scatter_assignments(idx, zs[w], shard.token_id.shape[0])
+        z[shard.token_id] = z_local
+    return z

@@ -1,4 +1,4 @@
-"""Inverted-index corpus layout (paper §4.2).
+"""Inverted-index corpus layout (paper §4.2), grouped per *block*.
 
 Model-parallel rounds touch only the tokens whose word falls in the current
 block.  A bag-of-words (forward) layout would force a scan over all local
@@ -11,13 +11,19 @@ slice by ``(block(word), word, doc)`` so that
     makes the per-word ``coeff``/``sum_k X_k`` cache of eq (3) (and the
     Pallas kernel's VMEM row reuse) effective.
 
-Because XLA needs static shapes, the ``M`` per-block slices are padded to a
-common length and carry a validity mask; padded entries are no-ops in the
-samplers.
+Token groups are keyed by *block id*, not by worker: with ``S`` blocks per
+worker (DESIGN.md §3) a worker's tokens split into ``B = S·M`` groups, one
+per vocabulary block, and a round addresses the group of the resident
+block directly by its id.
+
+Because XLA needs static shapes, the ``B`` per-block slices are padded to a
+common per-block capacity and carry a validity mask; padded entries are
+no-ops in the samplers.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Iterable
 
 import numpy as np
 
@@ -28,16 +34,16 @@ from repro.core.schedule import VocabPartition
 class InvertedIndex:
     """Per-worker inverted-index token layout, grouped by word block.
 
-    All arrays have shape ``[M, T]`` where ``M`` is the number of blocks and
+    All arrays have shape ``[B, T]`` where ``B`` is the number of blocks and
     ``T`` the padded per-block token capacity.
     """
 
-    doc: np.ndarray        # [M, T] int32 — LOCAL document index
-    word_off: np.ndarray   # [M, T] int32 — word offset inside its block
-    word: np.ndarray       # [M, T] int32 — global word id (diagnostics)
-    mask: np.ndarray       # [M, T] bool  — True for real tokens
-    token_id: np.ndarray   # [M, T] int32 — position in the original arrays
-    num_real: np.ndarray   # [M]    int32 — real token count per block
+    doc: np.ndarray        # [B, T] int32 — LOCAL document index
+    word_off: np.ndarray   # [B, T] int32 — word offset inside its block
+    word: np.ndarray       # [B, T] int32 — global word id (diagnostics)
+    mask: np.ndarray       # [B, T] bool  — True for real tokens
+    token_id: np.ndarray   # [B, T] int32 — position in the original arrays
+    num_real: np.ndarray   # [B]    int32 — real token count per block
 
     @property
     def num_blocks(self) -> int:
@@ -48,14 +54,37 @@ class InvertedIndex:
         return self.doc.shape[1]
 
 
+def block_token_counts(word: np.ndarray,
+                       partition: VocabPartition) -> np.ndarray:
+    """Tokens-per-block histogram ``[B]`` for one worker's token slice."""
+    blk = partition.block_of_word(np.asarray(word, np.int32))
+    return np.bincount(blk, minlength=partition.num_blocks).astype(np.int32)
+
+
+def common_block_capacity(words: Iterable[np.ndarray],
+                          partition: VocabPartition) -> int:
+    """Smallest per-block capacity valid across all workers' token slices.
+
+    The SPMD engine pads every (worker, block) token group to one static
+    length; this is that length — the max over all workers of the largest
+    per-block token count (at least 1 so empty blocks keep a real shape).
+    """
+    cap = 1
+    for w in words:
+        counts = block_token_counts(w, partition)
+        cap = max(cap, int(counts.max(initial=0)))
+    return cap
+
+
 def build_inverted_index(doc: np.ndarray, word: np.ndarray,
                          partition: VocabPartition,
                          capacity: int | None = None) -> InvertedIndex:
-    """Sort one worker's tokens into the ``[M, T]`` block-major layout.
+    """Sort one worker's tokens into the ``[B, T]`` block-major layout.
 
     ``doc`` must already be local indices (0..D_local-1).  ``capacity`` may
     be supplied to force a common padding across workers (required so the
-    shard_map engine sees identical shapes on every device).
+    shard_map engine sees identical shapes on every device); see
+    :func:`common_block_capacity`.
     """
     doc = np.asarray(doc, np.int32)
     word = np.asarray(word, np.int32)

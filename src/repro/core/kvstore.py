@@ -7,6 +7,24 @@ reasons: (i) it documents Algorithms 1–2 in their native form and is used
 by an example; (ii) it is the checkpointable host representation of a
 sharded model (each block is one KV entry, exactly how ``train/checkpoint``
 persists LDA runs).
+
+Like the SPMD engine, the simulation takes ``blocks_per_worker`` (``S``):
+the store then holds ``B = S·M`` blocks and the scheduler runs ``B`` rounds
+per iteration over the slot-major pipeline schedule (DESIGN.md §3).  Here
+the capacity story is literal — a worker's RAM holds exactly one block at a
+time; the other ``B - 1`` live in the store.
+
+Two execution flavours:
+
+* ``sampler="numpy"`` (default) — the standalone reference: exact serial
+  CGS per block via :func:`gibbs_sweep_np`, uniforms drawn on demand,
+  topic totals read eagerly from the store.
+* ``sampler="scan", ck_sync="round"`` — the *structural-equivalence
+  oracle*: the very same jitted block sampler, padded token layout,
+  uniform stream, and frozen-``C_k``-per-round semantics as the SPMD
+  engine, so a run is bit-identical to ``ModelParallelLDA`` at any ``S``.
+  Tests use this to prove the pipelined engine equals the paper's
+  scheduler/worker/KV-store execution exactly.
 """
 from __future__ import annotations
 
@@ -16,7 +34,8 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core import schedule as sched
-from repro.core.invindex import build_inverted_index
+from repro.core.invindex import (build_inverted_index,
+                                 common_block_capacity)
 from repro.core.sampler import gibbs_sweep_np
 from repro.data.corpus import Corpus
 from repro.data.sharding import worker_shard
@@ -64,7 +83,7 @@ class HostWorker:
     worker_id: int
     cdk: np.ndarray            # [D_local, K]
     index: object              # InvertedIndex
-    z: np.ndarray              # [M, T] block-layout assignments
+    z: np.ndarray              # [B, T] block-layout assignments
 
     def run_round(self, block_id: int, store: KVStore, partition,
                   alpha, beta, rng) -> None:
@@ -85,34 +104,85 @@ class HostWorker:
         store.put_block(block_id, ckt_block)
         store.put_ck_delta((ck - ck_synced).astype(np.int64))
 
+    def run_round_oracle(self, block_id: int, store: KVStore, ck_frozen,
+                         u_round, alpha, beta, vbeta) -> np.ndarray:
+        """Engine-identical round: jitted block sampler on the full padded
+        token slice, ``C_k`` frozen at the round boundary.  Returns the
+        worker's ``C_k`` delta (committed by the scheduler at round end)."""
+        import jax.numpy as jnp
+
+        from repro.core.sampler import sweep_block_scan
+
+        ckt_block = store.get_block(block_id).astype(np.int32)
+        out = sweep_block_scan(
+            jnp.asarray(self.cdk), jnp.asarray(ckt_block),
+            jnp.asarray(ck_frozen),
+            jnp.asarray(self.index.doc[block_id]),
+            jnp.asarray(self.index.word_off[block_id]),
+            jnp.asarray(self.z[block_id]),
+            jnp.asarray(self.index.mask[block_id]),
+            jnp.asarray(u_round), alpha,
+            jnp.float32(beta), jnp.float32(vbeta))
+        self.cdk[...] = np.asarray(out[0])
+        store.put_block(block_id, np.asarray(out[1]))
+        self.z[block_id] = np.asarray(out[3])
+        return np.asarray(out[2]) - ck_frozen
+
 
 class HostModelParallelLDA:
     """Scheduler loop (Algorithm 1) driving host workers round-robin.
 
-    Executes the model-parallel schedule *serially* with the exact same
-    frozen-``C_k``-per-round semantics as the SPMD engine; used by tests as
-    the structural reference and by ``examples/architecture_walkthrough``.
+    Executes the ``S·M``-block model-parallel schedule *serially*; in
+    oracle mode (``sampler="scan", ck_sync="round"``) with the exact same
+    frozen-``C_k``-per-round semantics, sampler kernel, and uniform stream
+    as the SPMD engine — used by tests as the structural reference and by
+    ``examples/architecture_walkthrough``.
     """
 
     def __init__(self, corpus: Corpus, num_topics: int, num_workers: int,
-                 alpha: float = 0.1, beta: float = 0.01, seed: int = 0):
+                 alpha: float = 0.1, beta: float = 0.01, seed: int = 0,
+                 blocks_per_worker: int = 1, sampler: str = "numpy",
+                 ck_sync: str = "eager"):
+        if sampler not in ("numpy", "scan"):
+            raise ValueError(f"unknown sampler {sampler!r}")
+        if ck_sync not in ("eager", "round"):
+            raise ValueError(f"unknown ck_sync {ck_sync!r}")
+        if ck_sync == "round" and sampler != "scan":
+            raise ValueError(
+                "ck_sync='round' (frozen-per-round totals) is only "
+                "implemented for the oracle path sampler='scan'")
         corpus.validate()
         self.corpus = corpus
         self.num_topics = num_topics
         self.num_workers = num_workers
+        self.blocks_per_worker = int(blocks_per_worker)
+        self.num_blocks = num_workers * self.blocks_per_worker
+        self.sampler = sampler
+        self.ck_sync = ck_sync
         self.alpha = np.full(num_topics, alpha, np.float32)
         self.beta = float(beta)
-        self.partition = sched.partition_vocab(corpus.vocab_size, num_workers)
+        self.vbeta = float(beta * corpus.vocab_size)
+        self.partition = sched.partition_vocab(corpus.vocab_size,
+                                               self.num_blocks)
+        sched.validate_schedule(num_workers, self.blocks_per_worker)
         self.rng = np.random.default_rng(seed)
         self.store = KVStore()
         k = num_topics
+        b = self.num_blocks
         vb = self.partition.block_size
         z0 = self.rng.integers(0, k, size=corpus.num_tokens).astype(np.int32)
-        ckt = np.zeros((num_workers, vb, k), np.int32)
+        ckt = np.zeros((b, vb, k), np.int32)
+        shards = [worker_shard(corpus, w, num_workers)
+                  for w in range(num_workers)]
+        # engine-identical padding in oracle mode; minimal otherwise
+        cap = common_block_capacity((s.word for s in shards),
+                                    self.partition) \
+            if sampler == "scan" else None
+        self.capacity = cap
         self.workers: List[HostWorker] = []
-        for w in range(num_workers):
-            s = worker_shard(corpus, w, num_workers)
-            idx = build_inverted_index(s.doc_local, s.word, self.partition)
+        for w, s in enumerate(shards):
+            idx = build_inverted_index(s.doc_local, s.word, self.partition,
+                                       cap)
             cdk = np.zeros((s.num_local_docs, k), np.int32)
             zz = z0[s.token_id]
             np.add.at(cdk, (s.doc_local, zz), 1)
@@ -122,25 +192,58 @@ class HostModelParallelLDA:
             zlay = np.zeros_like(idx.token_id)
             zlay[idx.mask] = zz[idx.token_id[idx.mask]]
             self.workers.append(HostWorker(w, cdk, idx, zlay))
-        for b in range(num_workers):
-            self.store.put_block(b, ckt[b])
+        self.shards = shards
+        for blk_id in range(b):
+            self.store.put_block(blk_id, ckt[blk_id])
         self.store.init_ck(ckt.sum(axis=(0, 1)))
         self.iteration_count = 0
 
     def step(self) -> None:
-        m = self.num_workers
-        for r in range(m):
+        m, s_ = self.num_workers, self.blocks_per_worker
+        rounds = self.num_blocks
+        if self.sampler == "scan":
+            # engine-identical uniform stream: [rounds, workers, capacity]
+            u = self.rng.random((rounds, m, self.capacity), np.float32)
+        for r in range(rounds):
             # scheduler: dispatch tasks, then rotate (Algorithm 1)
+            if self.ck_sync == "round":
+                ck_frozen = self.store.get_ck().astype(np.int32)
+                delta = np.zeros_like(ck_frozen)
             for w in range(m):
-                b = sched.block_for(w, r, m)
-                self.workers[w].run_round(b, self.store, self.partition,
-                                          self.alpha, self.beta, self.rng)
+                blk_id = sched.block_for(w, r, m, s_)
+                if self.sampler == "scan":
+                    ck0 = ck_frozen if self.ck_sync == "round" \
+                        else self.store.get_ck().astype(np.int32)
+                    d = self.workers[w].run_round_oracle(
+                        blk_id, self.store, ck0, u[r, w], self.alpha,
+                        self.beta, self.vbeta)
+                    if self.ck_sync == "round":
+                        delta += d
+                    else:
+                        self.store.put_ck_delta(d.astype(np.int64))
+                else:
+                    self.workers[w].run_round(blk_id, self.store,
+                                              self.partition, self.alpha,
+                                              self.beta, self.rng)
+            if self.ck_sync == "round":
+                self.store.put_ck_delta(delta.astype(np.int64))
         self.iteration_count += 1
 
     def gather_ckt(self) -> np.ndarray:
         vb = self.partition.block_size
         out = np.zeros((self.partition.padded_vocab, self.num_topics),
                        np.int32)
-        for b in range(self.num_workers):
-            out[b * vb:(b + 1) * vb] = self.store.get_block(b)
+        for blk_id in range(self.num_blocks):
+            out[blk_id * vb:(blk_id + 1) * vb] = self.store.get_block(blk_id)
         return out[:self.corpus.vocab_size]
+
+    def assignments(self) -> np.ndarray:
+        """Current z in original token order (mirrors the engine's view)."""
+        from repro.core.invindex import scatter_assignments
+        z = np.zeros(self.corpus.num_tokens, np.int32)
+        for w, shard in enumerate(self.shards):
+            idx = self.workers[w].index
+            z_local = scatter_assignments(idx, self.workers[w].z,
+                                          shard.token_id.shape[0])
+            z[shard.token_id] = z_local
+        return z

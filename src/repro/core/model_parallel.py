@@ -1,382 +1,32 @@
-"""Model-parallel collapsed Gibbs sampling for LDA (paper §3–§4).
+"""Back-compat facade for the model-parallel engine (DESIGN.md §2–§3).
 
-The engine implements Algorithm 1 (scheduler) + Algorithm 2 (worker) as a
-single SPMD program:
+The engine now lives in the :mod:`repro.core.engine` package —
 
-  * documents are sharded over ``M`` workers (data-parallelism);
-  * the word-topic table is partitioned into ``M`` disjoint word blocks
-    (model-parallelism); worker ``m`` holds block ``(m + r) mod M`` in
-    round ``r``;
-  * rotation = one ``jax.lax.ppermute`` of the resident block per round —
-    the "scheduler" is a compile-time permutation, the "key-value store"
-    is the sharded array itself (DESIGN.md §2);
-  * the non-separable topic totals ``{C_k}`` are synchronized once per
-    round via ``psum`` of per-worker deltas and drift in between (§3.3).
+  * ``engine/state.py``    — :class:`MPState`, layout/init/gather;
+  * ``engine/rounds.py``   — per-round worker step + sampler registry;
+  * ``engine/backends.py`` — vmap / shard_map execution backends;
+  * ``engine/api.py``      — :class:`ModelParallelLDA`;
 
-Two execution backends with bit-identical semantics:
+— generalized from the original one-block-per-worker rotation to an
+``S·M``-block pipeline (``blocks_per_worker=S``).  This module re-exports
+the public names (and the underscore-prefixed internals some launch tools
+import) so every pre-refactor import keeps working::
 
-  * ``backend="vmap"`` — the worker axis is a batch axis on one device;
-    ``ppermute`` becomes ``jnp.roll``, ``psum`` a sum.  Runs anywhere,
-    used by tests/benchmarks on the single-CPU container.
-  * ``backend="shard_map"`` — the worker axis is a mesh axis; collectives
-    are real.  This is the production path; on the dry-run mesh the round
-    rotation lowers to HLO ``collective-permute``.
-
-Both backends share ``_worker_round`` so agreement tests are meaningful.
+    from repro.core.model_parallel import ModelParallelLDA, MPState
 """
-from __future__ import annotations
+from repro.core.engine.api import ModelParallelLDA
+from repro.core.engine.backends import (iteration_vmap,
+                                        make_shard_map_iteration)
+from repro.core.engine.rounds import resolve_sampler, worker_round
+from repro.core.engine.state import MPState
 
-import dataclasses
-from functools import partial
-from typing import Callable, List, Optional
+# Pre-package spellings, kept for external callers (e.g. launch/lda_dryrun).
+_iteration_vmap = iteration_vmap
+_iteration_shard_map = make_shard_map_iteration
+_make_sampler = resolve_sampler
+_worker_round = worker_round
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
-
-from repro.core import schedule as sched
-from repro.core.counts import CountState
-from repro.core.invindex import build_inverted_index, scatter_assignments
-from repro.core.likelihood import doc_log_likelihood, word_log_likelihood
-from repro.core.sampler import sweep_block_batched, sweep_block_scan
-from repro.data.corpus import Corpus
-from repro.data.sharding import worker_shard
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class MPState:
-    """Stacked per-worker state (leading axis = workers)."""
-
-    cdk: jax.Array        # [M, Dloc, K]
-    ckt: jax.Array        # [M, Vb, K] resident block per worker
-    block_id: jax.Array   # [M] which block each worker currently holds
-    ck_synced: jax.Array  # [K] totals agreed at last round boundary
-    ck_local: jax.Array   # [M, K] per-worker drifting view (§3.3)
-    z: jax.Array          # [M, B, T] assignments in inverted-index layout
-
-    def tree_flatten(self):
-        return ((self.cdk, self.ckt, self.block_id, self.ck_synced,
-                 self.ck_local, self.z), None)
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children)
-
-    def local_ck_views(self) -> np.ndarray:
-        return np.asarray(self.ck_local)
-
-    def true_ck(self) -> np.ndarray:
-        return np.asarray(self.ck_synced) + (
-            np.asarray(self.ck_local)
-            - np.asarray(self.ck_synced)[None, :]).sum(axis=0)
-
-
-def _worker_round(cdk, ckt_blk, block_id, ck_loc, z_all, u_r,
-                  doc, woff, mask, alpha, beta, vbeta, *, sampler):
-    """One worker, one round: sample the token group of the resident block.
-
-    This is Algorithm 2 lines 2–5 — the "request model block" /
-    "commit model block" steps are the surrounding rotation collective.
-    """
-    d = doc[block_id]
-    t = woff[block_id]
-    zz = z_all[block_id]
-    mk = mask[block_id]
-    cdk, ckt_blk, ck_loc, z_new = sampler(
-        cdk, ckt_blk, ck_loc, d, t, zz, mk, u_r, alpha, beta, vbeta)
-    z_all = z_all.at[block_id].set(z_new)
-    return cdk, ckt_blk, ck_loc, z_all
-
-
-def _make_sampler(mode: str):
-    if mode == "scan":
-        return partial(sweep_block_scan, use_eq3=True)
-    if mode == "scan_eq1":
-        return partial(sweep_block_scan, use_eq3=False)
-    if mode == "batched":
-        def f(cdk, ckt, ck, d, t, z, mk, u, alpha, beta, vbeta):
-            return sweep_block_batched(cdk, ckt, ck, d, t, z, mk, u,
-                                       alpha, beta, vbeta, None)
-        return f
-    if mode == "pallas":
-        from repro.kernels.ops import sweep_block_pallas
-        return sweep_block_pallas
-    raise ValueError(f"unknown sampler mode {mode!r}")
-
-
-# ---------------------------------------------------------------------------
-# vmap backend (single device, worker axis = batch axis)
-# ---------------------------------------------------------------------------
-
-@partial(jax.jit, static_argnames=("sampler_mode", "sync_ck"))
-def _iteration_vmap(state: MPState, u, doc, woff, mask, alpha, beta, vbeta,
-                    sampler_mode: str = "scan", sync_ck: bool = True):
-    """One full iteration = M rounds with rotation, stacked on one device."""
-    sampler = _make_sampler(sampler_mode)
-    num_workers = doc.shape[0]
-
-    round_fn = partial(_worker_round, sampler=sampler)
-
-    def round_step(carry, u_r):
-        cdk, ckt, blk, ck_syn, ck_loc, z = carry
-        cdk, ckt, ck_loc, z = jax.vmap(
-            round_fn, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0,
-                               None, None, None))(
-            cdk, ckt, blk, ck_loc, z, u_r, doc, woff, mask,
-            alpha, beta, vbeta)
-        # rotation m -> m-1: the new resident block of worker m is the one
-        # worker m+1 held, i.e. roll the stacked block axis by -1.
-        ckt = jnp.roll(ckt, -1, axis=0)
-        blk = jnp.roll(blk, -1, axis=0)
-        # paper Fig-3 error: pre-sync ℓ1 drift of local {C_k} vs true totals
-        ck_true = ck_syn + (ck_loc - ck_syn[None, :]).sum(axis=0)
-        n_tok = jnp.maximum(ck_true.sum(), 1).astype(jnp.float32)
-        err = (jnp.abs(ck_loc - ck_true[None, :]).sum().astype(jnp.float32)
-               / (ck_loc.shape[0] * n_tok))
-        if sync_ck:
-            ck_loc = jnp.broadcast_to(ck_true, ck_loc.shape)
-            ck_syn = ck_true
-        return (cdk, ckt, blk, ck_syn, ck_loc, z), err
-
-    carry = (state.cdk, state.ckt, state.block_id, state.ck_synced,
-             state.ck_local, state.z)
-    carry, errs = jax.lax.scan(round_step, carry, u)
-    del num_workers
-    return MPState(*carry), errs
-
-
-# ---------------------------------------------------------------------------
-# shard_map backend (one worker per device)
-# ---------------------------------------------------------------------------
-
-def _iteration_shard_map(mesh: Mesh, axis: str, sampler_mode: str,
-                         sync_ck: bool):
-    """Build the jitted per-device iteration function for ``mesh``."""
-    perm = sched.rotation_permutation(mesh.shape[axis])
-    sampler = _make_sampler(sampler_mode)
-
-    def per_device(cdk, ckt, blk, ck_syn, ck_loc, z, u, doc, woff, mask,
-                   alpha, beta, vbeta):
-        # local shards arrive with a leading worker axis of size 1
-        cdk, ckt, blk, ck_loc, z = (x[0] for x in (cdk, ckt, blk, ck_loc, z))
-        doc, woff, mask, u = (x[0] for x in (doc, woff, mask, u))
-
-        def round_step(carry, u_r):
-            cdk, ckt, blk, ck_syn, ck_loc, z = carry
-            cdk, ckt, ck_loc, z = _worker_round(
-                cdk, ckt, blk, ck_loc, z, u_r, doc, woff, mask,
-                alpha, beta, vbeta, sampler=sampler)
-            # Algorithm 2 commit+request: move the block to the next owner.
-            ckt = jax.lax.ppermute(ckt, axis, perm)
-            blk = jax.lax.ppermute(blk, axis, perm)
-            ck_true = ck_syn + jax.lax.psum(ck_loc - ck_syn, axis)
-            n_tok = jnp.maximum(ck_true.sum(), 1).astype(jnp.float32)
-            err = jax.lax.pmean(
-                jnp.abs(ck_loc - ck_true).sum().astype(jnp.float32),
-                axis) / n_tok
-            if sync_ck:
-                ck_loc = ck_true
-                ck_syn = ck_true
-            return (cdk, ckt, blk, ck_syn, ck_loc, z), err
-
-        carry, errs = jax.lax.scan(
-            round_step, (cdk, ckt, blk, ck_syn, ck_loc, z), u)
-        cdk, ckt, blk, ck_syn, ck_loc, z = carry
-        return (cdk[None], ckt[None], blk[None], ck_syn, ck_loc[None],
-                z[None], errs)
-
-    w = P(axis)
-    return jax.jit(jax.shard_map(
-        per_device, mesh=mesh,
-        in_specs=(w, w, w, P(), w, w, w, w, w, w, P(), P(), P()),
-        out_specs=(w, w, w, P(), w, w, P()),
-        check_vma=False))
-
-
-# ---------------------------------------------------------------------------
-# Public engine
-# ---------------------------------------------------------------------------
-
-class ModelParallelLDA:
-    """Model-parallel LDA trainer (the paper's full system).
-
-    Example::
-
-        lda = ModelParallelLDA(corpus, num_topics=64, num_workers=8)
-        history = lda.run(num_iterations=50)
-        state = lda.gather_counts()
-    """
-
-    def __init__(self, corpus: Corpus, num_topics: int, num_workers: int,
-                 alpha: float | np.ndarray = 0.1, beta: float = 0.01,
-                 seed: int = 0, sampler_mode: str = "scan",
-                 sync_ck: bool = True, backend: str = "vmap",
-                 mesh: Optional[Mesh] = None, axis: str = "w"):
-        corpus.validate()
-        self.corpus = corpus
-        self.num_topics = int(num_topics)
-        self.num_workers = int(num_workers)
-        self.alpha = jnp.full((num_topics,), alpha, jnp.float32) \
-            if np.isscalar(alpha) else jnp.asarray(alpha, jnp.float32)
-        self.beta = float(beta)
-        self.vbeta = float(beta * corpus.vocab_size)
-        self.sampler_mode = sampler_mode
-        self.sync_ck = bool(sync_ck)
-        self.backend = backend
-        self.axis = axis
-        self.partition = sched.partition_vocab(corpus.vocab_size, num_workers)
-        sched.validate_schedule(num_workers)
-        self._rng = np.random.default_rng(seed)
-        self._build(seed)
-        if backend == "shard_map":
-            if mesh is None:
-                devs = np.array(jax.devices()[:num_workers])
-                if devs.size < num_workers:
-                    raise ValueError(
-                        f"shard_map backend needs {num_workers} devices, "
-                        f"have {len(jax.devices())}")
-                mesh = Mesh(devs, (axis,))
-            self.mesh = mesh
-            self._iter_fn = _iteration_shard_map(
-                mesh, axis, sampler_mode, sync_ck)
-        else:
-            self.mesh = None
-            self._iter_fn = None
-
-    # -- construction ------------------------------------------------------
-    def _build(self, seed: int) -> None:
-        c, m, k = self.corpus, self.num_workers, self.num_topics
-        shards = [worker_shard(c, w, m) for w in range(m)]
-        # common inverted-index capacity across workers (static shapes)
-        caps = []
-        for s in shards:
-            blk = self.partition.block_of_word(s.word)
-            caps.append(int(np.bincount(blk, minlength=m).max(initial=0)))
-        cap = max(max(caps), 1)
-        self.capacity = cap
-        self.shards = shards
-        self.indexes = [build_inverted_index(s.doc_local, s.word,
-                                             self.partition, cap)
-                        for s in shards]
-        z0 = self._rng.integers(0, k, size=c.num_tokens).astype(np.int32)
-        self.z_init = z0
-        dloc = shards[0].num_local_docs
-        vb = self.partition.block_size
-        cdk = np.zeros((m, dloc, k), np.int32)
-        ckt = np.zeros((m, vb, k), np.int32)
-        for w, (s, idx) in enumerate(zip(shards, self.indexes)):
-            zz = z0[s.token_id]
-            np.add.at(cdk[w], (s.doc_local, zz), 1)
-            blk = self.partition.block_of_word(s.word)
-            off = self.partition.word_offset_in_block(s.word)
-            # accumulate into the block rows this worker's tokens touch;
-            # blocks then reduce across workers into their initial owner.
-            np.add.at(ckt, (blk, off, zz), 1)
-        ck = ckt.sum(axis=(0, 1)).astype(np.int32)
-        doc = np.stack([i.doc for i in self.indexes])
-        woff = np.stack([i.word_off for i in self.indexes])
-        mask = np.stack([i.mask for i in self.indexes])
-        zarr = np.zeros((m, m, cap), np.int32)
-        for w, (s, idx) in enumerate(zip(shards, self.indexes)):
-            real = idx.mask
-            zarr[w][real] = z0[s.token_id][idx.token_id[real]]
-        self.doc = jnp.asarray(doc)
-        self.woff = jnp.asarray(woff)
-        self.mask = jnp.asarray(mask)
-        self.state = MPState(
-            cdk=jnp.asarray(cdk),
-            ckt=jnp.asarray(ckt),
-            block_id=jnp.arange(m, dtype=jnp.int32),
-            ck_synced=jnp.asarray(ck),
-            ck_local=jnp.broadcast_to(jnp.asarray(ck), (m, k)),
-            z=jnp.asarray(zarr),
-        )
-        self.iteration_count = 0
-
-    # -- stepping ----------------------------------------------------------
-    def _uniforms(self) -> jax.Array:
-        m, cap = self.num_workers, self.capacity
-        u = self._rng.random((m, m, cap), np.float32)  # [rounds, workers, T]
-        return jnp.asarray(u)
-
-    def step(self) -> None:
-        """Run one iteration (= M rounds, every token sampled once)."""
-        u = self._uniforms()
-        if self.backend == "vmap":
-            self.state, errs = _iteration_vmap(
-                self.state, u, self.doc, self.woff, self.mask,
-                self.alpha, jnp.float32(self.beta), jnp.float32(self.vbeta),
-                sampler_mode=self.sampler_mode, sync_ck=self.sync_ck)
-        else:
-            s = self.state
-            out = self._iter_fn(
-                s.cdk, s.ckt, s.block_id, s.ck_synced, s.ck_local, s.z,
-                jnp.swapaxes(u, 0, 1), self.doc, self.woff, self.mask,
-                self.alpha, jnp.float32(self.beta), jnp.float32(self.vbeta))
-            self.state = MPState(*out[:6])
-            errs = out[6]
-        self.round_errors = np.asarray(errs).reshape(-1)
-        self.iteration_count += 1
-
-    def run(self, num_iterations: int,
-            callback: Optional[Callable[[int, "ModelParallelLDA"], None]] = None,
-            eval_every: int = 1) -> List[dict]:
-        history = []
-        for i in range(num_iterations):
-            self.step()
-            if (i + 1) % eval_every == 0:
-                history.append({"iteration": self.iteration_count,
-                                "log_likelihood": self.log_likelihood()})
-            if callback is not None:
-                callback(i, self)
-        return history
-
-    # -- observation ---------------------------------------------------------
-    def gather_counts(self) -> CountState:
-        """Reassemble the global model (the KV-store "dump")."""
-        m = self.num_workers
-        vb = self.partition.block_size
-        v, k = self.corpus.vocab_size, self.num_topics
-        ckt_full = np.zeros((m * vb, k), np.int32)
-        blocks = np.asarray(self.state.block_id)
-        ckt = np.asarray(self.state.ckt)
-        for w in range(m):
-            b = int(blocks[w])
-            ckt_full[b * vb:(b + 1) * vb] = ckt[w]
-        ckt_full = ckt_full[:v]
-        cdk_full = np.zeros((self.corpus.num_docs, k), np.int32)
-        cdk = np.asarray(self.state.cdk)
-        for w, s in enumerate(self.shards):
-            real = s.doc_global >= 0
-            cdk_full[s.doc_global[real]] = cdk[w][:real.sum()]
-        ck = ckt_full.sum(axis=0).astype(np.int32)
-        return CountState(jnp.asarray(cdk_full), jnp.asarray(ckt_full),
-                          jnp.asarray(ck))
-
-    def assignments(self) -> np.ndarray:
-        """Current z in original token order."""
-        z = np.zeros(self.corpus.num_tokens, np.int32)
-        zs = np.asarray(self.state.z)
-        for w, (s, idx) in enumerate(zip(self.shards, self.indexes)):
-            z_local = scatter_assignments(idx, zs[w], s.token_id.shape[0])
-            z[s.token_id] = z_local
-        return z
-
-    def log_likelihood(self) -> float:
-        state = self.gather_counts()
-        lw = word_log_likelihood(state.ckt, state.ck, self.beta)
-        ld = doc_log_likelihood(state.cdk, self.alpha)
-        return float(lw + ld)
-
-    def delta_error(self) -> float:
-        """Mean pre-sync Δ_{r,i} over the rounds of the last iteration
-        (paper Fig 3).  Falls back to the current post-sync drift if no
-        iteration has run yet."""
-        errs = getattr(self, "round_errors", None)
-        if errs is not None and errs.size:
-            return float(errs.mean())
-        from repro.core.metrics import delta_error
-        return delta_error(self.state.true_ck(),
-                           self.state.local_ck_views())
+__all__ = [
+    "ModelParallelLDA", "MPState", "iteration_vmap",
+    "make_shard_map_iteration",
+]

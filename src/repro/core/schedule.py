@@ -1,15 +1,34 @@
-"""Rotation scheduler (paper Algorithm 1).
+"""Rotation scheduler (paper Algorithm 1), generalized to ``S`` blocks per
+worker (DESIGN.md §3).
 
-The scheduler partitions the vocabulary into ``M`` disjoint word blocks and
-rotates block ownership among the ``M`` workers: in round ``r`` worker ``m``
-owns block ``(m + r) mod M``.  After ``M`` rounds every (worker, block) pair
-has met exactly once — one *iteration* over the data.
+The scheduler partitions the vocabulary into ``B = S·M`` disjoint word
+blocks and pipelines them through ``M`` workers.  Blocks are numbered
+*slot-major*: block ``b = s·M + w`` starts the iteration in slot ``s`` of
+worker ``w``.  In round ``r`` (with ``r = q·S + t``) worker ``m`` samples
+the resident block
 
-Under SPMD the scheduler is not a process: ``owner_of``/``block_of`` define
-a compile-time permutation that ``model_parallel.py`` lowers to a single
-``jax.lax.ppermute`` (HLO ``collective-permute``) per round.  This module is
-also used verbatim by the host-simulation path (``kvstore.py``), where it
-plays the paper's original role of a coordinating component.
+    ``block_for(m, r) = (r mod S)·M + ((m + r // S) mod M)``
+
+so after ``B`` rounds every (worker, block) pair has met exactly once —
+one *iteration* over the data — and within every round the ``M`` resident
+blocks are disjoint, which is what makes parallel == serial exact.  At
+``S = 1`` this reduces to the paper's original ``(m + r) mod M`` rotation.
+
+Each worker keeps a length-``S`` FIFO of blocks: the head is the resident
+block being sampled this round; after sampling it is handed to the ring
+neighbour ``m - 1`` (a single ``jax.lax.ppermute`` of the *resident* block
+only — parked blocks never move), and the received block joins the tail of
+the queue, surfacing again ``S`` rounds later.  Per-worker *resident*
+model is therefore ``ceil(V / (S·M)) × K`` rows — model capacity scales
+with ``S`` independently of the worker count (the paper's "200B variables
+on a low-end cluster" lever; the ``S-1`` parked slots stand in for the
+distributed key-value store / host offload of the original system).
+
+Under SPMD the scheduler is not a process: ``block_for``/``owner_for``
+define a compile-time permutation that the engine lowers to a single
+``jax.lax.ppermute`` (HLO ``collective-permute``) per round.  This module
+is also used verbatim by the host-simulation path (``kvstore.py``), where
+it plays the paper's original role of a coordinating component.
 """
 from __future__ import annotations
 
@@ -21,11 +40,11 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class VocabPartition:
-    """Disjoint word blocks ``{V_1 .. V_M}`` of a padded vocabulary."""
+    """Disjoint word blocks ``{V_1 .. V_B}`` of a padded vocabulary."""
 
     vocab_size: int          # true V
-    num_blocks: int          # M
-    block_size: int          # Vb = ceil(V / M)
+    num_blocks: int          # B = S·M
+    block_size: int          # Vb = ceil(V / B)
 
     @property
     def padded_vocab(self) -> int:
@@ -54,52 +73,85 @@ def partition_vocab(vocab_size: int, num_blocks: int) -> VocabPartition:
     return VocabPartition(vocab_size, num_blocks, block_size)
 
 
-def block_for(worker: int, rnd: int, num_blocks: int) -> int:
-    """Block owned by ``worker`` in round ``rnd`` (Algorithm 1, rotation)."""
-    return (worker + rnd) % num_blocks
+def block_for(worker: int, rnd: int, num_workers: int,
+              blocks_per_worker: int = 1) -> int:
+    """Resident block of ``worker`` in round ``rnd`` (Algorithm 1 rotation,
+    slot-major pipeline over ``S·M`` blocks).  ``S = 1`` gives the paper's
+    ``(worker + rnd) mod M``."""
+    s = blocks_per_worker
+    b = s * num_workers
+    rnd = rnd % b
+    return (rnd % s) * num_workers + (worker + rnd // s) % num_workers
 
 
-def owner_for(block: int, rnd: int, num_blocks: int) -> int:
-    """Worker owning ``block`` in round ``rnd`` (inverse of :func:`block_for`)."""
-    return (block - rnd) % num_blocks
+def owner_for(block: int, rnd: int, num_workers: int,
+              blocks_per_worker: int = 1) -> int:
+    """Worker holding ``block`` resident in the round of its slot's turn.
+
+    With ``S = 1`` every block is resident every round and this is the
+    exact inverse of :func:`block_for`.  With ``S > 1`` block ``b`` is
+    resident only in rounds ``r`` with ``r mod S == b // M``; for other
+    rounds the returned worker is where the block sits *parked* awaiting
+    its turn, which coincides with its next resident owner.
+    """
+    s = blocks_per_worker
+    del_r = rnd % (s * num_workers)
+    home = block % num_workers                    # slot-major home worker
+    turns = del_r // s + (1 if del_r % s > block // num_workers else 0)
+    return (home - turns) % num_workers
+
+
+def home_slot(block: int, num_workers: int) -> int:
+    """Initial queue slot of ``block`` (slot-major numbering b = s·M + w)."""
+    return block // num_workers
 
 
 def rotation_permutation(num_workers: int) -> List[Tuple[int, int]]:
-    """(src, dst) pairs moving each block to its next-round owner.
+    """(src, dst) pairs moving each resident block to its next holder.
 
-    Worker ``m`` owns block ``b = m + r``; next round that block belongs to
-    worker ``b - (r+1) = m - 1``.  Hence blocks travel ``m -> m-1`` around the
-    ring — this list feeds ``jax.lax.ppermute``.
+    Worker ``m`` hands its just-sampled resident block to worker
+    ``m - 1`` around the ring — this list feeds ``jax.lax.ppermute`` and is
+    independent of ``blocks_per_worker``: parked blocks never travel, so
+    per-round traffic is exactly one resident block per worker.
     """
     return [(m, (m - 1) % num_workers) for m in range(num_workers)]
 
 
-def schedule_table(num_workers: int) -> np.ndarray:
-    """Full iteration schedule: ``table[r, m]`` = block at worker m in round r."""
-    r = np.arange(num_workers)[:, None]
-    m = np.arange(num_workers)[None, :]
-    return (m + r) % num_workers
+def schedule_table(num_workers: int,
+                   blocks_per_worker: int = 1) -> np.ndarray:
+    """Full iteration schedule: ``table[r, m]`` = resident block at worker
+    ``m`` in round ``r``, for the ``S·M`` rounds of one iteration."""
+    s, m_ = blocks_per_worker, num_workers
+    r = np.arange(s * m_)[:, None]
+    m = np.arange(m_)[None, :]
+    return (r % s) * m_ + (m + r // s) % m_
 
 
-def serial_order(num_workers: int) -> Sequence[Tuple[int, int, int]]:
+def serial_order(num_workers: int,
+                 blocks_per_worker: int = 1
+                 ) -> Sequence[Tuple[int, int, int]]:
     """The canonical serial execution order equivalent to the MP schedule.
 
     Yields ``(round, worker, block)`` in the order a single machine would
     execute the same task pool; used by tests to prove parallel == serial.
     """
     out = []
-    for r in range(num_workers):
+    for r in range(blocks_per_worker * num_workers):
         for m in range(num_workers):
-            out.append((r, m, block_for(m, r, num_workers)))
+            out.append((r, m, block_for(m, r, num_workers,
+                                        blocks_per_worker)))
     return out
 
 
-def validate_schedule(num_workers: int) -> None:
-    """Every round is a permutation; every (worker, block) pair met once."""
-    table = schedule_table(num_workers)
-    for r in range(num_workers):
-        assert sorted(table[r]) == list(range(num_workers)), (
+def validate_schedule(num_workers: int, blocks_per_worker: int = 1) -> None:
+    """Every round's resident blocks are disjoint; every (worker, block)
+    pair is met exactly once per iteration."""
+    table = schedule_table(num_workers, blocks_per_worker)
+    b = blocks_per_worker * num_workers
+    for r in range(table.shape[0]):
+        row = sorted(table[r])
+        assert len(set(row)) == num_workers, (
             f"round {r} blocks collide: {table[r]}")
     for m in range(num_workers):
-        assert sorted(table[:, m]) == list(range(num_workers)), (
+        assert sorted(table[:, m]) == list(range(b)), (
             f"worker {m} misses blocks: {table[:, m]}")

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import set_mesh
 from repro.configs import (ARCH_IDS, INPUT_SHAPES, get_config,
                            shape_applicable)
 from repro.launch.input_specs import input_specs
@@ -162,7 +163,7 @@ def run_combo(arch: str, shape_name: str, mesh, mesh_name: str,
 
     rec["opts"] = sorted(opts)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         fn, args = build_step(cfg, shape, mesh, fsdp=fsdp, opts=opts,
                               accum_override=accum_override)
         lowered = fn.lower(*args)

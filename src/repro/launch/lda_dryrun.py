@@ -4,12 +4,16 @@ workload.
 
     PYTHONPATH=src python -m repro.launch.lda_dryrun --config wiki-unigram-k5000
     PYTHONPATH=src python -m repro.launch.lda_dryrun --all
+    PYTHONPATH=src python -m repro.launch.lda_dryrun --blocks-per-worker 4
 
-Lowers one full iteration (M rounds: sample block -> ppermute block ->
-psum C_k) of the shard_map engine against ShapeDtypeStruct state at the
-paper's V/K/token counts, on a 64-worker ring (the paper's Table-1
-cluster) mapped onto v5e chips, and reports memory per worker, collective
-bytes (the block-rotation traffic), and roofline terms.
+Lowers one full iteration (S·M rounds: sample resident block -> ppermute
+resident block -> psum C_k) of the shard_map engine against
+ShapeDtypeStruct state at the paper's V/K/token counts, on a 64-worker
+ring (the paper's Table-1 cluster) mapped onto v5e chips, and reports
+memory per worker, collective bytes (the block-rotation traffic), and
+roofline terms.  ``--blocks-per-worker`` (S) pipelines ``S·M`` vocabulary
+blocks through the ring, shrinking the resident block ``S``-fold
+(DESIGN.md §3).
 """
 import os
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
@@ -23,52 +27,59 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import set_mesh
 from repro.configs.lda_paper import LDA_CONFIGS
-from repro.core.model_parallel import _iteration_shard_map
+from repro.core.engine.backends import \
+    make_shard_map_iteration as _iteration_shard_map
 from repro.core.schedule import partition_vocab
 from repro.launch.mesh import make_lda_mesh
 from repro.roofline import analysis as roofline
 
 
 def run(cfg_name: str, workers: int = 64, sampler: str = "batched",
-        out_dir: str = "benchmarks/results/dryrun") -> dict:
+        out_dir: str = "benchmarks/results/dryrun",
+        blocks_per_worker: int = 1) -> dict:
     cfg = LDA_CONFIGS[cfg_name]
     m, k = workers, cfg.num_topics
-    part = partition_vocab(cfg.vocab_size, m)
+    sb = blocks_per_worker
+    b = sb * m                          # total vocabulary blocks
+    part = partition_vocab(cfg.vocab_size, b)
     vb = part.block_size
     dloc = -(-cfg.num_docs // m)
     # per-(worker, block) token capacity with a 1.2 load-imbalance factor
-    cap = max(int(cfg.num_tokens / (m * m) * 1.2), 1)
+    cap = max(int(cfg.num_tokens / (m * b) * 1.2), 1)
     mesh = make_lda_mesh(m)
 
     s = lambda shape, dt=jnp.int32: jax.ShapeDtypeStruct(shape, dt)
     state = dict(
-        cdk=s((m, dloc, k)), ckt=s((m, vb, k)), blk=s((m,)),
-        ck_syn=s((k,)), ck_loc=s((m, k)), z=s((m, m, cap)),
-        u=s((m, m, cap), jnp.float32), doc=s((m, m, cap)),
-        woff=s((m, m, cap)), mask=s((m, m, cap), jnp.bool_),
+        cdk=s((m, dloc, k)), ckt=s((m, sb, vb, k)), blk=s((m, sb)),
+        ck_syn=s((k,)), ck_loc=s((m, k)), z=s((m, b, cap)),
+        u=s((m, b, cap), jnp.float32), doc=s((m, b, cap)),
+        woff=s((m, b, cap)), mask=s((m, b, cap), jnp.bool_),
         alpha=s((k,), jnp.float32), beta=s((), jnp.float32),
         vbeta=s((), jnp.float32),
     )
     fn = _iteration_shard_map(mesh, "w", sampler, sync_ck=True)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = fn.lower(*state.values())
         compiled = lowered.compile()
     ma = compiled.memory_analysis()
     costs = roofline.raw_costs(compiled)
-    # the round scan body (1 of M rounds) is counted once: scale by M
-    costs.flops *= m
-    costs.bytes_accessed *= m
-    costs.coll_bytes *= m
+    # the round scan body (1 of S·M rounds) is counted once: scale by S·M
+    costs.flops *= b
+    costs.bytes_accessed *= b
+    costs.coll_bytes *= b
     for key in costs.coll_detail["bytes"]:
-        costs.coll_detail["bytes"][key] *= m
+        costs.coll_detail["bytes"][key] *= b
     terms = roofline.roofline_terms(costs)
     block_bytes = vb * k * 4
     rec = {
         "workload": cfg_name, "workers": m, "sampler": sampler,
+        "blocks_per_worker": sb, "num_blocks": b,
         "model_variables": cfg.model_variables,
         "block_shape": [vb, k],
         "block_bytes": block_bytes,
+        "resident_block_bytes_per_worker": block_bytes,
         "memory": {
             "argument_bytes_per_device": int(ma.argument_size_in_bytes),
             "temp_bytes_per_device": int(ma.temp_size_in_bytes),
@@ -84,17 +95,18 @@ def run(cfg_name: str, workers: int = 64, sampler: str = "batched",
         },
         "roofline": terms,
         # paper's communication claim: per-iteration traffic per worker is
-        # M block moves (one per round) + 2K-vector syncs — O(V·K/M) per
-        # round regardless of M, vs O(M·V·K) for DP gossip.
-        "analytic_rotation_bytes_per_iter": m * block_bytes,
+        # S·M block moves (one RESIDENT block per round) + 2K-vector syncs
+        # — O(V·K/(S·M)) per round regardless of M or S, vs O(M·V·K) for
+        # DP gossip; parked blocks never travel.
+        "analytic_rotation_bytes_per_iter": b * block_bytes,
         "status": "ok",
     }
     os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, f"lda__{cfg_name}__ring{m}.json"),
+    with open(os.path.join(out_dir, f"lda__{cfg_name}__ring{m}x{sb}.json"),
               "w") as f:
         json.dump(rec, f, indent=1)
     r = terms
-    print(f"[ok] lda {cfg_name} ring{m} {sampler}: "
+    print(f"[ok] lda {cfg_name} ring{m}x{sb} {sampler}: "
           f"mem/dev={rec['memory']['total_gib_per_device']}GiB "
           f"c={r['compute_s']:.2e} m={r['memory_s']:.2e} "
           f"x={r['collective_s']:.2e} dom={r['dominant']}", flush=True)
@@ -107,13 +119,16 @@ def main() -> None:
                     default="wiki-unigram-k5000")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--workers", type=int, default=64)
+    ap.add_argument("--blocks-per-worker", type=int, default=1,
+                    help="S: pipeline S*workers vocabulary blocks")
     ap.add_argument("--sampler", default="batched",
                     choices=["scan", "batched", "pallas"])
     args = ap.parse_args()
     names = list(LDA_CONFIGS) if args.all else [args.config]
     for name in names:
         try:
-            run(name, args.workers, args.sampler)
+            run(name, args.workers, args.sampler,
+                blocks_per_worker=args.blocks_per_worker)
         except Exception as e:  # noqa: BLE001
             print(f"[failed] lda {name}: {type(e).__name__}: {e}",
                   flush=True)

@@ -6,9 +6,10 @@ fakes 512 host devices while tests/benches must keep seeing one.
 """
 from __future__ import annotations
 
-import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import AxisType, make_mesh
 
 
 def _auto(n: int):
@@ -20,7 +21,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     multi-pod mesh stacks 2 pods on a leading ``pod`` axis (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes, axis_types=_auto(len(axes)))
 
 
 def make_lda_mesh(num_workers: int, *, multi_pod: bool = False) -> Mesh:
@@ -28,16 +29,16 @@ def make_lda_mesh(num_workers: int, *, multi_pod: bool = False) -> Mesh:
     multi-pod: documents sharded over pods × a ring within each pod
     (vocabulary partitioned pod-major, DESIGN.md §4)."""
     if multi_pod:
-        return jax.make_mesh((2, num_workers), ("pod", "w"),
-                             axis_types=_auto(2))
-    return jax.make_mesh((num_workers,), ("w",), axis_types=_auto(1))
+        return make_mesh((2, num_workers), ("pod", "w"),
+                         axis_types=_auto(2))
+    return make_mesh((num_workers,), ("w",), axis_types=_auto(1))
 
 
 def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Tiny mesh over however many (possibly faked) devices exist —
     used by unit tests."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((data, model), ("data", "model"),
+                     axis_types=_auto(2))
 
 
 def data_axes(mesh: Mesh):

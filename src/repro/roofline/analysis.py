@@ -79,7 +79,8 @@ class RawCosts:
 
 
 def raw_costs(compiled) -> RawCosts:
-    ca = compiled.cost_analysis() or {}
+    from repro.compat import cost_analysis_dict
+    ca = cost_analysis_dict(compiled)
     text = compiled.as_text()
     coll = collective_bytes(text)
     return RawCosts(float(ca.get("flops", 0.0)),

@@ -1,5 +1,8 @@
 """Count-state construction and invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -27,4 +30,10 @@ def test_model_bytes_scaling():
     per1, total = model_bytes(2_500_000, 10_000, num_workers=1)
     per64, _ = model_bytes(2_500_000, 10_000, num_workers=64)
     assert total == per1 == 2_500_000 * 10_000 * 4
-    assert per64 == per1 // 64  # the paper's Fig-4a 1/M memory law
+    # the paper's Fig-4a 1/M memory law, at the engine's padded
+    # (ceil-row) block size
+    assert per64 == -(-2_500_000 // 64) * 10_000 * 4
+    # pipelining S blocks per worker shrinks the resident block S-fold
+    per64x4, _ = model_bytes(2_500_000, 10_000, num_workers=64,
+                             blocks_per_worker=4)
+    assert per64x4 == -(-2_500_000 // 256) * 10_000 * 4

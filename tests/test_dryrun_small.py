@@ -11,7 +11,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.compat import AxisType, cost_analysis_dict, make_mesh, set_mesh
 from repro.configs import get_config, INPUT_SHAPES, shape_applicable
 from repro.models import build_model
 from repro.launch.sharding_rules import (param_shardings, batch_shardings,
@@ -23,8 +24,8 @@ from repro.train.train_step import make_train_step
 import dataclasses
 import numpy as np
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"),
+                 axis_types=(AxisType.Auto,) * 2)
 set_activation_sharding(("data",))
 
 SMALL_SHAPE = dataclasses.replace(INPUT_SHAPES["train_4k"],
@@ -48,10 +49,10 @@ for arch in ["olmo-1b", "qwen2-moe-a2.7b", "hymba-1.5b", "xlstm-350m",
     opt_state = jax.eval_shape(opt.init, params)
     oshard = AdamWState(replicated(mesh, opt_state.step), pshard, pshard)
     step = make_train_step(model, opt)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         c = jax.jit(step, in_shardings=(pshard, oshard, bshard)).lower(
             params, opt_state, batch).compile()
-        assert c.cost_analysis().get("flops", 0) > 0
+        assert cost_analysis_dict(c).get("flops", 0) > 0
     # decode
     bundle = input_specs(cfg, DEC_SHAPE, model)
     caches, tokens, pos = bundle.args[:3]
@@ -65,7 +66,7 @@ for arch in ["olmo-1b", "qwen2-moe-a2.7b", "hymba-1.5b", "xlstm-350m",
         args.append(enc)
     def decode(params, caches, tokens, pos, *rest, _m=model):
         return _m.decode_step(params, caches, tokens, pos, *rest)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jax.jit(decode, in_shardings=tuple(in_sh)).lower(*args).compile()
     print(arch, "OK", flush=True)
 print("SMALL_DRYRUN_OK")

@@ -1,5 +1,8 @@
 """Inverted-index layout properties (paper §4.2)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -20,34 +20,40 @@ from repro.core import schedule as sched
 def _serial_replay(lda: ModelParallelLDA, u: np.ndarray):
     """Execute one MP iteration serially, worker-by-worker per round,
     using the same jitted block sampler and the same uniforms, with the
-    engine's frozen-``C_k``-within-round semantics."""
-    m = lda.num_workers
+    engine's frozen-``C_k``-within-round semantics.  Follows the
+    ``S·M``-round pipeline schedule, so it is the oracle for any
+    ``blocks_per_worker``."""
+    m, s_ = lda.num_workers, lda.blocks_per_worker
     cdk = np.array(lda.state.cdk)
-    ckt = np.array(lda.state.ckt)            # block b rows at index b
+    ckt = np.array(lda.state.ckt)             # [M, S, Vb, K] slot queues
+    bid = np.array(lda.state.block_id)        # [M, S]
+    blocks = {int(bid[w, s]): ckt[w, s].copy()
+              for w in range(m) for s in range(s_)}
     ck_synced = np.array(lda.state.ck_synced)
     z = np.array(lda.state.z)
     doc, woff, mask = (np.array(lda.doc), np.array(lda.woff),
                        np.array(lda.mask))
-    block_at = list(range(m))                 # worker -> resident block
-    for r in range(m):
+    for r in range(lda.num_rounds):
         deltas = np.zeros_like(ck_synced)
         for w in range(m):
-            b = block_at[w]
+            b = sched.block_for(w, r, m, s_)
             ck_local = ck_synced.copy()
             out = sweep_block_scan(
-                jnp.asarray(cdk[w]), jnp.asarray(ckt[b]),
+                jnp.asarray(cdk[w]), jnp.asarray(blocks[b]),
                 jnp.asarray(ck_local),
                 jnp.asarray(doc[w, b]), jnp.asarray(woff[w, b]),
                 jnp.asarray(z[w, b]), jnp.asarray(mask[w, b]),
                 jnp.asarray(u[r, w]), lda.alpha,
                 jnp.float32(lda.beta), jnp.float32(lda.vbeta))
             cdk[w] = np.asarray(out[0])
-            ckt[b] = np.asarray(out[1])
+            blocks[b] = np.asarray(out[1])
             deltas += np.asarray(out[2]) - ck_local
             z[w, b] = np.asarray(out[3])
-        block_at = [sched.block_for(w, r + 1, m) for w in range(m)]
         ck_synced = ck_synced + deltas
-    return cdk, ckt, ck_synced, z
+    # after S·M rounds every block is back at its home slot (s·M + w)
+    ckt_out = np.stack([np.stack([blocks[s * m + w] for s in range(s_)])
+                        for w in range(m)])
+    return cdk, ckt_out, ck_synced, z
 
 
 def test_parallel_equals_serial_bitexact(tiny_corpus):
@@ -58,7 +64,7 @@ def test_parallel_equals_serial_bitexact(tiny_corpus):
     lda._rng.bit_generator.state = rng_state  # rewind so step() reuses it
     ref_cdk, ref_ckt, ref_ck, ref_z = _serial_replay(lda, u)
     lda.step()
-    # blocks rotated home after M rounds: stacked index == block id
+    # blocks rotated home after S·M rounds: slot (w, s) == block s·M + w
     np.testing.assert_array_equal(np.array(lda.state.cdk), ref_cdk)
     np.testing.assert_array_equal(np.array(lda.state.ckt), ref_ckt)
     np.testing.assert_array_equal(np.array(lda.state.ck_synced), ref_ck)
