@@ -1,6 +1,6 @@
 """Paper Table 1: model-size feasibility and time-to-converge.
 
-Three parts:
+Four parts:
   (a) feasibility arithmetic at the paper's true scales (Pubmed/Wiki
       unigram/bigram × K) — per-worker model bytes under MP (V·K/(S·M))
       vs DP (V·K), against the paper's 8 GB low-end node (and the v5e
@@ -10,7 +10,12 @@ Three parts:
       sizes, MP vs DP, on this container;
   (c) measured ``blocks_per_worker`` sweep: peak resident block bytes vs
       total model bytes (asserting the ceil(V/(S·M))×K law) and the
-      per-iteration cost of deeper pipelining.
+      per-iteration cost of deeper pipelining;
+  (d) measured hybrid (D, M, S) sweep over the 2D (data, model) grid
+      (DESIGN.md §8) at a fixed total worker budget: resident bytes stay
+      a function of S·M only, distributed bytes grow with D, and the
+      per-round-synced staleness error stays orders below the AD-LDA
+      corner (D = R, M = 1).
 """
 from __future__ import annotations
 
@@ -95,6 +100,46 @@ def pipeline_sweep(seed=0, workers=8):
     return rows
 
 
+def hybrid_sweep(seed=0):
+    """Measured (D, M, S) sweep on the hybrid 2D grid: every row uses the
+    same corpus and (mostly) the same total worker count R = D·M, so the
+    numbers isolate how the grid SHAPE trades memory against staleness.
+
+    The AD-LDA corner (M=1) carries the full table per replica and syncs
+    once per S rounds; the pure-MP corner (D=1) has zero cross-replica
+    staleness; hybrids sit in between — the paper's Fig 2–4 story as one
+    table.
+    """
+    vocab, topics = 1600, 32
+    corpus, _, _ = synthetic_corpus(250, vocab, topics, 50, seed=seed)
+    rows = []
+    for d, m, s in [(1, 8, 1), (2, 4, 1), (4, 2, 1), (8, 1, 1),
+                    (2, 4, 2), (4, 2, 2), (2, 2, 4)]:
+        lda = ModelParallelLDA(corpus, topics, m, seed=seed,
+                               data_parallel=d, blocks_per_worker=s)
+        rep = lda.memory_report()
+        vb = -(-vocab // (s * m))
+        assert rep["resident_block_bytes"] == vb * topics * 4, rep
+        assert rep["distributed_model_bytes"] == \
+            d * rep["replica_model_bytes"], rep
+        t0 = time.time()
+        lda.run(3)
+        rows.append({
+            "data_parallel": d,
+            "num_workers": m,
+            "blocks_per_worker": s,
+            "grid_rows": rep["num_shards"],
+            "num_blocks": rep["num_blocks"],
+            "resident_block_bytes": rep["resident_block_bytes"],
+            "replica_model_bytes": rep["replica_model_bytes"],
+            "distributed_model_bytes": rep["distributed_model_bytes"],
+            "seconds_3_iters": round(time.time() - t0, 2),
+            "delta_error": lda.delta_error(),
+            "log_likelihood": lda.log_likelihood(),
+        })
+    return rows
+
+
 def measured(seed=0):
     """Scaled-down Table 1: grow V×K, measure time to reach a target LL."""
     rows = []
@@ -125,18 +170,22 @@ def measured(seed=0):
 def run():
     out = {"feasibility_paper_scale": feasibility(),
            "measured_scaled_down": measured(),
-           "blocks_per_worker_sweep": pipeline_sweep()}
+           "blocks_per_worker_sweep": pipeline_sweep(),
+           "hybrid_dms_sweep": hybrid_sweep()}
     save_result("table1_model_size", out)
     big = out["feasibility_paper_scale"][-1]
     m = out["measured_scaled_down"][-1]
     deep = out["blocks_per_worker_sweep"][-1]
+    hyb = out["hybrid_dms_sweep"][1]          # (D=2, M=4, S=1) hybrid row
     emit_csv_row("table1_model_size", m["mp"]["seconds"] * 1e6,
                  f"bigram10k_dp_dense_gib={big['dense_dp_per_worker_gib']};"
                  f"mp_dense_gib={big['dense_mp_per_worker_gib']};"
                  f"mp_sparse_fits_8gb={big['mp_fits_8gb_node_sparse']};"
                  f"mp_iters={m['mp']['iters']};dp_iters={m['dp']['iters']};"
                  f"s{deep['blocks_per_worker']}_resident_frac="
-                 f"{deep['resident_fraction']}")
+                 f"{deep['resident_fraction']};"
+                 f"hybrid_d{hyb['data_parallel']}m{hyb['num_workers']}"
+                 f"_delta={hyb['delta_error']:.5f}")
     return out
 
 

@@ -11,6 +11,17 @@ eliminates by construction.
 
 Per-worker model memory is ``O(V·K)`` regardless of M — the "big model"
 failure mode of Table 1 / Fig 4a.
+
+Since the engine grew the hybrid 2D ``(data, model)`` grid (DESIGN.md §8)
+this reconciliation logic also lives INSIDE ``core/engine`` as the
+degenerate ``M = 1`` configuration: one model worker × ``D`` replicas
+gives every replica the whole table, one round per iteration (at ``S=1``)
+and a delta all-reduce at the round boundary — exactly AD-LDA
+(:func:`adlda_engine` builds it).  This module is kept as the thin
+self-contained baseline the Fig 2–4 comparisons and the staleness
+regression tests run against: it chunk-splits tokens (``syncs_per_iter``)
+rather than vocabulary blocks, which is the classic Yahoo!LDA staleness
+model the paper argues against.
 """
 from __future__ import annotations
 
@@ -74,6 +85,25 @@ def _iteration_dp(cdk, ckt_local, ck_local, ckt_global, ck_global,
         z_chunks.append(z_new)
     z_out = jnp.stack(z_chunks, axis=1)
     return cdk, ckt_loc, ck_loc, ckt_g, ck_g, z_out, jnp.stack(errs)
+
+
+def adlda_engine(corpus: Corpus, num_topics: int, num_replicas: int,
+                 blocks_per_worker: int = 1, **kwargs):
+    """AD-LDA as the degenerate hybrid-engine configuration (DESIGN.md §8).
+
+    ``M = 1`` model worker × ``D = num_replicas`` data replicas: every
+    replica holds the full word-topic table (the vocabulary is one block
+    per slot, ``B = S``), each iteration runs ``S`` rounds, and the
+    engine's per-round delta psum along ``data`` IS the AD-LDA all-reduce
+    — ``blocks_per_worker`` plays the role of ``syncs_per_iter``, slicing
+    sync points by vocabulary block instead of token chunk.  Returns a
+    :class:`repro.core.engine.api.ModelParallelLDA`, so ``delta_error()``
+    and the oracle harness apply unchanged.
+    """
+    from repro.core.engine.api import ModelParallelLDA
+    return ModelParallelLDA(corpus, num_topics, num_workers=1,
+                            data_parallel=num_replicas,
+                            blocks_per_worker=blocks_per_worker, **kwargs)
 
 
 class DataParallelLDA:

@@ -7,7 +7,11 @@ Layout:
 * ``rounds.py``   — the shared per-(worker, round) sampling step and the
   sampler registry both backends draw from;
 * ``backends.py`` — the two bit-identical execution backends
-  (``vmap`` single-device batch, ``shard_map`` one-worker-per-device);
+  (``vmap`` single-device batch, ``shard_map`` one-worker-per-device),
+  generalized to the hybrid 2D ``(data, model)`` grid (DESIGN.md §8);
+* ``reference.py`` — the FROZEN pre-2D 1D implementation, kept only as
+  the bit-exactness anchor for ``tests/test_engine_2d.py``; harness-only,
+  deliberately NOT re-exported here;
 * ``api.py``      — the :class:`ModelParallelLDA` facade.
 
 ``repro.core.model_parallel`` re-exports the public names so pre-package

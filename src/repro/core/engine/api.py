@@ -1,5 +1,6 @@
 """Public engine facade: :class:`ModelParallelLDA` (the paper's full
-system, generalized to ``S`` blocks per worker — DESIGN.md §2–§3).
+system, generalized to ``S`` blocks per worker and ``D`` data replicas —
+DESIGN.md §2–§3, §8).
 
 Example::
 
@@ -8,10 +9,26 @@ Example::
     history = lda.run(num_iterations=50)
     state = lda.gather_counts()
 
+    hybrid = ModelParallelLDA(corpus, num_topics=64, num_workers=8,
+                              data_parallel=4)    # 4 × 8 (data, model) grid
+    hybrid.run(num_iterations=50)
+
 ``blocks_per_worker`` (``S``) is the model-capacity lever: the resident
 word-topic block per worker is ``ceil(V / (S·M)) × K`` rows, so growing
 ``S`` shrinks the per-worker resident model without adding workers —
 the paper's "model size exceeds any single node's RAM" claim as a tunable.
+
+``data_parallel`` (``D``) is the throughput lever: documents shard
+``D·M`` ways over a 2D ``(data, model)`` grid while each replica keeps a
+copy of the block pipeline, reconciled by a per-round delta psum along
+``data`` (the AD-LDA all-reduce confined to the resident slice).  The
+parallelization error stays confined to ``{C_k}`` within a round —
+doc-topic counts are exact by construction, word-topic counts exact at
+every round boundary — which is the quantity the paper measures in
+Figs 2–4.  ``D = 1`` is bit-identical to the original 1D engine
+(``engine/reference.py``); ``M = 1`` degenerates to AD-LDA
+(``core/data_parallel.py``'s staleness model with ``S`` vocabulary-sliced
+sync points per iteration).
 """
 from __future__ import annotations
 
@@ -38,15 +55,25 @@ class ModelParallelLDA:
                  seed: int = 0, sampler_mode: str = "scan",
                  sync_ck: bool = True, backend: str = "vmap",
                  mesh: Optional[Mesh] = None, axis: str = "w",
-                 blocks_per_worker: int = 1):
+                 blocks_per_worker: int = 1, data_parallel: int = 1,
+                 data_axis: str = "data"):
         corpus.validate()
         if blocks_per_worker < 1:
             raise ValueError(
                 f"blocks_per_worker must be >= 1, got {blocks_per_worker}")
+        if data_parallel < 1:
+            raise ValueError(
+                f"data_parallel must be >= 1, got {data_parallel}")
+        if data_parallel > 1 and not sync_ck:
+            raise ValueError(
+                "data_parallel > 1 requires sync_ck=True: replica copies "
+                "of a block are only well-defined between round "
+                "boundaries (same restriction as the host oracle)")
         self.corpus = corpus
         self.num_topics = int(num_topics)
         self.num_workers = int(num_workers)
         self.blocks_per_worker = int(blocks_per_worker)
+        self.data_parallel = int(data_parallel)
         self.alpha = jnp.full((num_topics,), alpha, jnp.float32) \
             if np.isscalar(alpha) else jnp.asarray(alpha, jnp.float32)
         self.beta = float(beta)
@@ -55,19 +82,45 @@ class ModelParallelLDA:
         self.sync_ck = bool(sync_ck)
         self.backend = backend
         self.axis = axis
+        self.data_axis = data_axis
         self._rng = np.random.default_rng(seed)
         self._build()
         if backend == "shard_map":
+            # 2D (data, model) layout when D > 1 or the caller hands us a
+            # mesh that already carries the data axis (lets tests exercise
+            # the 2D code path at D = 1).
+            use_2d = (self.data_parallel > 1
+                      or (mesh is not None and data_axis in mesh.axis_names))
+            need = self.num_shards
             if mesh is None:
-                devs = np.array(jax.devices()[:num_workers])
-                if devs.size < num_workers:
+                if len(jax.devices()) < need:
                     raise ValueError(
-                        f"shard_map backend needs {num_workers} devices, "
+                        f"shard_map backend needs {need} devices, "
                         f"have {len(jax.devices())}")
-                mesh = Mesh(devs, (axis,))
+                if use_2d:
+                    mesh = Mesh(
+                        np.array(jax.devices()[:need]).reshape(
+                            self.data_parallel, self.num_workers),
+                        (data_axis, axis))
+                else:
+                    mesh = Mesh(np.array(jax.devices()[:need]), (axis,))
+            else:
+                # a mismatched mesh would silently drop grid rows (each
+                # device keeps only its first local row) — reject early
+                want = {axis: self.num_workers}
+                if use_2d:
+                    want[data_axis] = self.data_parallel
+                got = dict(mesh.shape)
+                if got != want:
+                    raise ValueError(
+                        f"mesh axes {got} do not match the "
+                        f"(data_parallel={self.data_parallel}, "
+                        f"num_workers={self.num_workers}) grid; expected "
+                        f"exactly {want}")
             self.mesh = mesh
             self._iter_fn = make_shard_map_iteration(
-                mesh, axis, sampler_mode, sync_ck)
+                mesh, axis, sampler_mode, sync_ck,
+                data_axis=data_axis if use_2d else None)
         else:
             self.mesh = None
             self._iter_fn = None
@@ -75,7 +128,8 @@ class ModelParallelLDA:
     # -- construction ------------------------------------------------------
     def _build(self) -> None:
         self.layout = engine_state.build_layout(
-            self.corpus, self.num_workers, self.blocks_per_worker)
+            self.corpus, self.num_workers, self.blocks_per_worker,
+            self.data_parallel)
         z0 = self._rng.integers(
             0, self.num_topics, size=self.corpus.num_tokens).astype(np.int32)
         self.z_init = z0
@@ -113,6 +167,11 @@ class ModelParallelLDA:
         return self.layout.mask
 
     @property
+    def num_shards(self) -> int:
+        """Worker-grid rows ``R = D·M`` (== ``M`` at ``data_parallel=1``)."""
+        return self.layout.num_shards
+
+    @property
     def num_blocks(self) -> int:
         return self.layout.num_blocks
 
@@ -126,24 +185,34 @@ class ModelParallelLDA:
         return self.layout.resident_block_rows
 
     def memory_report(self) -> dict:
-        """Resident-vs-total model bytes (the paper's capacity claim)."""
+        """Resident-vs-total model bytes (the paper's capacity claim),
+        extended with the hybrid grid: the model is replicated ``D`` times
+        (one copy per data replica, sharded over its ``M`` workers), so
+        distributed bytes grow with ``D`` while the per-worker resident
+        block stays ``ceil(V/(S·M)) × K`` — the two levers are orthogonal.
+        """
         k = self.num_topics
         vb = self.resident_block_rows
         return {
             "num_workers": self.num_workers,
             "blocks_per_worker": self.blocks_per_worker,
+            "data_parallel": self.data_parallel,
+            "num_shards": self.num_shards,
             "num_blocks": self.num_blocks,
             "resident_block_shape": (vb, k),
             "resident_block_bytes": vb * k * 4,
             "parked_bytes_per_worker": (self.blocks_per_worker - 1)
             * vb * k * 4,
             "total_model_bytes": self.corpus.vocab_size * k * 4,
+            "replica_model_bytes": self.num_blocks * vb * k * 4,
+            "distributed_model_bytes": self.data_parallel
+            * self.num_blocks * vb * k * 4,
         }
 
     # -- stepping ----------------------------------------------------------
     def _uniforms(self) -> jax.Array:
-        b, m, cap = self.num_rounds, self.num_workers, self.capacity
-        u = self._rng.random((b, m, cap), np.float32)  # [rounds, workers, T]
+        b, r, cap = self.num_rounds, self.num_shards, self.capacity
+        u = self._rng.random((b, r, cap), np.float32)  # [rounds, rows, T]
         return jnp.asarray(u)
 
     def step(self) -> None:
@@ -153,7 +222,8 @@ class ModelParallelLDA:
             self.state, errs = iteration_vmap(
                 self.state, u, self.doc, self.woff, self.mask,
                 self.alpha, jnp.float32(self.beta), jnp.float32(self.vbeta),
-                sampler_mode=self.sampler_mode, sync_ck=self.sync_ck)
+                sampler_mode=self.sampler_mode, sync_ck=self.sync_ck,
+                data_parallel=self.data_parallel)
         else:
             s = self.state
             out = self._iter_fn(

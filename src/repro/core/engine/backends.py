@@ -1,4 +1,4 @@
-"""The two bit-identical execution backends (DESIGN.md §2–§3).
+"""The two bit-identical execution backends (DESIGN.md §2–§3, §8).
 
 One iteration = ``B = S·M`` rounds.  Every round each worker samples its
 resident block (slot 0 of its queue), hands exactly that block to ring
@@ -7,17 +7,31 @@ enqueues the received block at the tail of its queue, where it surfaces
 ``S`` rounds later.  At ``S = 1`` the queue degenerates to the paper's
 original rotation: the received block is resident immediately.
 
-* ``vmap`` backend — the worker axis is a batch axis on one device;
-  ``ppermute`` becomes ``jnp.roll``, ``psum`` a sum.  Runs anywhere, used
-  by tests/benchmarks on the single-CPU container.
-* ``shard_map`` backend — the worker axis is a mesh axis; collectives are
-  real.  This is the production path; on the dry-run mesh the round
-  rotation lowers to HLO ``collective-permute``.
+Hybrid data×model parallelism (``data_parallel = D``, DESIGN.md §8): all
+per-worker arrays carry one leading axis of length ``R = D·M`` (row
+``g = d·M + m``).  The ``D`` replicas run the same model-axis rotation
+over replicated copies of the ``S·M`` blocks; at every round boundary the
+just-sampled resident copies are reconciled by a delta psum along the
+data axis — ``block' = block_pre + Σ_d (block_d − block_pre)`` — before
+they rotate, so parked copies never diverge across replicas.  This is the
+AD-LDA all-reduce of ``core/data_parallel.py`` folded into the engine,
+confined to the one resident ``[Vb, K]`` slice per round; at ``D = 1``
+the reconciliation vanishes and both backends execute exactly the frozen
+1D reference (``engine/reference.py`` — enforced bitwise by
+``tests/test_engine_2d.py``).
+
+* ``vmap`` backend — the worker grid is a batch axis on one device;
+  ``ppermute`` becomes a per-replica ``jnp.roll``, ``psum`` a sum.  Runs
+  anywhere, used by tests/benchmarks on the single-CPU container.
+* ``shard_map`` backend — the grid maps onto a ``(data, model)`` mesh;
+  collectives are real.  This is the production path; the round rotation
+  lowers to HLO ``collective-permute`` on the model axis and the replica
+  reconciliation to an ``all-reduce`` on the data axis.
 
 Both backends share :func:`repro.core.engine.rounds.worker_round`, so
 agreement tests are meaningful, and the non-separable topic totals
 ``{C_k}`` are synchronized once per round via ``psum`` of per-worker
-deltas and drift in between (§3.3).
+deltas over the WHOLE grid and drift in between (§3.3).
 """
 from __future__ import annotations
 
@@ -33,30 +47,51 @@ from repro.core.engine.rounds import resolve_sampler, worker_round
 from repro.core.engine.state import MPState
 
 
-@partial(jax.jit, static_argnames=("sampler_mode", "sync_ck"))
+@partial(jax.jit, static_argnames=("sampler_mode", "sync_ck",
+                                   "data_parallel"))
 def iteration_vmap(state: MPState, u, doc, woff, mask, alpha, beta, vbeta,
-                   sampler_mode: str = "scan", sync_ck: bool = True):
+                   sampler_mode: str = "scan", sync_ck: bool = True,
+                   data_parallel: int = 1):
     """One full iteration = S·M rounds with rotation, stacked on one device.
 
-    ``u`` is ``[B, M, T]`` — one uniform per (round, worker, token slot).
+    ``u`` is ``[B, R, T]`` — one uniform per (round, grid row, token slot),
+    with ``R = data_parallel · M``.
     """
     sampler = resolve_sampler(sampler_mode)
     round_fn = partial(worker_round, sampler=sampler)
+    d_ = data_parallel
 
     def round_step(carry, u_r):
         cdk, ckt, blk, ck_syn, ck_loc, z = carry
-        res_ckt = ckt[:, 0]
+        res_pre = ckt[:, 0]                  # [R, Vb, K] round-start copies
         res_blk = blk[:, 0]
         cdk, res_ckt, ck_loc, z = jax.vmap(
             round_fn, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0,
                                None, None, None))(
-            cdk, res_ckt, res_blk, ck_loc, z, u_r, doc, woff, mask,
+            cdk, res_pre, res_blk, ck_loc, z, u_r, doc, woff, mask,
             alpha, beta, vbeta)
-        # rotation m -> m-1: worker m-1 receives worker m's resident block
-        # and parks it at the tail of its queue (immediately resident when
-        # S == 1).  Parked slots shift one toward the head.
-        res_ckt = jnp.roll(res_ckt, -1, axis=0)
-        res_blk = jnp.roll(res_blk, -1, axis=0)
+        if d_ > 1:
+            # delta-psum reconciliation along data (DESIGN.md §8): replica
+            # copies of block b were identical at round start (res_pre),
+            # diverged during sampling; commit pre + Σ_d (post_d − pre).
+            r_, vb, k = res_ckt.shape
+            m_ = r_ // d_
+            delta = (res_ckt - res_pre).reshape(d_, m_, vb, k).sum(axis=0)
+            rec = res_pre.reshape(d_, m_, vb, k)[0] + delta
+            res_ckt = jnp.broadcast_to(rec[None], (d_, m_, vb, k)) \
+                .reshape(r_, vb, k)
+            # rotation m -> m-1 within every replica
+            res_ckt = jnp.roll(res_ckt.reshape(d_, m_, vb, k), -1,
+                               axis=1).reshape(r_, vb, k)
+            res_blk = jnp.roll(res_blk.reshape(d_, m_), -1,
+                               axis=1).reshape(r_)
+        else:
+            # rotation m -> m-1: worker m-1 receives worker m's resident
+            # block and parks it at the tail of its queue (immediately
+            # resident when S == 1).  Parked slots shift one toward the
+            # head.
+            res_ckt = jnp.roll(res_ckt, -1, axis=0)
+            res_blk = jnp.roll(res_blk, -1, axis=0)
         ckt = jnp.concatenate([ckt[:, 1:], res_ckt[:, None]], axis=1)
         blk = jnp.concatenate([blk[:, 1:], res_blk[:, None]], axis=1)
         # paper Fig-3 error: pre-sync ℓ1 drift of local {C_k} vs true totals
@@ -76,24 +111,39 @@ def iteration_vmap(state: MPState, u, doc, woff, mask, alpha, beta, vbeta,
 
 
 def make_shard_map_iteration(mesh: Mesh, axis: str, sampler_mode: str,
-                             sync_ck: bool):
-    """Build the jitted per-device iteration function for ``mesh``."""
+                             sync_ck: bool, data_axis: str | None = None):
+    """Build the jitted per-device iteration function for ``mesh``.
+
+    ``axis`` is the model axis carrying the block ring.  When ``data_axis``
+    is given the mesh is 2D ``(data, model)``: per-worker arrays shard
+    their leading ``R = D·M`` axis over BOTH axes (data-major, matching
+    ``state.build_layout``'s row order), resident blocks are reconciled by
+    a per-round delta ``psum`` along ``data``, and ``{C_k}`` syncs over
+    the whole grid.  ``data_axis=None`` is the original 1D worker ring.
+    """
     perm = sched.rotation_permutation(mesh.shape[axis])
     sampler = resolve_sampler(sampler_mode)
+    ck_axes = (data_axis, axis) if data_axis is not None else axis
 
     def per_device(cdk, ckt, blk, ck_syn, ck_loc, z, u, doc, woff, mask,
                    alpha, beta, vbeta):
-        # local shards arrive with a leading worker axis of size 1
+        # local shards arrive with a leading grid axis of size 1
         cdk, ckt, blk, ck_loc, z = (x[0] for x in (cdk, ckt, blk, ck_loc, z))
         doc, woff, mask, u = (x[0] for x in (doc, woff, mask, u))
 
         def round_step(carry, u_r):
             cdk, ckt, blk, ck_syn, ck_loc, z = carry
-            res_ckt = ckt[0]
+            res_pre = ckt[0]
             res_blk = blk[0]
             cdk, res_ckt, ck_loc, z = worker_round(
-                cdk, res_ckt, res_blk, ck_loc, z, u_r, doc, woff, mask,
+                cdk, res_pre, res_blk, ck_loc, z, u_r, doc, woff, mask,
                 alpha, beta, vbeta, sampler=sampler)
+            if data_axis is not None:
+                # delta-psum reconciliation of the D replica copies of the
+                # resident block (DESIGN.md §8) — the only cross-replica
+                # traffic, one [Vb, K] all-reduce per round.
+                res_ckt = res_pre + jax.lax.psum(res_ckt - res_pre,
+                                                 data_axis)
             # Algorithm 2 commit+request: ONLY the resident block travels —
             # per-round traffic stays one [Vb, K] block per worker no
             # matter how large S makes the total model.
@@ -101,11 +151,11 @@ def make_shard_map_iteration(mesh: Mesh, axis: str, sampler_mode: str,
             res_blk = jax.lax.ppermute(res_blk, axis, perm)
             ckt = jnp.concatenate([ckt[1:], res_ckt[None]], axis=0)
             blk = jnp.concatenate([blk[1:], res_blk[None]], axis=0)
-            ck_true = ck_syn + jax.lax.psum(ck_loc - ck_syn, axis)
+            ck_true = ck_syn + jax.lax.psum(ck_loc - ck_syn, ck_axes)
             n_tok = jnp.maximum(ck_true.sum(), 1).astype(jnp.float32)
             err = jax.lax.pmean(
                 jnp.abs(ck_loc - ck_true).sum().astype(jnp.float32),
-                axis) / n_tok
+                ck_axes) / n_tok
             if sync_ck:
                 ck_loc = ck_true
                 ck_syn = ck_true
@@ -117,7 +167,7 @@ def make_shard_map_iteration(mesh: Mesh, axis: str, sampler_mode: str,
         return (cdk[None], ckt[None], blk[None], ck_syn, ck_loc[None],
                 z[None], errs)
 
-    w = P(axis)
+    w = P(ck_axes) if data_axis is not None else P(axis)
     return jax.jit(compat.shard_map(
         per_device, mesh=mesh,
         in_specs=(w, w, w, P(), w, w, w, w, w, w, P(), P(), P()),

@@ -1,0 +1,110 @@
+"""Frozen pre-2D reference implementation of the 1D worker-ring engine.
+
+This module is a verbatim snapshot of ``backends.py`` as it stood before
+the engine was generalized to the 2D ``(data, model)`` mesh (DESIGN.md
+§8).  It exists ONLY for the bit-exactness harness: ``backends.py`` must
+produce exactly these results whenever ``data_parallel == 1``, and
+``tests/test_engine_2d.py`` enforces that by stepping the same state
+through both implementations and comparing every array bitwise.
+
+Do not extend this module — new engine features belong in ``backends.py``;
+this file only changes if the frozen 1D semantics themselves are ever
+deliberately re-baselined (which requires re-proving oracle equality).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
+from repro.core import schedule as sched
+from repro.core.engine.rounds import resolve_sampler, worker_round
+from repro.core.engine.state import MPState
+
+
+@partial(jax.jit, static_argnames=("sampler_mode", "sync_ck"))
+def iteration_vmap_1d(state: MPState, u, doc, woff, mask, alpha, beta,
+                      vbeta, sampler_mode: str = "scan",
+                      sync_ck: bool = True):
+    """One full iteration = S·M rounds with rotation, stacked on one device.
+
+    ``u`` is ``[B, M, T]`` — one uniform per (round, worker, token slot).
+    """
+    sampler = resolve_sampler(sampler_mode)
+    round_fn = partial(worker_round, sampler=sampler)
+
+    def round_step(carry, u_r):
+        cdk, ckt, blk, ck_syn, ck_loc, z = carry
+        res_ckt = ckt[:, 0]
+        res_blk = blk[:, 0]
+        cdk, res_ckt, ck_loc, z = jax.vmap(
+            round_fn, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0,
+                               None, None, None))(
+            cdk, res_ckt, res_blk, ck_loc, z, u_r, doc, woff, mask,
+            alpha, beta, vbeta)
+        res_ckt = jnp.roll(res_ckt, -1, axis=0)
+        res_blk = jnp.roll(res_blk, -1, axis=0)
+        ckt = jnp.concatenate([ckt[:, 1:], res_ckt[:, None]], axis=1)
+        blk = jnp.concatenate([blk[:, 1:], res_blk[:, None]], axis=1)
+        ck_true = ck_syn + (ck_loc - ck_syn[None, :]).sum(axis=0)
+        n_tok = jnp.maximum(ck_true.sum(), 1).astype(jnp.float32)
+        err = (jnp.abs(ck_loc - ck_true[None, :]).sum().astype(jnp.float32)
+               / (ck_loc.shape[0] * n_tok))
+        if sync_ck:
+            ck_loc = jnp.broadcast_to(ck_true, ck_loc.shape)
+            ck_syn = ck_true
+        return (cdk, ckt, blk, ck_syn, ck_loc, z), err
+
+    carry = (state.cdk, state.ckt, state.block_id, state.ck_synced,
+             state.ck_local, state.z)
+    carry, errs = jax.lax.scan(round_step, carry, u)
+    return MPState(*carry), errs
+
+
+def make_shard_map_iteration_1d(mesh: Mesh, axis: str, sampler_mode: str,
+                                sync_ck: bool):
+    """Build the jitted per-device iteration function for a 1-axis mesh."""
+    perm = sched.rotation_permutation(mesh.shape[axis])
+    sampler = resolve_sampler(sampler_mode)
+
+    def per_device(cdk, ckt, blk, ck_syn, ck_loc, z, u, doc, woff, mask,
+                   alpha, beta, vbeta):
+        cdk, ckt, blk, ck_loc, z = (x[0] for x in (cdk, ckt, blk, ck_loc, z))
+        doc, woff, mask, u = (x[0] for x in (doc, woff, mask, u))
+
+        def round_step(carry, u_r):
+            cdk, ckt, blk, ck_syn, ck_loc, z = carry
+            res_ckt = ckt[0]
+            res_blk = blk[0]
+            cdk, res_ckt, ck_loc, z = worker_round(
+                cdk, res_ckt, res_blk, ck_loc, z, u_r, doc, woff, mask,
+                alpha, beta, vbeta, sampler=sampler)
+            res_ckt = jax.lax.ppermute(res_ckt, axis, perm)
+            res_blk = jax.lax.ppermute(res_blk, axis, perm)
+            ckt = jnp.concatenate([ckt[1:], res_ckt[None]], axis=0)
+            blk = jnp.concatenate([blk[1:], res_blk[None]], axis=0)
+            ck_true = ck_syn + jax.lax.psum(ck_loc - ck_syn, axis)
+            n_tok = jnp.maximum(ck_true.sum(), 1).astype(jnp.float32)
+            err = jax.lax.pmean(
+                jnp.abs(ck_loc - ck_true).sum().astype(jnp.float32),
+                axis) / n_tok
+            if sync_ck:
+                ck_loc = ck_true
+                ck_syn = ck_true
+            return (cdk, ckt, blk, ck_syn, ck_loc, z), err
+
+        carry, errs = jax.lax.scan(
+            round_step, (cdk, ckt, blk, ck_syn, ck_loc, z), u)
+        cdk, ckt, blk, ck_syn, ck_loc, z = carry
+        return (cdk[None], ckt[None], blk[None], ck_syn, ck_loc[None],
+                z[None], errs)
+
+    w = P(axis)
+    return jax.jit(compat.shard_map(
+        per_device, mesh=mesh,
+        in_specs=(w, w, w, P(), w, w, w, w, w, w, P(), P(), P()),
+        out_specs=(w, w, w, P(), w, w, P()),
+        check_vma=False))

@@ -2,9 +2,13 @@
 
 ``worker_round`` is Algorithm 2 lines 2–5 for ONE worker and ONE round:
 sample the token group of the resident block.  Both execution backends
-(`backends.py`) call this exact function — vmapped over the worker axis or
-per-device under shard_map — which is what makes backend-agreement tests
-bit-exact rather than statistical.
+(`backends.py`) call this exact function — vmapped over the ``R = D·M``
+worker-grid axis or per-device under shard_map — which is what makes
+backend-agreement tests bit-exact rather than statistical.  The step is
+oblivious to the hybrid layout: a worker at grid row ``g = d·M + m``
+samples its own doc shard against its replica's copy of the resident
+block; all cross-worker coordination (rotation along model, delta-psum
+reconciliation along data, ``C_k`` sync) lives in the backends.
 
 Samplers are pluggable through a registry so new kernels (e.g. an
 alternative Pallas variant) can be added without touching the engine:

@@ -1,12 +1,20 @@
 """Engine state: per-worker slot queues + construction and gathering.
 
-State layout (DESIGN.md §3).  With ``M`` workers and ``S`` blocks per
-worker the vocabulary is split into ``B = S·M`` blocks; each worker keeps a
-length-``S`` FIFO of ``[Vb, K]`` word-topic blocks.  Slot 0 is the
-*resident* block — the only one touched by compute and the only one that
-travels in the per-round rotation; slots ``1..S-1`` are *parked* (they
-model the paper's distributed key-value store / host offload, where
+State layout (DESIGN.md §3, §8).  With ``M`` model workers and ``S``
+blocks per worker the vocabulary is split into ``B = S·M`` blocks; each
+worker keeps a length-``S`` FIFO of ``[Vb, K]`` word-topic blocks.  Slot 0
+is the *resident* block — the only one touched by compute and the only one
+that travels in the per-round rotation; slots ``1..S-1`` are *parked*
+(they model the paper's distributed key-value store / host offload, where
 non-resident blocks live outside worker RAM).
+
+Hybrid data×model parallelism (DESIGN.md §8) adds ``D`` data replicas:
+every per-worker array keeps ONE leading axis of length ``R = D·M``
+(row ``g = d·M + m``, data-major), so at ``D = 1`` shapes are bit-for-bit
+those of the original 1D engine.  Documents are sharded ``R`` ways; the
+block queues are REPLICATED along data (replica ``d``'s row ``d·M + m``
+holds the same blocks as row ``m``) and reconciled by a per-round delta
+psum on the data axis.
 """
 from __future__ import annotations
 
@@ -22,20 +30,21 @@ from repro.core.counts import CountState
 from repro.core.invindex import (InvertedIndex, build_inverted_index,
                                  common_block_capacity, scatter_assignments)
 from repro.data.corpus import Corpus
-from repro.data.sharding import WorkerShard, worker_shard
+from repro.data.sharding import WorkerShard, grid_shard
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class MPState:
-    """Stacked per-worker state (leading axis = workers)."""
+    """Stacked per-worker state (leading axis = the ``R = D·M`` grid rows,
+    data-major; ``R == M`` when ``data_parallel == 1``)."""
 
-    cdk: jax.Array        # [M, Dloc, K]
-    ckt: jax.Array        # [M, S, Vb, K] slot queue; slot 0 = resident
-    block_id: jax.Array   # [M, S] which block sits in each slot
+    cdk: jax.Array        # [R, Dloc, K]
+    ckt: jax.Array        # [R, S, Vb, K] slot queue; slot 0 = resident
+    block_id: jax.Array   # [R, S] which block sits in each slot
     ck_synced: jax.Array  # [K] totals agreed at last round boundary
-    ck_local: jax.Array   # [M, K] per-worker drifting view (§3.3)
-    z: jax.Array          # [M, B, T] assignments in inverted-index layout
+    ck_local: jax.Array   # [R, K] per-worker drifting view (§3.3)
+    z: jax.Array          # [R, B, T] assignments in inverted-index layout
 
     def tree_flatten(self):
         return ((self.cdk, self.ckt, self.block_id, self.ck_synced,
@@ -47,6 +56,11 @@ class MPState:
 
     # -- shape views -------------------------------------------------------
     @property
+    def num_shards(self) -> int:
+        """Grid rows ``R = D·M`` (== ``M`` for the 1D engine)."""
+        return self.ckt.shape[0]
+
+    @property
     def num_workers(self) -> int:
         return self.ckt.shape[0]
 
@@ -56,12 +70,12 @@ class MPState:
 
     @property
     def resident_ckt(self) -> jax.Array:
-        """[M, Vb, K] — the block each worker is actively sampling."""
+        """[R, Vb, K] — the block each worker is actively sampling."""
         return self.ckt[:, 0]
 
     @property
     def resident_block(self) -> jax.Array:
-        """[M] — id of each worker's resident block."""
+        """[R] — id of each worker's resident block."""
         return self.block_id[:, 0]
 
     def local_ck_views(self) -> np.ndarray:
@@ -84,17 +98,23 @@ class EngineLayout:
     corpus: Corpus
     num_workers: int
     blocks_per_worker: int
+    data_parallel: int
     partition: sched.VocabPartition
     shards: List[WorkerShard]
     indexes: List[InvertedIndex]
     capacity: int
-    doc: jax.Array    # [M, B, T] int32
-    woff: jax.Array   # [M, B, T] int32
-    mask: jax.Array   # [M, B, T] bool
+    doc: jax.Array    # [R, B, T] int32
+    woff: jax.Array   # [R, B, T] int32
+    mask: jax.Array   # [R, B, T] bool
 
     @property
     def num_blocks(self) -> int:
         return self.partition.num_blocks
+
+    @property
+    def num_shards(self) -> int:
+        """Worker-grid rows ``R = D·M`` — leading axis of every array."""
+        return self.data_parallel * self.num_workers
 
     @property
     def num_rounds(self) -> int:
@@ -108,14 +128,16 @@ class EngineLayout:
 
 
 def build_layout(corpus: Corpus, num_workers: int,
-                 blocks_per_worker: int = 1) -> EngineLayout:
-    """Shard documents, partition the vocabulary into ``S·M`` blocks, and
-    build each worker's per-block inverted index with a common capacity."""
+                 blocks_per_worker: int = 1,
+                 data_parallel: int = 1) -> EngineLayout:
+    """Shard documents ``R = D·M`` ways, partition the vocabulary into
+    ``B = S·M`` blocks (shared across data replicas), and build each grid
+    cell's per-block inverted index with a common capacity."""
     num_blocks = num_workers * blocks_per_worker
     partition = sched.partition_vocab(corpus.vocab_size, num_blocks)
-    sched.validate_schedule(num_workers, blocks_per_worker)
-    shards = [worker_shard(corpus, w, num_workers)
-              for w in range(num_workers)]
+    sched.validate_schedule_2d(data_parallel, num_workers, blocks_per_worker)
+    shards = [grid_shard(corpus, d, m, data_parallel, num_workers)
+              for d in range(data_parallel) for m in range(num_workers)]
     cap = common_block_capacity((s.word for s in shards), partition)
     indexes = [build_inverted_index(s.doc_local, s.word, partition, cap)
                for s in shards]
@@ -124,7 +146,8 @@ def build_layout(corpus: Corpus, num_workers: int,
     mask = np.stack([i.mask for i in indexes])
     return EngineLayout(
         corpus=corpus, num_workers=num_workers,
-        blocks_per_worker=blocks_per_worker, partition=partition,
+        blocks_per_worker=blocks_per_worker, data_parallel=data_parallel,
+        partition=partition,
         shards=shards, indexes=indexes, capacity=cap,
         doc=jnp.asarray(doc), woff=jnp.asarray(woff),
         mask=jnp.asarray(mask))
@@ -136,51 +159,65 @@ def init_state(layout: EngineLayout, num_topics: int,
 
     Slot-major placement: block ``b = s·M + m`` starts in slot ``s`` of
     worker ``m`` (``schedule.home_slot``), so at ``S = 1`` worker ``m``
-    opens holding block ``m`` exactly as the original engine did.
+    opens holding block ``m`` exactly as the original engine did.  With
+    ``D > 1`` data replicas the block queues of the ``M`` model positions
+    are tiled along data: grid row ``d·M + m`` opens with the same queue
+    as row ``m`` (replicated model, DESIGN.md §8).
     """
     m, s_ = layout.num_workers, layout.blocks_per_worker
+    d_, r_ = layout.data_parallel, layout.num_shards
     b, k = layout.num_blocks, num_topics
     part, cap = layout.partition, layout.capacity
     vb = part.block_size
     dloc = layout.shards[0].num_local_docs
 
-    cdk = np.zeros((m, dloc, k), np.int32)
+    cdk = np.zeros((r_, dloc, k), np.int32)
     ckt_blocks = np.zeros((b, vb, k), np.int32)
-    zarr = np.zeros((m, b, cap), np.int32)
-    for w, (shard, idx) in enumerate(zip(layout.shards, layout.indexes)):
+    zarr = np.zeros((r_, b, cap), np.int32)
+    for g, (shard, idx) in enumerate(zip(layout.shards, layout.indexes)):
         zz = z0[shard.token_id]
-        np.add.at(cdk[w], (shard.doc_local, zz), 1)
+        np.add.at(cdk[g], (shard.doc_local, zz), 1)
         blk = part.block_of_word(shard.word)
         off = part.word_offset_in_block(shard.word)
         np.add.at(ckt_blocks, (blk, off, zz), 1)
         real = idx.mask
-        zarr[w][real] = zz[idx.token_id[real]]
+        zarr[g][real] = zz[idx.token_id[real]]
     ck = ckt_blocks.sum(axis=(0, 1)).astype(np.int32)
 
-    # [B, Vb, K] -> [M, S, Vb, K]: block s·M + m into (worker m, slot s)
+    # [B, Vb, K] -> [M, S, Vb, K]: block s·M + m into (worker m, slot s);
+    # then tile the queues along the data axis -> [R = D·M, S, Vb, K]
     slots = ckt_blocks.reshape(s_, m, vb, k).swapaxes(0, 1)
+    slots = np.broadcast_to(slots[None], (d_, m, s_, vb, k)) \
+        .reshape(r_, s_, vb, k)
     block_id = (np.arange(s_)[None, :] * m
                 + np.arange(m)[:, None]).astype(np.int32)
+    block_id = np.broadcast_to(block_id[None], (d_, m, s_)) \
+        .reshape(r_, s_)
     return MPState(
         cdk=jnp.asarray(cdk),
         ckt=jnp.asarray(np.ascontiguousarray(slots)),
-        block_id=jnp.asarray(block_id),
+        block_id=jnp.asarray(np.ascontiguousarray(block_id)),
         ck_synced=jnp.asarray(ck),
-        ck_local=jnp.broadcast_to(jnp.asarray(ck), (m, k)),
+        ck_local=jnp.broadcast_to(jnp.asarray(ck), (r_, k)),
         z=jnp.asarray(zarr),
     )
 
 
 def gather_counts(layout: EngineLayout, state: MPState,
                   num_topics: int) -> CountState:
-    """Reassemble the global model (the KV-store "dump")."""
-    m, s_ = layout.num_workers, layout.blocks_per_worker
+    """Reassemble the global model (the KV-store "dump").
+
+    Only replica 0's queues are read for ``C_k^t``: at iteration (and
+    round) boundaries every replica's copy of a block is identical — the
+    per-round delta psum reconciles them — so any replica is the model.
+    """
+    s_ = layout.blocks_per_worker
     vb = layout.partition.block_size
     v, k = layout.corpus.vocab_size, num_topics
     ckt_full = np.zeros((layout.num_blocks * vb, k), np.int32)
     blocks = np.asarray(state.block_id)
     ckt = np.asarray(state.ckt)
-    for w in range(m):
+    for w in range(layout.num_workers):       # replica 0 rows: g = m
         for s in range(s_):
             blk = int(blocks[w, s])
             ckt_full[blk * vb:(blk + 1) * vb] = ckt[w, s]

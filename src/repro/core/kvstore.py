@@ -104,16 +104,17 @@ class HostWorker:
         store.put_block(block_id, ckt_block)
         store.put_ck_delta((ck - ck_synced).astype(np.int64))
 
-    def run_round_oracle(self, block_id: int, store: KVStore, ck_frozen,
-                         u_round, alpha, beta, vbeta) -> np.ndarray:
-        """Engine-identical round: jitted block sampler on the full padded
-        token slice, ``C_k`` frozen at the round boundary.  Returns the
-        worker's ``C_k`` delta (committed by the scheduler at round end)."""
+    def run_round_frozen(self, block_id: int, ckt_block: np.ndarray,
+                         ck_frozen, u_round, alpha, beta, vbeta):
+        """Engine-identical round against CALLER-OWNED frozen state: jitted
+        block sampler on the full padded token slice, both the block copy
+        and ``C_k`` frozen at the round boundary.  Returns the worker's
+        updated block copy and ``C_k`` delta; the scheduler reconciles
+        copies across data replicas and commits at round end (§8)."""
         import jax.numpy as jnp
 
         from repro.core.sampler import sweep_block_scan
 
-        ckt_block = store.get_block(block_id).astype(np.int32)
         out = sweep_block_scan(
             jnp.asarray(self.cdk), jnp.asarray(ckt_block),
             jnp.asarray(ck_frozen),
@@ -124,9 +125,19 @@ class HostWorker:
             jnp.asarray(u_round), alpha,
             jnp.float32(beta), jnp.float32(vbeta))
         self.cdk[...] = np.asarray(out[0])
-        store.put_block(block_id, np.asarray(out[1]))
         self.z[block_id] = np.asarray(out[3])
-        return np.asarray(out[2]) - ck_frozen
+        return np.asarray(out[1]), np.asarray(out[2]) - ck_frozen
+
+    def run_round_oracle(self, block_id: int, store: KVStore, ck_frozen,
+                         u_round, alpha, beta, vbeta) -> np.ndarray:
+        """Engine-identical round: fetch the block, run
+        :meth:`run_round_frozen`, commit.  Returns the worker's ``C_k``
+        delta (committed by the scheduler at round end)."""
+        ckt_block = store.get_block(block_id).astype(np.int32)
+        new_block, ck_delta = self.run_round_frozen(
+            block_id, ckt_block, ck_frozen, u_round, alpha, beta, vbeta)
+        store.put_block(block_id, new_block)
+        return ck_delta
 
 
 class HostModelParallelLDA:
@@ -137,12 +148,21 @@ class HostModelParallelLDA:
     frozen-``C_k``-per-round semantics, sampler kernel, and uniform stream
     as the SPMD engine — used by tests as the structural reference and by
     ``examples/architecture_walkthrough``.
+
+    ``data_parallel=D`` extends the oracle to the hybrid 2D grid
+    (DESIGN.md §8): documents shard over ``R = D·M`` host workers, the
+    store still holds ONE copy of each of the ``S·M`` blocks, and within a
+    round every replica of model position ``m`` samples the same frozen
+    block value; the scheduler sums their deltas and commits once at the
+    round boundary — the serial transcript of the engine's delta psum
+    along the data axis.  Bit-identical to
+    ``ModelParallelLDA(..., data_parallel=D)`` for any ``(D, M, S)``.
     """
 
     def __init__(self, corpus: Corpus, num_topics: int, num_workers: int,
                  alpha: float = 0.1, beta: float = 0.01, seed: int = 0,
                  blocks_per_worker: int = 1, sampler: str = "numpy",
-                 ck_sync: str = "eager"):
+                 ck_sync: str = "eager", data_parallel: int = 1):
         if sampler not in ("numpy", "scan"):
             raise ValueError(f"unknown sampler {sampler!r}")
         if ck_sync not in ("eager", "round"):
@@ -151,11 +171,21 @@ class HostModelParallelLDA:
             raise ValueError(
                 "ck_sync='round' (frozen-per-round totals) is only "
                 "implemented for the oracle path sampler='scan'")
+        if data_parallel < 1:
+            raise ValueError(
+                f"data_parallel must be >= 1, got {data_parallel}")
+        if data_parallel > 1 and ck_sync != "round":
+            raise ValueError(
+                "data_parallel > 1 needs the frozen-per-round semantics "
+                "(sampler='scan', ck_sync='round'): replica copies of a "
+                "block are only well-defined between round boundaries")
         corpus.validate()
         self.corpus = corpus
         self.num_topics = num_topics
         self.num_workers = num_workers
         self.blocks_per_worker = int(blocks_per_worker)
+        self.data_parallel = int(data_parallel)
+        self.num_shards = self.data_parallel * num_workers
         self.num_blocks = num_workers * self.blocks_per_worker
         self.sampler = sampler
         self.ck_sync = ck_sync
@@ -172,8 +202,8 @@ class HostModelParallelLDA:
         vb = self.partition.block_size
         z0 = self.rng.integers(0, k, size=corpus.num_tokens).astype(np.int32)
         ckt = np.zeros((b, vb, k), np.int32)
-        shards = [worker_shard(corpus, w, num_workers)
-                  for w in range(num_workers)]
+        shards = [worker_shard(corpus, g, self.num_shards)
+                  for g in range(self.num_shards)]
         # engine-identical padding in oracle mode; minimal otherwise
         cap = common_block_capacity((s.word for s in shards),
                                     self.partition) \
@@ -202,30 +232,48 @@ class HostModelParallelLDA:
         m, s_ = self.num_workers, self.blocks_per_worker
         rounds = self.num_blocks
         if self.sampler == "scan":
-            # engine-identical uniform stream: [rounds, workers, capacity]
-            u = self.rng.random((rounds, m, self.capacity), np.float32)
+            # engine-identical uniform stream: [rounds, grid rows, capacity]
+            u = self.rng.random((rounds, self.num_shards, self.capacity),
+                                np.float32)
         for r in range(rounds):
             # scheduler: dispatch tasks, then rotate (Algorithm 1)
             if self.ck_sync == "round":
                 ck_frozen = self.store.get_ck().astype(np.int32)
                 delta = np.zeros_like(ck_frozen)
-            for w in range(m):
+                # frozen per-round block copies: the D replicas of model
+                # position m all sample the SAME stored value, and their
+                # deltas are reconciled at round end (DESIGN.md §8's
+                # delta-psum, executed serially)
+                blk_frozen: Dict[int, np.ndarray] = {}
+                blk_delta: Dict[int, np.ndarray] = {}
+            for g in range(self.num_shards):
+                w = g % m                        # model position of row g
                 blk_id = sched.block_for(w, r, m, s_)
                 if self.sampler == "scan":
-                    ck0 = ck_frozen if self.ck_sync == "round" \
-                        else self.store.get_ck().astype(np.int32)
-                    d = self.workers[w].run_round_oracle(
-                        blk_id, self.store, ck0, u[r, w], self.alpha,
-                        self.beta, self.vbeta)
                     if self.ck_sync == "round":
+                        if blk_id not in blk_frozen:
+                            blk_frozen[blk_id] = self.store.get_block(
+                                blk_id).astype(np.int32)
+                            blk_delta[blk_id] = np.zeros_like(
+                                blk_frozen[blk_id])
+                        new_blk, d = self.workers[g].run_round_frozen(
+                            blk_id, blk_frozen[blk_id], ck_frozen,
+                            u[r, g], self.alpha, self.beta, self.vbeta)
+                        blk_delta[blk_id] += new_blk - blk_frozen[blk_id]
                         delta += d
                     else:
+                        ck0 = self.store.get_ck().astype(np.int32)
+                        d = self.workers[g].run_round_oracle(
+                            blk_id, self.store, ck0, u[r, g], self.alpha,
+                            self.beta, self.vbeta)
                         self.store.put_ck_delta(d.astype(np.int64))
                 else:
-                    self.workers[w].run_round(blk_id, self.store,
+                    self.workers[g].run_round(blk_id, self.store,
                                               self.partition, self.alpha,
                                               self.beta, self.rng)
             if self.ck_sync == "round":
+                for blk_id, dd in blk_delta.items():
+                    self.store.put_block(blk_id, blk_frozen[blk_id] + dd)
                 self.store.put_ck_delta(delta.astype(np.int64))
         self.iteration_count += 1
 

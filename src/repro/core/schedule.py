@@ -127,6 +127,53 @@ def schedule_table(num_workers: int,
     return (r % s) * m_ + (m + r // s) % m_
 
 
+def schedule_table_2d(data_parallel: int, num_workers: int,
+                      blocks_per_worker: int = 1) -> np.ndarray:
+    """Hybrid (data × model) schedule: ``table[r, d, m]`` = resident block
+    of the worker at data replica ``d``, model position ``m``, in round
+    ``r`` (DESIGN.md §8).
+
+    The vocabulary is partitioned into ``B = S·M`` blocks *shared* by all
+    ``D`` replicas — the model axis is replicated along ``data``, so every
+    replica runs the same 1D rotation and the D copies of block
+    ``block_for(m, r)`` are reconciled by a delta-psum at the round
+    boundary.  Hence the table is the 1D table broadcast along ``d``:
+    replicas are ALIGNED (same block at the same model position), which is
+    what makes the per-round reconciliation a single axis-local psum.
+    """
+    if data_parallel < 1:
+        raise ValueError(
+            f"data_parallel must be >= 1, got {data_parallel}")
+    table = schedule_table(num_workers, blocks_per_worker)   # [R, M]
+    return np.broadcast_to(table[:, None, :],
+                           (table.shape[0], data_parallel,
+                            num_workers)).copy()
+
+
+def validate_schedule_2d(data_parallel: int, num_workers: int,
+                         blocks_per_worker: int = 1) -> None:
+    """2D schedule invariants: within every (round, replica) the resident
+    blocks are disjoint on the model axis; replicas are aligned (the same
+    model position holds the same block in every replica, so the data-axis
+    psum reconciles copies of ONE block); every (worker-grid position,
+    block) pair meets exactly once per ``S·M``-round iteration."""
+    table = schedule_table_2d(data_parallel, num_workers, blocks_per_worker)
+    rounds, d_, m_ = table.shape
+    b = blocks_per_worker * num_workers
+    assert rounds == b, (rounds, b)
+    for r in range(rounds):
+        for d in range(d_):
+            row = table[r, d]
+            assert len(set(row)) == m_, (
+                f"round {r} replica {d} blocks collide: {row}")
+            assert (row == table[r, 0]).all(), (
+                f"round {r}: replicas misaligned: {row} vs {table[r, 0]}")
+    for d in range(d_):
+        for m in range(m_):
+            assert sorted(table[:, d, m]) == list(range(b)), (
+                f"grid position ({d},{m}) misses blocks: {table[:, d, m]}")
+
+
 def serial_order(num_workers: int,
                  blocks_per_worker: int = 1
                  ) -> Sequence[Tuple[int, int, int]]:

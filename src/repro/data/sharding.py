@@ -30,6 +30,31 @@ def shard_documents(num_docs: int, num_workers: int) -> List[np.ndarray]:
             for m in range(num_workers)]
 
 
+def grid_index(data: int, model: int, num_workers: int) -> int:
+    """Flatten a (data, model) grid position to a shard row ``g = d·M + m``.
+
+    The engine stores all per-worker arrays with one leading axis of
+    length ``R = D·M`` in this data-major order, which is exactly how a
+    ``PartitionSpec(("data", "model"))`` splits a leading axis across the
+    2D mesh — so the same row layout serves the vmap and shard_map
+    backends (DESIGN.md §8).
+    """
+    return data * num_workers + model
+
+
+def grid_shard(corpus: Corpus, data: int, model: int, data_parallel: int,
+               num_workers: int) -> WorkerShard:
+    """Document shard of the worker at (data replica, model position).
+
+    Documents are sharded ``R = D·M`` ways: the data axis and the model
+    axis both carry documents (each grid cell owns a disjoint doc set),
+    while the vocabulary blocks are partitioned along model and
+    REPLICATED along data.
+    """
+    return worker_shard(corpus, grid_index(data, model, num_workers),
+                        data_parallel * num_workers)
+
+
 def worker_shard(corpus: Corpus, worker: int, num_workers: int) -> WorkerShard:
     assignment = shard_documents(corpus.num_docs, num_workers)
     mine = assignment[worker]

@@ -5,6 +5,7 @@ workload.
     PYTHONPATH=src python -m repro.launch.lda_dryrun --config wiki-unigram-k5000
     PYTHONPATH=src python -m repro.launch.lda_dryrun --all
     PYTHONPATH=src python -m repro.launch.lda_dryrun --blocks-per-worker 4
+    PYTHONPATH=src python -m repro.launch.lda_dryrun --data-parallel 8
 
 Lowers one full iteration (S·M rounds: sample resident block -> ppermute
 resident block -> psum C_k) of the shard_map engine against
@@ -38,28 +39,30 @@ from repro.roofline import analysis as roofline
 
 def run(cfg_name: str, workers: int = 64, sampler: str = "batched",
         out_dir: str = "benchmarks/results/dryrun",
-        blocks_per_worker: int = 1) -> dict:
+        blocks_per_worker: int = 1, data_parallel: int = 1) -> dict:
     cfg = LDA_CONFIGS[cfg_name]
     m, k = workers, cfg.num_topics
-    sb = blocks_per_worker
+    sb, dp = blocks_per_worker, data_parallel
     b = sb * m                          # total vocabulary blocks
+    r = dp * m                          # worker-grid rows (data × model)
     part = partition_vocab(cfg.vocab_size, b)
     vb = part.block_size
-    dloc = -(-cfg.num_docs // m)
-    # per-(worker, block) token capacity with a 1.2 load-imbalance factor
-    cap = max(int(cfg.num_tokens / (m * b) * 1.2), 1)
-    mesh = make_lda_mesh(m)
+    dloc = -(-cfg.num_docs // r)
+    # per-(grid row, block) token capacity with a 1.2 load-imbalance factor
+    cap = max(int(cfg.num_tokens / (r * b) * 1.2), 1)
+    mesh = make_lda_mesh(m, data_parallel=dp)
 
     s = lambda shape, dt=jnp.int32: jax.ShapeDtypeStruct(shape, dt)
     state = dict(
-        cdk=s((m, dloc, k)), ckt=s((m, sb, vb, k)), blk=s((m, sb)),
-        ck_syn=s((k,)), ck_loc=s((m, k)), z=s((m, b, cap)),
-        u=s((m, b, cap), jnp.float32), doc=s((m, b, cap)),
-        woff=s((m, b, cap)), mask=s((m, b, cap), jnp.bool_),
+        cdk=s((r, dloc, k)), ckt=s((r, sb, vb, k)), blk=s((r, sb)),
+        ck_syn=s((k,)), ck_loc=s((r, k)), z=s((r, b, cap)),
+        u=s((r, b, cap), jnp.float32), doc=s((r, b, cap)),
+        woff=s((r, b, cap)), mask=s((r, b, cap), jnp.bool_),
         alpha=s((k,), jnp.float32), beta=s((), jnp.float32),
         vbeta=s((), jnp.float32),
     )
-    fn = _iteration_shard_map(mesh, "w", sampler, sync_ck=True)
+    fn = _iteration_shard_map(mesh, "w", sampler, sync_ck=True,
+                              data_axis="data" if dp > 1 else None)
     with set_mesh(mesh):
         lowered = fn.lower(*state.values())
         compiled = lowered.compile()
@@ -76,6 +79,7 @@ def run(cfg_name: str, workers: int = 64, sampler: str = "batched",
     rec = {
         "workload": cfg_name, "workers": m, "sampler": sampler,
         "blocks_per_worker": sb, "num_blocks": b,
+        "data_parallel": dp, "grid_rows": r,
         "model_variables": cfg.model_variables,
         "block_shape": [vb, k],
         "block_bytes": block_bytes,
@@ -99,17 +103,23 @@ def run(cfg_name: str, workers: int = 64, sampler: str = "batched",
         # — O(V·K/(S·M)) per round regardless of M or S, vs O(M·V·K) for
         # DP gossip; parked blocks never travel.
         "analytic_rotation_bytes_per_iter": b * block_bytes,
+        # hybrid grid (DESIGN.md §8): the per-round delta psum along data
+        # moves one resident block per worker per round — same order as
+        # the rotation, and zero when D = 1
+        "analytic_data_psum_bytes_per_iter": (b * block_bytes
+                                              if dp > 1 else 0),
         "status": "ok",
     }
     os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, f"lda__{cfg_name}__ring{m}x{sb}.json"),
+    tag = f"ring{m}x{sb}" if dp == 1 else f"grid{dp}x{m}x{sb}"
+    with open(os.path.join(out_dir, f"lda__{cfg_name}__{tag}.json"),
               "w") as f:
         json.dump(rec, f, indent=1)
-    r = terms
-    print(f"[ok] lda {cfg_name} ring{m}x{sb} {sampler}: "
+    t = terms
+    print(f"[ok] lda {cfg_name} {tag} {sampler}: "
           f"mem/dev={rec['memory']['total_gib_per_device']}GiB "
-          f"c={r['compute_s']:.2e} m={r['memory_s']:.2e} "
-          f"x={r['collective_s']:.2e} dom={r['dominant']}", flush=True)
+          f"c={t['compute_s']:.2e} m={t['memory_s']:.2e} "
+          f"x={t['collective_s']:.2e} dom={t['dominant']}", flush=True)
     return rec
 
 
@@ -121,6 +131,9 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=64)
     ap.add_argument("--blocks-per-worker", type=int, default=1,
                     help="S: pipeline S*workers vocabulary blocks")
+    ap.add_argument("--data-parallel", type=int, default=1,
+                    help="D: replicate the block ring over D doc shards "
+                         "(hybrid 2D grid; needs D*workers devices)")
     ap.add_argument("--sampler", default="batched",
                     choices=["scan", "batched", "pallas"])
     args = ap.parse_args()
@@ -128,7 +141,8 @@ def main() -> None:
     for name in names:
         try:
             run(name, args.workers, args.sampler,
-                blocks_per_worker=args.blocks_per_worker)
+                blocks_per_worker=args.blocks_per_worker,
+                data_parallel=args.data_parallel)
         except Exception as e:  # noqa: BLE001
             print(f"[failed] lda {name}: {type(e).__name__}: {e}",
                   flush=True)

@@ -3,8 +3,9 @@
     PYTHONPATH=src python -m repro.launch.lda_train --docs 500 --vocab 2000 \
         --topics 50 --workers 8 --iters 30
 
-Selects the model-parallel engine by default; ``--engine dp`` runs the
-Yahoo!LDA-style data-parallel baseline for comparison.
+Selects the model-parallel engine by default; ``--data-parallel D`` turns
+it into the hybrid 2D (data × model) grid of DESIGN.md §8; ``--engine dp``
+runs the Yahoo!LDA-style data-parallel baseline for comparison.
 """
 from __future__ import annotations
 
@@ -31,6 +32,12 @@ def main() -> None:
     ap.add_argument("--topics", type=int, default=50)
     ap.add_argument("--doc-len", type=int, default=80)
     ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--data-parallel", type=int, default=1,
+                    help="D: hybrid grid — shard docs D*workers ways, "
+                         "replicate the block ring D times (mp engine)")
+    ap.add_argument("--blocks-per-worker", type=int, default=1,
+                    help="S: pipeline S*workers vocabulary blocks "
+                         "(mp engine)")
     ap.add_argument("--iters", type=int, default=30)
     ap.add_argument("--alpha", type=float, default=0.1)
     ap.add_argument("--beta", type=float, default=0.01)
@@ -46,7 +53,9 @@ def main() -> None:
     if args.engine == "mp":
         lda = ModelParallelLDA(corpus, args.topics, args.workers,
                                alpha=args.alpha, beta=args.beta,
-                               seed=args.seed, sampler_mode=args.sampler)
+                               seed=args.seed, sampler_mode=args.sampler,
+                               blocks_per_worker=args.blocks_per_worker,
+                               data_parallel=args.data_parallel)
     else:
         lda = DataParallelLDA(corpus, args.topics, args.workers,
                               alpha=args.alpha, beta=args.beta,

@@ -24,12 +24,23 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return make_mesh(shape, axes, axis_types=_auto(len(axes)))
 
 
-def make_lda_mesh(num_workers: int, *, multi_pod: bool = False) -> Mesh:
-    """The paper's worker ring.  Single-pod: a flat ring over all chips;
-    multi-pod: documents sharded over pods × a ring within each pod
-    (vocabulary partitioned pod-major, DESIGN.md §4)."""
+def make_lda_mesh(num_workers: int, *, data_parallel: int = 1,
+                  multi_pod: bool = False) -> Mesh:
+    """The paper's worker ring, optionally crossed with data replicas.
+
+    Single-pod, ``data_parallel=1``: a flat ring over all chips.
+    ``data_parallel=D``: the hybrid 2D grid — documents sharded over
+    ``data`` × the block ring along ``w`` (DESIGN.md §8); this is the LDA
+    instantiation of the production ``(data, model)`` mesh.  Multi-pod:
+    documents sharded over pods × a ring within each pod (vocabulary
+    partitioned pod-major, DESIGN.md §4)."""
+    if multi_pod and data_parallel > 1:
+        raise ValueError("choose one of multi_pod / data_parallel")
     if multi_pod:
         return make_mesh((2, num_workers), ("pod", "w"),
+                         axis_types=_auto(2))
+    if data_parallel > 1:
+        return make_mesh((data_parallel, num_workers), ("data", "w"),
                          axis_types=_auto(2))
     return make_mesh((num_workers,), ("w",), axis_types=_auto(1))
 

@@ -1,3 +1,17 @@
+import os
+
+# Fake 4 host devices BEFORE anything imports jax, so shard_map tests —
+# including the hybrid 2D (data, model) engine tests — run inside the main
+# suite instead of only via subprocess scripts.  The flag only affects the
+# host (CPU) platform and is a no-op for the vmap/single-device tests; an
+# explicit pre-set count (e.g. the 512-device dry-run subprocesses, which
+# overwrite XLA_FLAGS themselves) is respected.
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4")
+
+# ruff: noqa: E402
 import numpy as np
 import pytest
 
@@ -18,6 +32,31 @@ def small_corpus():
     corpus, phi, theta = synthetic_corpus(
         num_docs=120, vocab_size=400, num_topics=10, doc_len=50, seed=7)
     return corpus, phi, theta
+
+
+def _require_devices(n: int):
+    import jax
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} devices, have {len(jax.devices())} "
+                    "(XLA_FLAGS was pre-set without a faked device count)")
+
+
+@pytest.fixture(scope="session")
+def mesh2d():
+    """2×2 (data, model) mesh over the faked host devices — the hybrid
+    engine's shard_map tests run on this inside the main suite."""
+    from repro.launch.mesh import make_local_mesh
+    _require_devices(4)
+    return make_local_mesh(2, 2)
+
+
+@pytest.fixture(scope="session")
+def mesh1x4():
+    """1×4 (data, model) mesh: exercises the 2D code path at D = 1 against
+    the frozen 1D reference on the same four devices."""
+    from repro.launch.mesh import make_local_mesh
+    _require_devices(4)
+    return make_local_mesh(1, 4)
 
 
 def make_random_counts(rng, num_docs, vocab, topics, tokens):

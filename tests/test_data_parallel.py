@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core.counts import check_invariants
-from repro.core.data_parallel import DataParallelLDA
+from repro.core.data_parallel import DataParallelLDA, adlda_engine
 from repro.core.model_parallel import ModelParallelLDA
 
 
@@ -61,3 +61,37 @@ def test_dp_memory_is_flat_mp_shrinks(small_corpus):
         assert dp_bytes == corpus.vocab_size * 10 * 4
         assert mp_bytes == mp.partition.block_size * 10 * 4
         assert mp_bytes <= dp_bytes // m + 10 * 4 * mp.partition.block_size // 100 + 40
+
+
+def test_hybrid_round_sync_staleness_below_adlda_baseline(small_corpus):
+    """Fig 2/3 ordering, pinned in CI: the per-round-synced hybrid engine
+    reconciles S·M times per iteration and confines parallelization error
+    to {C_k} within a round, so its normalized staleness must stay at or
+    below the AD-LDA baseline's (one reconciliation per iteration) for the
+    same total worker count."""
+    corpus, _, _ = small_corpus
+    dp = DataParallelLDA(corpus, num_topics=10, num_workers=4, seed=3,
+                         syncs_per_iter=1)
+    hybrid = ModelParallelLDA(corpus, num_topics=10, num_workers=2,
+                              data_parallel=2, seed=3)
+    for _ in range(2):
+        dp.step()
+        hybrid.step()
+    assert hybrid.delta_error() <= dp.model_error(), (
+        hybrid.delta_error(), dp.model_error())
+
+
+def test_adlda_engine_is_degenerate_hybrid(small_corpus):
+    """The engine-built AD-LDA (M=1) exposes the same staleness model as
+    the standalone baseline: positive pre-sync error at one sync per
+    iteration, shrinking as blocks_per_worker adds sync points (the
+    syncs_per_iter analogue)."""
+    corpus, _, _ = small_corpus
+    errs = []
+    for s in (1, 4):
+        eng = adlda_engine(corpus, num_topics=10, num_replicas=4, seed=3,
+                           blocks_per_worker=s)
+        eng.step()
+        errs.append(eng.delta_error())
+    assert errs[0] > 0
+    assert errs[1] < errs[0]

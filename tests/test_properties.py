@@ -94,6 +94,29 @@ def test_engine_invariants_random_corpus(seed, workers):
     check_invariants(lda.gather_counts(), n)
 
 
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(1, 3),
+       st.integers(1, 2))
+@settings(max_examples=5, deadline=None)
+def test_hybrid_engine_invariants_random_corpus(seed, d, m, s):
+    """The 2D grid preserves the count invariants and the rebuild-from-z
+    identity on adversarial corpora for any small (D, M, S)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(50, 300))
+    from repro.core.counts import build_counts
+    from repro.data.corpus import Corpus
+    corpus = Corpus(rng.integers(0, 12, n).astype(np.int32),
+                    rng.integers(0, 31, n).astype(np.int32), 12, 31)
+    lda = ModelParallelLDA(corpus, num_topics=5, num_workers=m, seed=seed,
+                           data_parallel=d, blocks_per_worker=s)
+    lda.run(2)
+    state = lda.gather_counts()
+    check_invariants(state, n)
+    rebuilt = build_counts(corpus.doc, corpus.word, lda.assignments(),
+                           12, 31, 5)
+    np.testing.assert_array_equal(np.asarray(rebuilt.ckt),
+                                  np.asarray(state.ckt))
+
+
 def test_single_doc_single_word_degenerate():
     """Degenerate corpora must not break the schedule or the samplers."""
     from repro.data.corpus import Corpus
