@@ -1,0 +1,102 @@
+"""Sampler-backend tokens/sec trajectory: scan vs batched vs mh over K.
+
+The repo's first throughput baseline (ISSUE 3): one synthetic block
+workload per K ∈ {256, 1024, 4096}, each sampler timed on the identical
+(counts, tokens, uniforms) inputs, tokens/sec recorded into
+``benchmarks/results/bench_samplers.json``.
+
+Expected shape of the curve (DESIGN.md §9 cost model):
+
+* ``scan``    — O(K) per token AND serial over tokens: collapses as K
+  grows (the exact baseline, not a contender);
+* ``batched`` — O(K) per token, vectorized: the [T, K] mass + cumsum is
+  roofline-bound, throughput ∝ 1/K;
+* ``mh``      — O((Vb + D_loc)·K) alias build per block + O(1) per token:
+  amortized per-token cost is flat in K, so it overtakes ``batched`` as
+  K grows — fastest at K = 4096 is this benchmark's acceptance bar.
+
+    PYTHONPATH=src python -m benchmarks.bench_samplers
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit_csv_row, save_result
+from repro.core.engine.rounds import resolve_sampler
+
+K_SWEEP = (256, 1024, 4096)
+SAMPLERS = ("scan", "batched", "mh")
+
+# one block's workload: Vb word rows, D_loc local docs, T tokens.
+# T/Vb = 256 mean postings per word — conservative for the big-corpus
+# regime the alias amortization is built for (the paper's wiki-scale
+# runs sit higher: tokens/(R·V) ≈ 470 postings per word-row at 3e9
+# tokens, V = 1e5, a 64-worker ring), and honest across samplers since
+# each is timed on the identical inputs
+VB, DLOC, T = 64, 48, 16384
+
+
+def _block_workload(k: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    doc = rng.integers(0, DLOC, T).astype(np.int32)
+    woff = np.sort(rng.integers(0, VB, T)).astype(np.int32)
+    z = rng.integers(0, k, T).astype(np.int32)
+    cdk = np.zeros((DLOC, k), np.int32)
+    ckt = np.zeros((VB, k), np.int32)
+    np.add.at(cdk, (doc, z), 1)
+    np.add.at(ckt, (woff, z), 1)
+    u = rng.random(T, np.float32)
+    return (jnp.asarray(cdk), jnp.asarray(ckt),
+            jnp.asarray(ckt.sum(0).astype(np.int32)),
+            jnp.asarray(doc), jnp.asarray(woff), jnp.asarray(z),
+            jnp.ones(T, bool), jnp.asarray(u),
+            jnp.full(k, 0.1, jnp.float32), jnp.float32(0.01),
+            jnp.float32(0.01 * VB))
+
+
+def _time_sampler(fn, args, repeats: int) -> float:
+    """Median seconds per call, outputs blocked on."""
+    jax.block_until_ready(fn(*args))          # compile + warm
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def run(seed: int = 0) -> dict:
+    out = {"workload": {"vb": VB, "dloc": DLOC, "tokens": T},
+           "k_sweep": list(K_SWEEP), "results": {}}
+    for k in K_SWEEP:
+        args = _block_workload(k, seed)
+        rec = {}
+        for mode in SAMPLERS:
+            fn = resolve_sampler(mode)
+            repeats = 2 if mode == "scan" else 5
+            sec = _time_sampler(fn, args, repeats)
+            rec[mode] = {"sec_per_block": sec, "tokens_per_s": T / sec}
+            emit_csv_row(f"sampler_{mode}_k{k}", sec * 1e6,
+                         f"tokens_per_s={T / sec:.0f}")
+        fastest = max(SAMPLERS, key=lambda m: rec[m]["tokens_per_s"])
+        rec["fastest"] = fastest
+        out["results"][str(k)] = rec
+    out["mh_fastest_at_k4096"] = \
+        out["results"]["4096"]["fastest"] == "mh"
+    save_result("bench_samplers", out)
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    res = run()
+    for k in K_SWEEP:
+        r = res["results"][str(k)]
+        print(f"K={k}: fastest={r['fastest']} "
+              + " ".join(f"{m}={r[m]['tokens_per_s']:.0f}tok/s"
+                         for m in SAMPLERS))

@@ -13,7 +13,7 @@ import time
 import traceback
 
 from benchmarks import (bench_convergence, bench_error, bench_kernel,
-                        bench_model_size, bench_scaling)
+                        bench_model_size, bench_samplers, bench_scaling)
 
 BENCHES = {
     "fig2_convergence": bench_convergence.run,
@@ -21,6 +21,7 @@ BENCHES = {
     "table1_model_size": bench_model_size.run,
     "fig4_scaling": bench_scaling.run,
     "kernel_sampler": bench_kernel.run,
+    "sampler_backends": bench_samplers.run,
 }
 
 

@@ -1,0 +1,334 @@
+"""Vose alias tables — O(1) categorical draws for the MH sampler backend.
+
+LightLDA (Yuan et al. 2014) makes the per-token cost of collapsed Gibbs
+O(1) amortized by replacing the exact inverse-CDF draw over K topics with
+a Metropolis–Hastings proposal drawn from an *alias table*: per-topic
+arrays such that a single uniform yields an exact sample of the table's
+distribution in two lookups (Walker 1977; Vose 1991).  Construction is
+O(K), done once per *block* per round and amortized over every token that
+samples against the block — the same build-once/consume-many shape as the
+paper's eq.-(3) word-major cache.
+
+**Determinism is load-bearing.**  The same table must be built bit-for-bit
+by every compilation of the sampler — the vmap engine, the shard_map
+engine, and the standalone host-oracle kernel — or MH replay stops being
+draw-for-draw.  Plain f32 construction (sum → divide → compare against
+1.0) is NOT stable across XLA programs: reductions and divisions lower
+differently under different fusion, and a 1-ulp disagreement flips a
+small/large classification into a different (still valid) table.  The
+device builder therefore works on a fixed-point integer grid:
+
+* masses are ``W_i = C_i·SCALE + max(round(prior_i·SCALE), 1)`` — pure
+  int32 arithmetic (counts are ints; the prior is quantized once);
+* the per-cell capacity is the INTEGER row total ``ΣW`` (masses are kept
+  scaled by K, so no division ever happens);
+* every fp value that feeds a decision is produced by a single IEEE op
+  on integer-derived operands (one convert, one multiply, one add/sub) —
+  nothing XLA can reassociate, recompute, or turn into a reciprocal.
+
+Quantizing the prior perturbs only the *proposal*; the MH acceptance
+(`core/mh.py`) evaluates the proposal mass from the same ``W`` grid and
+the *target* from the unquantized counts, so the chain still targets the
+exact eq.-(1) posterior (any proposal with full support is admissible).
+
+Table encoding — row total ``U = f32(ΣW)``, per-cell ``cut``/``alias``:
+cell ``j`` yields ``j`` when ``frac·U < cut[j]`` else ``alias[j]``, where
+``frac`` is the within-cell uniform.  A full cell has ``cut = U`` and
+``alias = j``.  The draw spends ONE uniform: the integer part of ``u·K``
+picks the cell, the fractional part is the within-cell threshold (the
+standard single-uniform alias trick).
+
+:func:`build_alias_int_np` mirrors the device builder op-for-op in
+numpy (same f32 single-op chains, same LIFO stack discipline) and is
+asserted bit-equal by tests; :func:`build_alias_np` is the classic
+float construction kept as the property-test reference for the pairing
+logic itself.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# fixed-point grid for prior quantization: β/α enter proposal masses in
+# units of 1/SCALE (target masses stay exact — see module docstring)
+SCALE = 256
+
+
+# ---------------------------------------------------------------------------
+# Classic float Vose construction (numpy reference for property tests)
+# ---------------------------------------------------------------------------
+
+def build_alias_np(p: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Vose construction: ``p`` [K] nonnegative -> (prob [K] f32, alias [K]).
+
+    Cell ``j`` holds mass ``prob[j]`` of topic ``j`` and ``1 - prob[j]`` of
+    topic ``alias[j]`` (in units of ``sum(p)/K``); a zero-sum input yields
+    the uniform table.
+    """
+    p = np.asarray(p, np.float32)
+    k = p.shape[0]
+    prob = np.ones(k, np.float32)
+    alias = np.arange(k, dtype=np.int32)
+    total = np.float32(p.sum(dtype=np.float64))
+    if not total > 0:
+        return prob, alias
+    scaled = (p * (np.float32(k) / total)).astype(np.float32)
+    small = [i for i in range(k) if scaled[i] < 1.0]
+    large = [i for i in range(k) if scaled[i] >= 1.0]
+    while small and large:
+        s = small.pop()
+        lg = large.pop()
+        prob[s] = scaled[s]
+        alias[s] = lg
+        scaled[lg] = (scaled[lg] + scaled[s]) - np.float32(1.0)
+        (small if scaled[lg] < 1.0 else large).append(lg)
+    for i in small:          # fp residue: treat as full cells
+        prob[i] = 1.0
+    for i in large:
+        prob[i] = 1.0
+    return prob, alias
+
+
+def alias_draw_np(prob: np.ndarray, alias: np.ndarray,
+                  u: np.ndarray) -> np.ndarray:
+    """Single-uniform draw from a :func:`build_alias_np` table."""
+    k = prob.shape[0]
+    x = np.asarray(u, np.float32) * np.float32(k)
+    j = np.minimum(x.astype(np.int32), k - 1)
+    frac = x - j.astype(np.float32)
+    return np.where(frac < prob[j], j, alias[j]).astype(np.int32)
+
+
+def alias_cell_masses(prob: np.ndarray, alias: np.ndarray,
+                      total: float) -> np.ndarray:
+    """Reconstruct the distribution a (prob, alias) table encodes: topic
+    ``t`` receives ``prob[t]`` from its own cell plus ``1 - prob[j]`` from
+    every cell aliased to it, in units of ``total / K``."""
+    k = prob.shape[0]
+    unit = np.float64(total) / k
+    mass = prob.astype(np.float64) * unit
+    np.add.at(mass, alias, (1.0 - prob.astype(np.float64)) * unit)
+    return mass
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point quantization shared by device builder and numpy mirror
+# ---------------------------------------------------------------------------
+
+def quantize_prior_np(prior: np.ndarray) -> np.ndarray:
+    """Prior -> integer grid units: ``max(round(prior·SCALE), 1)``.
+
+    The floor of 1 keeps every topic proposable (support ⊇ target), which
+    MH needs for ergodicity; the acceptance uses these same quantized
+    masses so no bias is introduced.
+    """
+    q = np.round(np.asarray(prior, np.float32) * np.float32(SCALE))
+    return np.maximum(q, 1.0).astype(np.int32)
+
+
+def _quantize_prior(prior: jax.Array) -> jax.Array:
+    q = jnp.round(prior.astype(jnp.float32) * jnp.float32(SCALE))
+    return jnp.maximum(q, 1.0).astype(jnp.int32)
+
+
+def int_masses(counts: jax.Array, prior: jax.Array) -> jax.Array:
+    """[..., K] int32 proposal masses ``W = C·SCALE + quantized prior``.
+
+    Headroom: the binding constraint is the int32 ROW SUM ``ΣW`` (it
+    becomes the table's cell capacity in :func:`build_alias_int_rows`),
+    so a table row tolerates ``≈ 2³¹/SCALE ≈ 8.4M`` TOTAL tokens — a
+    per-(worker, block) row count, bounded by one worker's share of one
+    vocabulary block's postings (or one local doc's length), orders of
+    magnitude below the limit at any geometry this engine runs.
+    """
+    return counts.astype(jnp.int32) * SCALE + _quantize_prior(prior)
+
+
+def int_masses_np(counts: np.ndarray, prior: np.ndarray) -> np.ndarray:
+    return (np.asarray(counts, np.int64) * SCALE
+            + quantize_prior_np(prior)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Device (JAX) construction — integer-exact decisions, fixed-shape scan
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def build_alias_int_rows(w: jax.Array
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Vose tables from integer masses ``w`` [N, K] -> (cut, alias, U).
+
+    Works in masses-scaled-by-K units: ``m_i = f32(w_i)·K`` and the
+    per-cell capacity is ``U = f32(Σw)`` (an exact int32 reduction, so U
+    is bit-identical in every program).  Each scan step pops one small
+    and one large cell per row (a no-op once either stack empties) — at
+    most K-1 pairings, so K steps suffice.  Every fp decision input is
+    one IEEE op away from integers; see the module docstring for why
+    that is the point.
+
+    Layout choices are all about making the K-step loop cheap and
+    shard_map-safe:
+
+    * rows are HAND-BATCHED on flat ``[N·K]`` buffers with precomputed
+      row offsets, so each step issues ONE 1-D gather/scatter of N
+      elements instead of XLA's far slower batched-scatter form;
+    * both stacks share one packed per-row buffer — smalls grow from the
+      left (top at ``ns-1``), larges from the right (top at ``K-nl``,
+      deeper = smaller index), so pops take the highest index first,
+      matching the numpy mirror's list discipline; ``ns+nl`` shrinks by
+      one per pairing, so the regions never collide;
+    * stacks are initialized with cumsum positions + scatter, NOT
+      argsort: feeding a sort HLO into a rolled loop miscompiles on the
+      multi-device XLA CPU runtime the shard_map backend tests run under
+      (non-zero devices read corrupted stacks);
+    * no-op steps write NOTHING (sentinel index + ``mode="drop"``) and
+      guards apply to the written element, never the whole array — a
+      ``where(cont, arr.at[i].set(v), arr)`` select is O(K) per step and
+      would turn the O(K) build into O(K²) per row;
+    * the loop carries only ``(m, stack)`` — cut/alias are emitted as
+      scan outputs and scattered once afterwards (each cell is popped as
+      a small at most once).
+    """
+    n, k = w.shape
+    nk = n * k
+    w = w.astype(jnp.int32)
+    base = jnp.arange(n, dtype=jnp.int32) * k
+    u_cap = w.sum(axis=1).astype(jnp.float32)    # [N] exact, order-free
+    m = (w.astype(jnp.float32) * jnp.float32(k)).reshape(nk)
+    small_mask = m.reshape(n, k) < u_cap[:, None]
+    idx = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32), (n, k))
+    smask = small_mask.astype(jnp.int32)
+    spos = jnp.cumsum(smask, axis=1) - 1
+    lpos = jnp.cumsum(1 - smask, axis=1) - 1
+    sentinel = nk
+    stack = jnp.zeros(nk, jnp.int32) \
+        .at[jnp.where(small_mask, base[:, None] + spos,
+                      sentinel).reshape(nk)].set(idx.reshape(nk),
+                                                 mode="drop") \
+        .at[jnp.where(small_mask, sentinel,
+                      base[:, None] + (k - 1) - lpos).reshape(nk)].set(
+            idx.reshape(nk), mode="drop")
+    ns = smask.sum(axis=1)
+    nl = k - ns
+
+    def step(carry, _):
+        m, stack, ns, nl = carry
+        cont = (ns > 0) & (nl > 0)
+        s = stack[base + jnp.maximum(ns - 1, 0)]
+        lg = stack[base + jnp.minimum(k - nl, k - 1)]
+        m_s = m[base + s]
+        rem = (m[base + lg] + m_s) - u_cap       # single add, single sub
+        m = m.at[jnp.where(cont, base + lg, sentinel)].set(rem,
+                                                           mode="drop")
+        to_small = rem < u_cap
+        ns2, nl2 = ns - 1, nl - 1
+        # push lg: slot ns2 if it went small, else new large top K-nl2-1
+        i_push = jnp.where(to_small, ns2, k - nl2 - 1)
+        stack = stack.at[jnp.where(cont, base + i_push, sentinel)].set(
+            lg, mode="drop")
+        ns3 = jnp.where(cont, jnp.where(to_small, ns2 + 1, ns2), ns)
+        nl3 = jnp.where(cont, jnp.where(to_small, nl2, nl2 + 1), nl)
+        out = (jnp.where(cont, base + s, sentinel), m_s, lg)
+        return (m, stack, ns3, nl3), out
+
+    carry = (m, stack, ns, nl)
+    _, (s_seq, ms_seq, lg_seq) = jax.lax.scan(step, carry, None, length=k)
+    # full / leftover cells: cut = U, alias = self; popped smalls overwrite
+    cut = (jnp.ones((n, k), jnp.float32) * u_cap[:, None]).reshape(nk)
+    cut = cut.at[s_seq.reshape(-1)].set(ms_seq.reshape(-1), mode="drop")
+    alias = idx.reshape(nk).at[s_seq.reshape(-1)].set(lg_seq.reshape(-1),
+                                                      mode="drop")
+    return cut.reshape(n, k), alias.reshape(n, k), u_cap
+
+
+def build_alias_int(w: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-row convenience form of :func:`build_alias_int_rows`."""
+    cut, alias, u_cap = build_alias_int_rows(w[None, :])
+    return cut[0], alias[0], u_cap[0]
+
+
+@partial(jax.jit, static_argnames=())
+def build_alias_tables(counts: jax.Array, prior: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                  jax.Array]:
+    """Counts [N, K] + prior ([K] or [N, K]) -> (cut, alias, U, W).
+
+    ``W`` (the integer proposal masses) is returned alongside the table
+    because the MH acceptance must evaluate the proposal density from the
+    same quantized grid the table was built on.  Callers building several
+    table families per round (word rows + doc rows) should concatenate
+    their count rows and call ONCE — the K-step pairing loop then runs a
+    single time over all rows instead of once per family.
+    """
+    prior = jnp.broadcast_to(prior, counts.shape)
+    w = int_masses(counts, prior)
+    cut, alias, u_cap = build_alias_int_rows(w)
+    return cut, alias, u_cap, w
+
+
+def build_alias_int_np(w: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Numpy mirror of :func:`build_alias_int`, op-for-op (f32 single-op
+    chains, LIFO stacks, ascending fill) — tests assert bit-equality."""
+    w = np.asarray(w, np.int32)
+    k = w.shape[0]
+    u_cap = np.float32(w.sum(dtype=np.int64).astype(np.int32))
+    m = w.astype(np.float32) * np.float32(k)
+    cut = np.full(k, u_cap, np.float32)
+    alias = np.arange(k, dtype=np.int32)
+    small = [i for i in range(k) if m[i] < u_cap]
+    large = [i for i in range(k) if not (m[i] < u_cap)]
+    while small and large:
+        s = small.pop()
+        lg = large.pop()
+        cut[s] = m[s]
+        alias[s] = lg
+        m[lg] = (m[lg] + m[s]) - u_cap
+        (small if m[lg] < u_cap else large).append(lg)
+    return cut, alias, u_cap
+
+
+def alias_table_masses(cut: np.ndarray, alias: np.ndarray,
+                       u_cap: float) -> np.ndarray:
+    """Reconstruct the (·K-scaled) masses an integer-grid table encodes:
+    topic ``t`` gets ``cut[t]`` from its own cell plus ``U - cut[j]`` from
+    every cell aliased to it.  Equals ``f32(w)·K`` up to fp tolerance."""
+    mass = cut.astype(np.float64).copy()
+    np.add.at(mass, alias, np.float64(u_cap) - cut.astype(np.float64))
+    return mass
+
+
+# ---------------------------------------------------------------------------
+# Draw helpers (shared by jnp MH steps, Pallas kernel mirrors the math)
+# ---------------------------------------------------------------------------
+
+def split_cell_uniform(u: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """One uniform -> (cell index [int32], within-cell uniform [f32])."""
+    x = u.astype(jnp.float32) * jnp.float32(k)
+    j = jnp.minimum(x.astype(jnp.int32), k - 1)
+    return j, x - j.astype(jnp.float32)
+
+
+def alias_resolve(cut_cell: jax.Array, alias_cell: jax.Array,
+                  u_cap: jax.Array, j: jax.Array,
+                  frac: jax.Array) -> jax.Array:
+    """Resolve a drawn cell: keep ``j`` iff ``frac·U < cut[j]`` (the
+    division-free form of ``frac < cut[j]/U``)."""
+    return jnp.where(frac * u_cap < cut_cell, j, alias_cell) \
+        .astype(jnp.int32)
+
+
+def alias_draw_int_np(cut: np.ndarray, alias: np.ndarray, u_cap: float,
+                      u: np.ndarray) -> np.ndarray:
+    """Numpy draw from an integer-grid table, vectorized over ``u``."""
+    k = cut.shape[0]
+    x = np.asarray(u, np.float32) * np.float32(k)
+    j = np.minimum(x.astype(np.int32), k - 1)
+    frac = x - j.astype(np.float32)
+    return np.where(frac * np.float32(u_cap) < cut[j], j,
+                    alias[j]).astype(np.int32)

@@ -18,6 +18,14 @@ word-topic block per worker is ``ceil(V / (S·M)) × K`` rows, so growing
 ``S`` shrinks the per-worker resident model without adding workers —
 the paper's "model size exceeds any single node's RAM" claim as a tunable.
 
+``sampler_mode`` selects the per-block sampler from the `rounds.py`
+registry: the exact ``scan``, the word-frozen ``batched``/``pallas``
+pair, or the O(1) alias-table MH pair ``mh``/``mh_pallas`` (DESIGN.md
+§9).  The MH modes target the same collapsed posterior but are only
+distribution-equal to the exact chain, so their validation is the
+statistical suite `tests/test_mh_stats.py` plus a draw-for-draw host
+oracle replay (`kvstore.HostModelParallelLDA(sampler="mh")`).
+
 ``data_parallel`` (``D``) is the throughput lever: documents shard
 ``D·M`` ways over a 2D ``(data, model)`` grid while each replica keeps a
 copy of the block pipeline, reconciled by a per-round delta psum along
@@ -43,6 +51,7 @@ from repro.core.counts import CountState
 from repro.core.engine import state as engine_state
 from repro.core.engine.backends import (iteration_vmap,
                                         make_shard_map_iteration)
+from repro.core.engine.rounds import resolve_sampler
 from repro.core.likelihood import doc_log_likelihood, word_log_likelihood
 from repro.data.corpus import Corpus
 
@@ -78,6 +87,7 @@ class ModelParallelLDA:
             if np.isscalar(alpha) else jnp.asarray(alpha, jnp.float32)
         self.beta = float(beta)
         self.vbeta = float(beta * corpus.vocab_size)
+        resolve_sampler(sampler_mode)   # fail fast on unknown modes
         self.sampler_mode = sampler_mode
         self.sync_ck = bool(sync_ck)
         self.backend = backend

@@ -32,6 +32,13 @@ Both backends share :func:`repro.core.engine.rounds.worker_round`, so
 agreement tests are meaningful, and the non-separable topic totals
 ``{C_k}`` are synchronized once per round via ``psum`` of per-worker
 deltas over the WHOLE grid and drift in between (§3.3).
+
+Sampler staleness composes per block (DESIGN.md §9): the ``batched`` /
+``pallas`` / ``mh`` samplers freeze block-local counts at round start,
+which is exactly the window between two rotation/reconciliation
+collectives — so neither the S-block pipeline nor the data axis widens
+it, and the vmap/shard_map backends stay bit-identical for every
+registered sampler, MH included.
 """
 from __future__ import annotations
 

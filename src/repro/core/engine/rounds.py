@@ -13,7 +13,10 @@ reconciliation along data, ``C_k`` sync) lives in the backends.
 Samplers are pluggable through a registry so new kernels (e.g. an
 alternative Pallas variant) can be added without touching the engine:
 register a factory with :func:`register_sampler` and select it via
-``ModelParallelLDA(..., sampler_mode=<name>)``.
+``ModelParallelLDA(..., sampler_mode=<name>)``.  Built-ins: the exact
+``scan``/``scan_eq1`` serial sweeps, the word-frozen ``batched`` sweep
+and its ``pallas`` kernel form, and the O(1) alias-table MH pair
+``mh``/``mh_pallas`` (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -72,6 +75,21 @@ def _batched_sampler():
 def _pallas_sampler():
     from repro.kernels.ops import sweep_block_pallas
     return sweep_block_pallas
+
+
+@register_sampler("mh")
+def _mh_sampler():
+    # O(1) alias-table Metropolis–Hastings backend (DESIGN.md §9):
+    # distribution-equal to "scan"/"batched" but not trajectory-equal —
+    # validated statistically by tests/test_mh_stats.py.
+    from repro.core.mh import sweep_block_mh
+    return sweep_block_mh
+
+
+@register_sampler("mh_pallas")
+def _mh_pallas_sampler():
+    from repro.kernels.ops import sweep_block_mh_pallas
+    return sweep_block_mh_pallas
 
 
 def worker_round(cdk, ckt_blk, block_id, ck_loc, z_all, u_r,

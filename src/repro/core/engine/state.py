@@ -8,6 +8,11 @@ that travels in the per-round rotation; slots ``1..S-1`` are *parked*
 (they model the paper's distributed key-value store / host offload, where
 non-resident blocks live outside worker RAM).
 
+Nothing in this layout is sampler-specific: the alias tables of the
+``mh`` backend (DESIGN.md §9) are derived state, built per resident
+block inside the sampler at round start, so the pytree carries no table
+arrays and checkpoints are sampler-agnostic.
+
 Hybrid data×model parallelism (DESIGN.md §8) adds ``D`` data replicas:
 every per-worker array keeps ONE leading axis of length ``R = D·M``
 (row ``g = d·M + m``, data-major), so at ``D = 1`` shapes are bit-for-bit

@@ -25,6 +25,14 @@ Two execution flavours:
   engine, so a run is bit-identical to ``ModelParallelLDA`` at any ``S``.
   Tests use this to prove the pipelined engine equals the paper's
   scheduler/worker/KV-store execution exactly.
+
+``sampler="mh"`` extends the oracle mode to the O(1) alias-table MH
+backend (DESIGN.md §9): the oracle resolves its per-block sampler from
+the same registry as the engine, so a host "mh" run consumes the same
+externally supplied uniforms through the same jitted kernel and the
+device MH chain replays against it draw-for-draw — the replayability
+anchor that lets the MH backend's *statistical* validation
+(`tests/test_mh_stats.py`) rest on a bit-exact structural base.
 """
 from __future__ import annotations
 
@@ -105,17 +113,25 @@ class HostWorker:
         store.put_ck_delta((ck - ck_synced).astype(np.int64))
 
     def run_round_frozen(self, block_id: int, ckt_block: np.ndarray,
-                         ck_frozen, u_round, alpha, beta, vbeta):
+                         ck_frozen, u_round, alpha, beta, vbeta,
+                         sampler_fn=None):
         """Engine-identical round against CALLER-OWNED frozen state: jitted
         block sampler on the full padded token slice, both the block copy
         and ``C_k`` frozen at the round boundary.  Returns the worker's
         updated block copy and ``C_k`` delta; the scheduler reconciles
-        copies across data replicas and commits at round end (§8)."""
+        copies across data replicas and commits at round end (§8).
+
+        ``sampler_fn`` is any registry sampler (``rounds.resolve_sampler``)
+        — the exact-scan oracle by default; with the ``mh`` sampler this
+        worker replays the device MH chain draw-for-draw, since the same
+        jitted kernel consumes the same externally supplied uniforms."""
         import jax.numpy as jnp
 
         from repro.core.sampler import sweep_block_scan
 
-        out = sweep_block_scan(
+        if sampler_fn is None:
+            sampler_fn = sweep_block_scan
+        out = sampler_fn(
             jnp.asarray(self.cdk), jnp.asarray(ckt_block),
             jnp.asarray(ck_frozen),
             jnp.asarray(self.index.doc[block_id]),
@@ -129,13 +145,15 @@ class HostWorker:
         return np.asarray(out[1]), np.asarray(out[2]) - ck_frozen
 
     def run_round_oracle(self, block_id: int, store: KVStore, ck_frozen,
-                         u_round, alpha, beta, vbeta) -> np.ndarray:
+                         u_round, alpha, beta, vbeta,
+                         sampler_fn=None) -> np.ndarray:
         """Engine-identical round: fetch the block, run
         :meth:`run_round_frozen`, commit.  Returns the worker's ``C_k``
         delta (committed by the scheduler at round end)."""
         ckt_block = store.get_block(block_id).astype(np.int32)
         new_block, ck_delta = self.run_round_frozen(
-            block_id, ckt_block, ck_frozen, u_round, alpha, beta, vbeta)
+            block_id, ckt_block, ck_frozen, u_round, alpha, beta, vbeta,
+            sampler_fn=sampler_fn)
         store.put_block(block_id, new_block)
         return ck_delta
 
@@ -163,22 +181,22 @@ class HostModelParallelLDA:
                  alpha: float = 0.1, beta: float = 0.01, seed: int = 0,
                  blocks_per_worker: int = 1, sampler: str = "numpy",
                  ck_sync: str = "eager", data_parallel: int = 1):
-        if sampler not in ("numpy", "scan"):
-            raise ValueError(f"unknown sampler {sampler!r}")
         if ck_sync not in ("eager", "round"):
             raise ValueError(f"unknown ck_sync {ck_sync!r}")
-        if ck_sync == "round" and sampler != "scan":
+        if ck_sync == "round" and sampler == "numpy":
             raise ValueError(
                 "ck_sync='round' (frozen-per-round totals) is only "
-                "implemented for the oracle path sampler='scan'")
+                "implemented for the jitted oracle paths (any registry "
+                "sampler, e.g. 'scan' or 'mh')")
         if data_parallel < 1:
             raise ValueError(
                 f"data_parallel must be >= 1, got {data_parallel}")
         if data_parallel > 1 and ck_sync != "round":
             raise ValueError(
                 "data_parallel > 1 needs the frozen-per-round semantics "
-                "(sampler='scan', ck_sync='round'): replica copies of a "
-                "block are only well-defined between round boundaries")
+                "(sampler='scan'|'mh', ck_sync='round'): replica copies "
+                "of a block are only well-defined between round "
+                "boundaries")
         corpus.validate()
         self.corpus = corpus
         self.num_topics = num_topics
@@ -204,10 +222,20 @@ class HostModelParallelLDA:
         ckt = np.zeros((b, vb, k), np.int32)
         shards = [worker_shard(corpus, g, self.num_shards)
                   for g in range(self.num_shards)]
-        # engine-identical padding in oracle mode; minimal otherwise
+        # engine-identical padding in oracle (jitted) modes; minimal
+        # otherwise.  The oracle sampler is resolved from the SAME registry
+        # the SPMD engine uses (resolve_sampler also validates the name),
+        # so e.g. an "mh" oracle run consumes the same uniforms through
+        # the same jitted kernel — device MH replays against it
+        # draw-for-draw.
+        if sampler != "numpy":
+            from repro.core.engine.rounds import resolve_sampler
+            self._sampler_fn = resolve_sampler(sampler)
+        else:
+            self._sampler_fn = None
         cap = common_block_capacity((s.word for s in shards),
                                     self.partition) \
-            if sampler == "scan" else None
+            if sampler != "numpy" else None
         self.capacity = cap
         self.workers: List[HostWorker] = []
         for w, s in enumerate(shards):
@@ -231,7 +259,7 @@ class HostModelParallelLDA:
     def step(self) -> None:
         m, s_ = self.num_workers, self.blocks_per_worker
         rounds = self.num_blocks
-        if self.sampler == "scan":
+        if self.sampler != "numpy":
             # engine-identical uniform stream: [rounds, grid rows, capacity]
             u = self.rng.random((rounds, self.num_shards, self.capacity),
                                 np.float32)
@@ -249,7 +277,7 @@ class HostModelParallelLDA:
             for g in range(self.num_shards):
                 w = g % m                        # model position of row g
                 blk_id = sched.block_for(w, r, m, s_)
-                if self.sampler == "scan":
+                if self.sampler != "numpy":
                     if self.ck_sync == "round":
                         if blk_id not in blk_frozen:
                             blk_frozen[blk_id] = self.store.get_block(
@@ -258,14 +286,16 @@ class HostModelParallelLDA:
                                 blk_frozen[blk_id])
                         new_blk, d = self.workers[g].run_round_frozen(
                             blk_id, blk_frozen[blk_id], ck_frozen,
-                            u[r, g], self.alpha, self.beta, self.vbeta)
+                            u[r, g], self.alpha, self.beta, self.vbeta,
+                            sampler_fn=self._sampler_fn)
                         blk_delta[blk_id] += new_blk - blk_frozen[blk_id]
                         delta += d
                     else:
                         ck0 = self.store.get_ck().astype(np.int32)
                         d = self.workers[g].run_round_oracle(
                             blk_id, self.store, ck0, u[r, g], self.alpha,
-                            self.beta, self.vbeta)
+                            self.beta, self.vbeta,
+                            sampler_fn=self._sampler_fn)
                         self.store.put_ck_delta(d.astype(np.int64))
                 else:
                     self.workers[g].run_round(blk_id, self.store,

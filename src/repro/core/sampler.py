@@ -51,9 +51,20 @@ def conditional_eq3(ckt_row, cdk_row, ck, alpha, beta, vbeta):
 
 
 def sample_from_mass(p, u):
-    """Inverse-CDF draw: smallest k with cumsum(p)[k] > u * sum(p)."""
+    """Inverse-CDF draw: smallest k with cumsum(p)[k] > u * sum(p).
+
+    Counted form of the draw: ``#{k : csum[k] <= u·total}`` equals the
+    naive ``argmax(csum > u·total)`` whenever some entry exceeds the
+    threshold, but stays correct at the edges where the comparison is
+    all-False and argmax silently returned topic 0 — ``u == 1.0`` (clamped
+    to the last positive-mass topic, as ``sparse.py`` does) and an
+    all-zero mass row (returns 0).
+    """
     csum = jnp.cumsum(p)
-    return jnp.argmax(csum > u * csum[-1])
+    total = csum[-1]
+    idx = jnp.sum(csum <= u * total)
+    last = jnp.sum(csum < total)   # index of the last positive-mass entry
+    return jnp.minimum(idx, last)
 
 
 # ---------------------------------------------------------------------------
@@ -83,7 +94,10 @@ def gibbs_sweep_np(cdk, ckt, ck, doc, word, z, u, alpha, beta,
                             cdk[d].astype(np.float32),
                             ck.astype(np.float32), alpha, beta, vbeta))
         csum = np.cumsum(p)
-        k_new = int(np.argmax(csum > u[i] * csum[-1]))
+        # counted inverse-CDF draw (see sample_from_mass): u == 1.0 clamps
+        # to the last positive-mass topic instead of wrapping to topic 0
+        k_new = int(min((csum <= u[i] * csum[-1]).sum(),
+                        (csum < csum[-1]).sum()))
         z[i] = k_new
         cdk[d, k_new] += 1
         ckt[t, k_new] += 1
@@ -181,7 +195,12 @@ def sweep_block_batched(cdk, ckt_block, ck, doc, word_off, z, mask, u,
                  / (ck_f[None, :] - 1.0 + vbeta))
     p = jnp.maximum(jnp.where(is_old, corrected, base), 0.0)
     csum = jnp.cumsum(p, axis=-1)
-    z_new = jnp.argmax(csum > (u * csum[:, -1])[:, None], axis=-1)
+    # counted inverse-CDF draw (see sample_from_mass): exact at u == 1.0
+    # and on all-zero mass rows, where argmax returned topic 0
+    total = csum[:, -1]
+    idx = jnp.sum(csum <= (u * total)[:, None], axis=-1)
+    last = jnp.sum(csum < total[:, None], axis=-1)
+    z_new = jnp.minimum(idx, last)
     z_new = jnp.where(mask, z_new.astype(jnp.int32), z)
     # fold deltas exactly: -1 at (row, z_old), +1 at (row, z_new)
     cdk = cdk.at[doc, z].add(-delta).at[doc, z_new].add(delta)

@@ -73,9 +73,13 @@ def _gibbs_kernel(ckt_ref, cdk_ref, zold_ref, u_ref, mask_ref,
     p = jnp.where(is_old, corrected, base)
     p = jnp.maximum(p, 0.0)                # guards padded/empty rows
     # ---- inverse-CDF draw over the topic lanes ---------------------------
+    # counted form (see core.sampler.sample_from_mass): exact at u == 1.0
+    # and on all-zero mass rows, where argmax silently returned topic 0
     cum = jnp.cumsum(p, axis=-1)
     total = cum[:, :, -1:]
-    z_new = jnp.argmax(cum > u[:, :, None] * total, axis=-1).astype(jnp.int32)
+    idx = jnp.sum((cum <= u[:, :, None] * total).astype(jnp.int32), axis=-1)
+    last = jnp.sum((cum < total).astype(jnp.int32), axis=-1)
+    z_new = jnp.minimum(idx, last).astype(jnp.int32)
     out_ref[...] = jnp.where(mask != 0, z_new, z_old)
 
 

@@ -1,0 +1,159 @@
+"""Pallas TPU kernel for the alias-table MH *word proposal* step.
+
+The word proposal is the half of the LightLDA cycle that is word-shared:
+its alias table ``(cut, alias, U)`` and frozen ``C_k^t`` row depend only
+on the word, exactly like the eq.-(3) coefficient cache that
+``gibbs_conditional.py`` keeps in VMEM.  The kernel therefore uses the
+same word-grouped ``[G, Tg]`` token layout: each grid step loads TILE_G
+words' alias rows + frozen count rows HBM→VMEM **once** and hits them
+``Tg`` times — per-token work is a cell lookup and a handful of scalar
+gathers, never a K-wide mass or cumsum.
+
+Scalar gathers are expressed as one-hot reductions over the topic lanes
+(`iota == idx` masks) — the TPU-native form of a dynamic lane index; the
+values selected are untouched f32 loads, and the draw/accept comparisons
+are the same division-free single-op forms as the jnp step in
+``core/mh.py`` (`_mh_step`), so the kernel is bit-identical to it —
+asserted by tests.
+
+The doc-proposal half of the cycle is document-local, not word-local —
+its table rows would have to be re-fetched per token, so it gains nothing
+from this tiling and stays in plain jnp (`ops.sweep_block_mh_pallas`
+composes the two).
+
+K is padded to the 128-lane boundary by the wrapper; the REAL topic count
+rides in the consts row so cell indices never land on padded lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.gibbs_conditional import TILE_G
+
+
+def _onehot_f32(values, idx):
+    """values [..., K] f32 gathered at idx [...] -> [...] (exact select)."""
+    k = values.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, idx.shape + (k,),
+                                    idx.ndim)
+    return jnp.sum(jnp.where(iota == idx[..., None], values, 0.0), axis=-1)
+
+
+def _onehot_i32(values, idx):
+    k = values.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, idx.shape + (k,),
+                                    idx.ndim)
+    return jnp.sum(jnp.where(iota == idx[..., None], values, 0), axis=-1)
+
+
+def _mh_word_kernel(wcut_ref, walias_ref, wmass_ref, ucap_ref, ckt_ref,
+                    cdk_ref, zcur_ref, z0_ref, udraw_ref, uacc_ref,
+                    mask_ref, ck_ref, alpha_ref, const_ref, out_ref):
+    beta = const_ref[0, 0]
+    vbeta = const_ref[0, 1]
+    k_real = const_ref[0, 2].astype(jnp.int32)   # unpadded topic count
+    ck = ck_ref[0, :]                      # [K]
+    alpha = alpha_ref[0, :]                # [K]
+    wcut = wcut_ref[...]                   # [G, K] alias cell cut masses
+    walias = walias_ref[...]               # [G, K] alias cell targets
+    wmass = wmass_ref[...]                 # [G, K] f32(W) proposal masses
+    ucap = ucap_ref[...]                   # [G, 1] per-row cell capacity
+    ckt = ckt_ref[...]                     # [G, K] frozen C_k^t rows
+    cdk = cdk_ref[...]                     # [G, T, K] frozen C_d^k rows
+    z_cur = zcur_ref[...]                  # [G, T]
+    z0 = z0_ref[...]                       # [G, T] round-start assignment
+    u_draw = udraw_ref[...]                # [G, T]
+    u_acc = uacc_ref[...]                  # [G, T]
+    mask = mask_ref[...]                   # [G, T] int32 validity
+
+    # ---- alias draw: one uniform -> (cell, within-cell threshold) -------
+    x = u_draw * k_real.astype(jnp.float32)
+    j = jnp.minimum(x.astype(jnp.int32), k_real - 1)          # [G, T]
+    frac = x - j.astype(jnp.float32)
+    cut_j = _onehot_f32(wcut[:, None, :], j)
+    alias_j = _onehot_i32(walias[:, None, :], j)
+    prop = jnp.where(frac * ucap < cut_j, j, alias_j)
+
+    # ---- exact eq.-(1) acceptance from frozen counts --------------------
+    def target_terms(kk):
+        excl = (kk == z0).astype(jnp.float32)
+        num = ((_onehot_f32(cdk, kk) - excl + _onehot_f32(
+            alpha[None, None, :], kk))
+            * (_onehot_f32(ckt[:, None, :], kk) - excl + beta))
+        den = _onehot_f32(ck[None, None, :], kk) - excl + vbeta
+        return num, den
+
+    n_new, d_new = target_terms(prop)
+    n_old, d_old = target_terms(z_cur)
+    q_new = _onehot_f32(wmass[:, None, :], prop)
+    q_old = _onehot_f32(wmass[:, None, :], z_cur)
+    # division-free cross-multiplied accept test (same association order
+    # as core.mh._mh_step — bit-identity depends on it)
+    accept = (u_acc * n_old * d_new * q_new < n_new * d_old * q_old) \
+        & (mask != 0)
+    out_ref[...] = jnp.where(accept, prop, z_cur)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k_real", "tile_g", "interpret"))
+def mh_word_call(wcut: jax.Array, walias: jax.Array, wmass: jax.Array,
+                 ucap: jax.Array, ckt_rows: jax.Array, cdk_rows: jax.Array,
+                 z_cur: jax.Array, z0: jax.Array,
+                 u_draw: jax.Array, u_acc: jax.Array, mask: jax.Array,
+                 ck: jax.Array, alpha: jax.Array, beta: float, vbeta: float,
+                 k_real: int, tile_g: int = TILE_G,
+                 interpret: bool = True) -> jax.Array:
+    """Raw pallas_call wrapper (tile-aligned shapes; padding in ops.py).
+
+    Args:
+      wcut/walias/wmass: [G, K] per-word alias table rows (f32/int32/f32).
+      ucap:         [G, 1] f32 per-word cell capacity ``U``.
+      ckt_rows:     [G, K] f32 frozen word-topic rows.
+      cdk_rows:     [G, Tg, K] f32 frozen doc-topic rows per token; the
+                    token tile Tg is taken from this shape.
+      z_cur/z0/u_draw/u_acc/mask: [G, Tg] per-token state.
+      ck/alpha:     [K] f32.
+      k_real:       unpadded K — alias cells only index real topics.
+    Returns:
+      z after the word MH step, [G, Tg] int32.
+    """
+    g, tg, k = cdk_rows.shape
+    assert g % tile_g == 0 and k % 128 == 0, (g, k)
+    grid = (g // tile_g,)
+    consts = jnp.array([[beta, vbeta, float(k_real), 0.0]], jnp.float32)
+    row = lambda i: (i, 0)
+    row3 = lambda i: (i, 0, 0)
+    rep = lambda i: (0, 0)
+    return pl.pallas_call(
+        _mh_word_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_g, k), row),            # wcut
+            pl.BlockSpec((tile_g, k), row),            # walias
+            pl.BlockSpec((tile_g, k), row),            # wmass
+            pl.BlockSpec((tile_g, 1), row),            # ucap
+            pl.BlockSpec((tile_g, k), row),            # ckt_rows
+            pl.BlockSpec((tile_g, tg, k), row3),       # cdk_rows
+            pl.BlockSpec((tile_g, tg), row),           # z_cur
+            pl.BlockSpec((tile_g, tg), row),           # z0
+            pl.BlockSpec((tile_g, tg), row),           # u_draw
+            pl.BlockSpec((tile_g, tg), row),           # u_acc
+            pl.BlockSpec((tile_g, tg), row),           # mask
+            pl.BlockSpec((1, k), rep),                 # ck (broadcast)
+            pl.BlockSpec((1, k), rep),                 # alpha (broadcast)
+            pl.BlockSpec((1, 4), rep),                 # (beta, vbeta, K, _)
+        ],
+        out_specs=pl.BlockSpec((tile_g, tg), row),
+        out_shape=jax.ShapeDtypeStruct((g, tg), jnp.int32),
+        interpret=interpret,
+    )(wcut.astype(jnp.float32), walias.astype(jnp.int32),
+      wmass.astype(jnp.float32), ucap.astype(jnp.float32),
+      ckt_rows.astype(jnp.float32), cdk_rows.astype(jnp.float32),
+      z_cur.astype(jnp.int32), z0.astype(jnp.int32),
+      u_draw.astype(jnp.float32), u_acc.astype(jnp.float32),
+      mask.astype(jnp.int32), ck[None, :].astype(jnp.float32),
+      alpha[None, :].astype(jnp.float32), consts)

@@ -13,8 +13,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.mh import (DEFAULT_MH_CYCLES, _mh_step,
+                           block_proposal_tables, uniform_streams)
 from repro.kernels.gibbs_conditional import (TILE_G, TILE_T,
                                              gibbs_conditional_call)
+from repro.kernels.mh_alias import mh_word_call
 from repro.kernels.ref import gibbs_conditional_ref
 
 
@@ -120,4 +123,74 @@ def sweep_block_pallas(cdk, ckt_block, ck, doc, word_off, z, mask, u,
     cdk = cdk.at[doc].add(dk)
     ckt_block = ckt_block.at[word_off].add(dk)
     ck = ck + dk.sum(axis=0)
+    return cdk, ckt_block, ck, z_new
+
+
+@functools.partial(jax.jit, static_argnames=("num_cycles", "interpret"))
+def sweep_block_mh_pallas(cdk, ckt_block, ck, doc, word_off, z, mask, u,
+                          alpha, beta, vbeta,
+                          num_cycles: int = DEFAULT_MH_CYCLES,
+                          interpret: bool | None = None):
+    """Engine-facing alias-MH sampler with the word-proposal half of each
+    cycle evaluated by the Pallas kernel (``kernels/mh_alias.py``) and the
+    document-local half in plain jnp — same signature/semantics as
+    ``core.mh.sweep_block_mh`` and bit-identical to it given the same
+    uniforms (asserted by tests), so the kernel slots into the engine
+    without changing the chain's distribution.
+
+    Token-per-group degenerate layout here (like ``sweep_block_pallas``):
+    the per-token row gathers materialize [T, K] operands, so this path
+    trades memory for exercising the kernel end-to-end — it is the
+    VALIDATION route for the kernel math; ``mh`` remains the throughput
+    mode (never materializes [T, K]).  The word-grouped [G, Tg]
+    VMEM-reuse layout the kernel is designed around is exercised on
+    ``mh_word_call`` directly by tests.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    t0 = z.shape[0]
+    k0 = ck.shape[0]
+    ckt_f = ckt_block.astype(jnp.float32)
+    cdk_f = cdk.astype(jnp.float32)
+    ck_f = ck.astype(jnp.float32)
+    # shared prologue with sweep_block_mh — bit-identity depends on it
+    (wcut, walias, wu, wmass), doc_table = block_proposal_tables(
+        cdk, ckt_block, alpha, beta)
+    streams = uniform_streams(u, 4 * num_cycles)
+
+    # per-token word rows, padded to kernel tiles (pads never drawn: the
+    # alias cell index is clamped to the REAL K inside the kernel)
+    tile_g = 128
+    pad2 = lambda x: _pad_to(_pad_to(x, 1, 128), 0, tile_g)
+    wcut_p = pad2(wcut[word_off])
+    walias_p = pad2(walias[word_off])
+    wmass_p = pad2(wmass[word_off].astype(jnp.float32))
+    ucap_p = _pad_to(wu[word_off], 0, tile_g)[:, None]
+    ckt_rows_p = pad2(ckt_f[word_off])
+    cdk_rows_p = _pad_to(_pad_to(cdk_f[doc], 1, 128)[:, None, :], 0, tile_g)
+    z0_p = _pad_to(z, 0, tile_g)[:, None]
+    mask_p = _pad_to(mask.astype(jnp.int32), 0, tile_g)[:, None]
+    ck_p = _pad_to(ck_f, 0, 128)
+    alpha_p = _pad_to(alpha.astype(jnp.float32), 0, 128)
+
+    z_cur = z
+    for c in range(num_cycles):
+        z_cur = mh_word_call(
+            wcut_p, walias_p, wmass_p, ucap_p, ckt_rows_p, cdk_rows_p,
+            _pad_to(z_cur, 0, tile_g)[:, None], z0_p,
+            _pad_to(streams[4 * c], 0, tile_g)[:, None],
+            _pad_to(streams[4 * c + 1], 0, tile_g)[:, None],
+            mask_p, ck_p, alpha_p, beta, vbeta, k_real=k0,
+            tile_g=tile_g, interpret=interpret)[:t0, 0]
+        z_cur = _mh_step(
+            z_cur, z, doc, word_off, mask, streams[4 * c + 2],
+            streams[4 * c + 3], doc, doc_table,
+            cdk_f, ckt_f, ck_f, alpha, beta, vbeta)
+
+    z_new = jnp.where(mask, z_cur, z)
+    delta = mask.astype(jnp.int32)
+    cdk = cdk.at[doc, z].add(-delta).at[doc, z_new].add(delta)
+    ckt_block = ckt_block.at[word_off, z].add(-delta) \
+                         .at[word_off, z_new].add(delta)
+    ck = ck.at[z].add(-delta).at[z_new].add(delta)
     return cdk, ckt_block, ck, z_new

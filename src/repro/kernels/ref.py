@@ -27,9 +27,13 @@ def gibbs_conditional_ref(ckt_group, cdk_rows, z_old, u, mask, ck, alpha,
                  * (alpha[None, None, :] + cdk - 1.0)
                  / (ck[None, None, :] - 1.0 + vbeta))
     p = jnp.maximum(jnp.where(is_old, corrected, base), 0.0)
+    # counted inverse-CDF draw (see core.sampler.sample_from_mass): exact
+    # at u == 1.0 and on all-zero mass rows
     cum = jnp.cumsum(p, axis=-1)
     total = cum[:, :, -1:]
-    z_new = jnp.argmax(cum > u[:, :, None] * total, axis=-1).astype(jnp.int32)
+    idx = jnp.sum((cum <= u[:, :, None] * total).astype(jnp.int32), axis=-1)
+    last = jnp.sum((cum < total).astype(jnp.int32), axis=-1)
+    z_new = jnp.minimum(idx, last).astype(jnp.int32)
     return jnp.where(mask != 0, z_new, z_old.astype(jnp.int32))
 
 

@@ -112,6 +112,10 @@ def run(cfg_name: str, workers: int = 64, sampler: str = "batched",
     }
     os.makedirs(out_dir, exist_ok=True)
     tag = f"ring{m}x{sb}" if dp == 1 else f"grid{dp}x{m}x{sb}"
+    # the sampler is part of the artifact identity: different samplers
+    # lower to very different rooflines and must not clobber each other
+    if sampler != "batched":
+        tag = f"{tag}__{sampler}"
     with open(os.path.join(out_dir, f"lda__{cfg_name}__{tag}.json"),
               "w") as f:
         json.dump(rec, f, indent=1)
@@ -135,7 +139,7 @@ def main() -> None:
                     help="D: replicate the block ring over D doc shards "
                          "(hybrid 2D grid; needs D*workers devices)")
     ap.add_argument("--sampler", default="batched",
-                    choices=["scan", "batched", "pallas"])
+                    choices=["scan", "batched", "pallas", "mh", "mh_pallas"])
     args = ap.parse_args()
     names = list(LDA_CONFIGS) if args.all else [args.config]
     for name in names:

@@ -25,8 +25,12 @@ from repro.train.checkpoint import save_checkpoint
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", choices=["mp", "dp"], default="mp")
-    ap.add_argument("--sampler", choices=["scan", "batched", "pallas"],
-                    default="scan")
+    ap.add_argument("--sampler",
+                    choices=["scan", "batched", "pallas", "mh", "mh_pallas"],
+                    default="scan",
+                    help="per-block sampler: exact scan, word-frozen "
+                         "batched/pallas, or O(1) alias-table MH "
+                         "(DESIGN.md §9)")
     ap.add_argument("--docs", type=int, default=500)
     ap.add_argument("--vocab", type=int, default=2000)
     ap.add_argument("--topics", type=int, default=50)
