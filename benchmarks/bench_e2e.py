@@ -1,0 +1,228 @@
+"""End-to-end engine throughput: WHOLE iterations, not single-block sweeps.
+
+    PYTHONPATH=src python -m benchmarks.bench_e2e [--smoke]
+
+`bench_samplers.py` times one block sweep in isolation; this benchmark
+times ``ModelParallelLDA.step()`` — S·M rounds with rotation, ``C_k``
+sync, and (for the MH family) the table build schedule — which is the
+quantity the table-lifetime amortization (ISSUE 4, DESIGN.md §10)
+actually improves: per-round builds are engine overhead invisible to a
+single-sweep benchmark.
+
+Two report sections:
+
+* **headline** — the MH pair at K = 4096 on one geometry, each at BOTH
+  table lifetimes on the identical workload.  The acceptance bar is
+  ``iteration`` tokens/s > ``round`` tokens/s for ``mh`` AND
+  ``mh_pallas``: the per-iteration schedule pays ``S + 1`` alias builds
+  per worker where the per-round schedule pays ``S·M``.
+* **geometry sweep** — samplers × (D, M, S) at a smaller K, tracking how
+  throughput composes with the pipeline depth and the data axis.
+
+Engines run with ``track_error=False`` (the Fig-3 drift statistic is
+pure overhead here) and state donation on — the benchmark ASSERTS both:
+donation at the lowering level (``tf.aliasing_output`` on the state
+args) and live (the pre-step buffer is actually consumed).
+
+Results land in ``benchmarks/results/bench_e2e.json`` and — full mode
+only — the repo-root ``BENCH_e2e.json`` (smoke mode never clobbers the
+recorded perf trajectory; it exists so `scripts/ci.sh` exercises this
+path on every run).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, emit_csv_row, save_result
+from repro.core.engine.api import ModelParallelLDA
+from repro.core.engine.backends import iteration_vmap
+from repro.data.synthetic import synthetic_corpus
+
+ROOT_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                         "BENCH_e2e.json")
+
+# full-mode workload: ~6k tokens, V = 256 — small enough that a K = 4096
+# iteration is dominated by exactly what the lifetime schedule changes
+# (table builds), matching the big-K regime the MH backend targets
+FULL = dict(docs=128, vocab=256, doc_len=48, k_headline=4096,
+            k_sweep=256, repeats=2,
+            headline_geom=(1, 4, 2),        # (D, M, S): 8-round pipeline
+            sweep_geoms=((1, 2, 1), (1, 4, 2), (2, 2, 1)))
+SMOKE = dict(docs=24, vocab=64, doc_len=16, k_headline=64,
+             k_sweep=64, repeats=1,
+             headline_geom=(1, 2, 2),
+             sweep_geoms=((1, 2, 1),))
+
+
+def _make_engine(corpus, k, geom, sampler, lifetime=None, seed=0):
+    d, m, s = geom
+    return ModelParallelLDA(corpus, k, num_workers=m, seed=seed,
+                            sampler_mode=sampler, blocks_per_worker=s,
+                            data_parallel=d, table_lifetime=lifetime,
+                            track_error=False)
+
+
+def _verify_donation(lda) -> dict:
+    """Satellite check: the iteration donates the MPState buffers.
+
+    (i) lowering level — every state tensor arg carries an
+    ``tf.aliasing_output`` annotation in the lowered module;
+    (ii) live — after one step the pre-step buffer is deleted (the
+    runtime really did reuse it instead of copying).
+    """
+    u = jnp.zeros((lda.num_rounds, lda.num_shards, lda.capacity),
+                  jnp.float32)
+    lowered = iteration_vmap.lower(
+        lda.state, u, lda.doc, lda.woff, lda.mask, lda.alpha,
+        jnp.float32(lda.beta), jnp.float32(lda.vbeta),
+        sampler_mode=lda.sampler_mode, sync_ck=lda.sync_ck,
+        data_parallel=lda.data_parallel,
+        table_lifetime=lda.table_lifetime, track_error=lda.track_error)
+    text = lowered.as_text()
+    n_alias = text.count("tf.aliasing_output")
+    assert n_alias >= 6, (
+        f"expected all 6 MPState buffers donated, lowering marks {n_alias}")
+    pre = lda.state.cdk
+    lda.step()
+    assert pre.is_deleted(), \
+        "MPState.cdk survived a step — donation did not take effect"
+    return {"lowered_aliased_args": n_alias, "live_buffer_donated": True}
+
+
+def _time_engine(lda, repeats: int) -> dict:
+    """Median seconds per iteration (post-warmup), tokens/s derived."""
+    lda.step()                                    # compile + warm
+    jax.block_until_ready(lda.state.cdk)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        lda.step()
+        jax.block_until_ready(lda.state.cdk)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    sec = times[len(times) // 2]
+    tokens = lda.corpus.num_tokens
+    return {"sec_per_iteration": sec, "tokens_per_s": tokens / sec}
+
+
+def run(smoke: bool = False, seed: int = 0) -> dict:
+    cfg = SMOKE if smoke else FULL
+    corpus, _, _ = synthetic_corpus(cfg["docs"], cfg["vocab"], 16,
+                                    cfg["doc_len"], seed=seed)
+    out = {
+        "mode": "smoke" if smoke else "full",
+        "workload": {"docs": cfg["docs"], "vocab": cfg["vocab"],
+                     "doc_len": cfg["doc_len"],
+                     "tokens": corpus.num_tokens},
+    }
+
+    # donation satellite: checked once on a representative MH engine
+    out["donation"] = _verify_donation(
+        _make_engine(corpus, cfg["k_sweep"], cfg["sweep_geoms"][0], "mh"))
+
+    # -- headline: table-lifetime A/B for the MH family at big K ---------
+    k = cfg["k_headline"]
+    d, m, s = cfg["headline_geom"]
+    headline = {"k": k, "geometry": {"data_parallel": d, "workers": m,
+                                     "blocks_per_worker": s,
+                                     "rounds": m * s}}
+    for sampler in ("mh", "mh_pallas"):
+        rec = {}
+        for lifetime in ("round", "iteration"):
+            lda = _make_engine(corpus, k, cfg["headline_geom"], sampler,
+                               lifetime)
+            rec[lifetime] = _time_engine(lda, cfg["repeats"])
+            emit_csv_row(f"e2e_{sampler}_{lifetime}_k{k}",
+                         rec[lifetime]["sec_per_iteration"] * 1e6,
+                         f"tokens_per_s="
+                         f"{rec[lifetime]['tokens_per_s']:.0f}")
+        rec["iteration_speedup"] = (rec["iteration"]["tokens_per_s"]
+                                    / rec["round"]["tokens_per_s"])
+        headline[sampler] = rec
+    headline["improved"] = all(
+        headline[sm]["iteration_speedup"] > 1.0
+        for sm in ("mh", "mh_pallas"))
+    out[f"k{k}"] = headline
+    out["e2e_improved_at_headline_k"] = headline["improved"]
+
+    # -- geometry sweep: samplers × (D, M, S) at sweep K ------------------
+    ks = cfg["k_sweep"]
+    sweep = {}
+    for geom in cfg["sweep_geoms"]:
+        gname = "d{}m{}s{}".format(*geom)
+        rec = {}
+        for sampler, lifetime in (("batched", None), ("mh", "round"),
+                                  ("mh", "iteration")):
+            if smoke and sampler == "batched":
+                continue
+            label = sampler if lifetime is None else \
+                f"{sampler}_{lifetime}"
+            lda = _make_engine(corpus, ks, geom, sampler, lifetime)
+            rec[label] = _time_engine(lda, cfg["repeats"])
+            emit_csv_row(f"e2e_{label}_k{ks}_{gname}",
+                         rec[label]["sec_per_iteration"] * 1e6,
+                         f"tokens_per_s={rec[label]['tokens_per_s']:.0f}")
+        sweep[gname] = rec
+    out[f"k{ks}_geometry_sweep"] = sweep
+
+    save_result("bench_e2e_smoke" if smoke else "bench_e2e", out)
+    if not smoke:
+        aggregate_root(out)
+    return out
+
+
+def aggregate_root(e2e_payload: dict | None = None) -> str:
+    """Write the repo-root ``BENCH_e2e.json``: the e2e trajectory at top
+    level plus a digest of every per-benchmark JSON under
+    ``benchmarks/results/`` — one file that answers "how fast is the
+    system end to end, and what feeds that number"."""
+    out_path = os.path.abspath(ROOT_JSON)
+    if e2e_payload is None:
+        path = os.path.join(RESULTS_DIR, "bench_e2e.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                e2e_payload = json.load(f)
+        elif os.path.exists(out_path):
+            # no fresh e2e run this invocation: keep the recorded
+            # trajectory rather than clobbering it with null
+            with open(out_path) as f:
+                e2e_payload = json.load(f).get("e2e")
+    root = {"e2e": e2e_payload, "benchmarks": {}}
+    if os.path.isdir(RESULTS_DIR):
+        for name in sorted(os.listdir(RESULTS_DIR)):
+            if not name.endswith(".json") or name.startswith("bench_e2e"):
+                continue
+            try:
+                with open(os.path.join(RESULTS_DIR, name)) as f:
+                    root["benchmarks"][name[:-5]] = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                continue
+    with open(out_path, "w") as f:
+        json.dump(root, f, indent=1)
+    return out_path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI workload; skips the root BENCH_e2e.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    res = run(smoke=args.smoke)
+    hk = [k for k in res if k.startswith("k") and "sweep" not in k][0]
+    h = res[hk]
+    for sm in ("mh", "mh_pallas"):
+        print(f"# {sm} {hk}: round={h[sm]['round']['tokens_per_s']:.0f} "
+              f"iteration={h[sm]['iteration']['tokens_per_s']:.0f} tok/s "
+              f"(speedup {h[sm]['iteration_speedup']:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,10 @@
     PYTHONPATH=src python -m benchmarks.run [--only NAME]
 
 Prints ``name,us_per_call,derived`` CSV rows (one per benchmark) and writes
-full JSON payloads under benchmarks/results/.
+full JSON payloads under benchmarks/results/.  After the run, every
+per-benchmark result is aggregated into the repo-root ``BENCH_e2e.json``
+(the e2e throughput trajectory at top level, the rest as a digest) so one
+file tracks the system's perf state across PRs.
 """
 from __future__ import annotations
 
@@ -12,8 +15,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_convergence, bench_error, bench_kernel,
-                        bench_model_size, bench_samplers, bench_scaling)
+from benchmarks import (bench_convergence, bench_e2e, bench_error,
+                        bench_kernel, bench_model_size, bench_samplers,
+                        bench_scaling)
 
 BENCHES = {
     "fig2_convergence": bench_convergence.run,
@@ -22,6 +26,7 @@ BENCHES = {
     "fig4_scaling": bench_scaling.run,
     "kernel_sampler": bench_kernel.run,
     "sampler_backends": bench_samplers.run,
+    "e2e_throughput": bench_e2e.run,
 }
 
 
@@ -41,6 +46,12 @@ def main() -> None:
             print(f"{name},FAILED,", file=sys.stderr)
             traceback.print_exc()
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    try:
+        path = bench_e2e.aggregate_root()
+        print(f"# aggregated results -> {path}", file=sys.stderr)
+    except Exception:
+        failures += 1
+        traceback.print_exc()
     if failures:
         raise SystemExit(f"{failures} benchmarks failed")
 

@@ -26,3 +26,11 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 PYTHONHASHSEED=0 \
     XLA_FLAGS="--xla_force_host_platform_device_count=4" \
     python -m pytest -x -q -m slow tests/test_mh_stats.py
+
+# Pass 4: end-to-end engine throughput smoke — one tiny workload through
+# benchmarks/bench_e2e.py (table-lifetime A/B on the MH pair, donation
+# assertions, whole-iteration timing), so the e2e benchmark path and the
+# traveling-table engine configuration it exercises can never rot
+# silently.  Smoke mode writes results/bench_e2e_smoke.json only; the
+# recorded perf trajectory (BENCH_e2e.json) is full-mode output.
+python -m benchmarks.bench_e2e --smoke

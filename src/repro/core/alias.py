@@ -304,6 +304,66 @@ def alias_table_masses(cut: np.ndarray, alias: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Packed (rotatable) table layout — the ring payload of traveling tables
+# ---------------------------------------------------------------------------
+#
+# A built table is three [N, K] planes (cut f32, alias i32, W i32) plus the
+# per-row capacity U [N] f32.  To let a table travel through the engine's
+# rotation collective as ONE array (a single extra ppermute per round, and
+# one slot queue to park it in), the planes are packed into a single int32
+# array of shape [..., 3, N, K]:
+#
+#   plane 0 — cut,   IEEE-754 bits reinterpreted as int32 (lossless);
+#   plane 1 — alias, already int32;
+#   plane 2 — W,     the integer proposal masses.
+#
+# U is deliberately NOT packed: it is an exact int32 row sum of W
+# (`build_alias_int_rows` computes it the same way), so the unpacker
+# recomputes it bit-for-bit from plane 2 — one fewer plane to move and one
+# fewer value whose staleness could diverge from the masses it summarizes.
+
+def pack_tables(cut: jax.Array, alias: jax.Array,
+                w: jax.Array) -> jax.Array:
+    """(cut [.., N, K] f32, alias [.., N, K] i32, W [.., N, K] i32) ->
+    packed int32 [.., 3, N, K] (bit-lossless; see layout note above)."""
+    return jnp.stack([
+        jax.lax.bitcast_convert_type(cut.astype(jnp.float32), jnp.int32),
+        alias.astype(jnp.int32), w.astype(jnp.int32)], axis=-3)
+
+
+def unpack_tables(packed: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Packed [.., 3, N, K] int32 -> (cut, alias, U, W) — the tuple shape
+    every MH sweep consumes.  ``U`` is recomputed as the exact int32 row
+    sum of the W plane, bit-identical to the value the builder produced."""
+    cut = jax.lax.bitcast_convert_type(packed[..., 0, :, :], jnp.float32)
+    alias = packed[..., 1, :, :]
+    w = packed[..., 2, :, :]
+    u_cap = w.sum(axis=-1).astype(jnp.float32)
+    return cut, alias, u_cap, w
+
+
+def pack_tables_np(cut: np.ndarray, alias: np.ndarray,
+                   w: np.ndarray) -> np.ndarray:
+    """Numpy mirror of :func:`pack_tables` (host-side tests/tools)."""
+    return np.stack([np.asarray(cut, np.float32).view(np.int32),
+                     np.asarray(alias, np.int32),
+                     np.asarray(w, np.int32)], axis=-3)
+
+
+def unpack_tables_np(packed: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                np.ndarray]:
+    """Numpy mirror of :func:`unpack_tables`."""
+    packed = np.asarray(packed, np.int32)
+    cut = packed[..., 0, :, :].view(np.float32)
+    alias = packed[..., 1, :, :]
+    w = packed[..., 2, :, :]
+    u_cap = w.sum(axis=-1, dtype=np.int32).astype(np.float32)
+    return cut, alias, u_cap, w
+
+
+# ---------------------------------------------------------------------------
 # Draw helpers (shared by jnp MH steps, Pallas kernel mirrors the math)
 # ---------------------------------------------------------------------------
 

@@ -20,12 +20,17 @@ imports keep working.
 from repro.core.engine.api import ModelParallelLDA
 from repro.core.engine.backends import (iteration_vmap,
                                         make_shard_map_iteration)
-from repro.core.engine.rounds import (available_samplers, register_sampler,
-                                      resolve_sampler, worker_round)
+from repro.core.engine.rounds import (available_samplers,
+                                      register_sampler,
+                                      register_table_sampler,
+                                      resolve_sampler,
+                                      resolve_table_sampler, table_capable,
+                                      worker_round, worker_round_tables)
 from repro.core.engine.state import EngineLayout, MPState
 
 __all__ = [
     "EngineLayout", "ModelParallelLDA", "MPState", "available_samplers",
     "iteration_vmap", "make_shard_map_iteration", "register_sampler",
-    "resolve_sampler", "worker_round",
+    "register_table_sampler", "resolve_sampler", "resolve_table_sampler",
+    "table_capable", "worker_round", "worker_round_tables",
 ]

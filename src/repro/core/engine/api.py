@@ -26,6 +26,20 @@ distribution-equal to the exact chain, so their validation is the
 statistical suite `tests/test_mh_stats.py` plus a draw-for-draw host
 oracle replay (`kvstore.HostModelParallelLDA(sampler="mh")`).
 
+``table_lifetime`` governs how long MH proposal tables live (DESIGN.md
+§10): ``"iteration"`` (the default for the MH family) builds each
+block's word table once per iteration at its first residency and rotates
+the packed table with the block, with doc tables built once from
+iteration-start counts — amortizing the O((Vb + D_loc)·K) build by a
+factor of ``S·M``; ``"round"`` is the original rebuild-every-round
+schedule (the A/B baseline).  The chain stays exact either way — the
+eq.-(1) acceptance corrects arbitrarily stale proposals — and the host
+oracle mirrors whichever schedule is selected, so replay stays bitwise.
+
+``track_error=False`` skips the per-round Fig-3 drift statistic (the
+``delta_error()`` history) — benchmarks use it to keep the hot path free
+of an unconsumed [R, K]-wide reduction per round.
+
 ``data_parallel`` (``D``) is the throughput lever: documents shard
 ``D·M`` ways over a 2D ``(data, model)`` grid while each replica keeps a
 copy of the block pipeline, reconciled by a per-round delta psum along
@@ -51,7 +65,7 @@ from repro.core.counts import CountState
 from repro.core.engine import state as engine_state
 from repro.core.engine.backends import (iteration_vmap,
                                         make_shard_map_iteration)
-from repro.core.engine.rounds import resolve_sampler
+from repro.core.engine.rounds import resolve_sampler, table_capable
 from repro.core.likelihood import doc_log_likelihood, word_log_likelihood
 from repro.data.corpus import Corpus
 
@@ -65,7 +79,9 @@ class ModelParallelLDA:
                  sync_ck: bool = True, backend: str = "vmap",
                  mesh: Optional[Mesh] = None, axis: str = "w",
                  blocks_per_worker: int = 1, data_parallel: int = 1,
-                 data_axis: str = "data"):
+                 data_axis: str = "data",
+                 table_lifetime: Optional[str] = None,
+                 track_error: bool = True):
         corpus.validate()
         if blocks_per_worker < 1:
             raise ValueError(
@@ -89,6 +105,20 @@ class ModelParallelLDA:
         self.vbeta = float(beta * corpus.vocab_size)
         resolve_sampler(sampler_mode)   # fail fast on unknown modes
         self.sampler_mode = sampler_mode
+        if table_lifetime is None:
+            # the amortized schedule is the default wherever it applies
+            table_lifetime = ("iteration" if table_capable(sampler_mode)
+                              else "round")
+        if table_lifetime not in ("round", "iteration"):
+            raise ValueError(
+                f"unknown table_lifetime {table_lifetime!r}; "
+                "expected 'round' or 'iteration'")
+        if table_lifetime == "iteration" and not table_capable(sampler_mode):
+            raise ValueError(
+                f"table_lifetime='iteration' needs a table-capable "
+                f"sampler (the MH family), got {sampler_mode!r}")
+        self.table_lifetime = table_lifetime
+        self.track_error = bool(track_error)
         self.sync_ck = bool(sync_ck)
         self.backend = backend
         self.axis = axis
@@ -130,7 +160,9 @@ class ModelParallelLDA:
             self.mesh = mesh
             self._iter_fn = make_shard_map_iteration(
                 mesh, axis, sampler_mode, sync_ck,
-                data_axis=data_axis if use_2d else None)
+                data_axis=data_axis if use_2d else None,
+                table_lifetime=self.table_lifetime,
+                track_error=self.track_error)
         else:
             self.mesh = None
             self._iter_fn = None
@@ -233,7 +265,9 @@ class ModelParallelLDA:
                 self.state, u, self.doc, self.woff, self.mask,
                 self.alpha, jnp.float32(self.beta), jnp.float32(self.vbeta),
                 sampler_mode=self.sampler_mode, sync_ck=self.sync_ck,
-                data_parallel=self.data_parallel)
+                data_parallel=self.data_parallel,
+                table_lifetime=self.table_lifetime,
+                track_error=self.track_error)
         else:
             s = self.state
             out = self._iter_fn(
@@ -242,7 +276,8 @@ class ModelParallelLDA:
                 self.alpha, jnp.float32(self.beta), jnp.float32(self.vbeta))
             self.state = engine_state.MPState(*out[:6])
             errs = out[6]
-        self.round_errors = np.asarray(errs).reshape(-1)
+        self.round_errors = (np.asarray(errs).reshape(-1)
+                             if self.track_error else np.zeros(0))
         self.iteration_count += 1
 
     def run(self, num_iterations: int,

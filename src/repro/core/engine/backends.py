@@ -39,6 +39,19 @@ which is exactly the window between two rotation/reconciliation
 collectives — so neither the S-block pipeline nor the data axis widens
 it, and the vmap/shard_map backends stay bit-identical for every
 registered sampler, MH included.
+
+Traveling tables (``table_lifetime="iteration"``, DESIGN.md §10): for
+the MH family the per-block word-proposal alias table is built ONCE per
+iteration — at the block's first residency, i.e. during the first ``S``
+rounds — and then rotates through the ring *with* its block as one
+packed int32 array (a second ``ppermute``/``roll`` per round), parked in
+a slot queue mirroring the block queue.  Doc-proposal tables are built
+once per iteration from iteration-start ``cdk`` and are loop-invariant.
+Tables are iteration-local by construction: every table a reuse round
+reads was built earlier in the same iteration, so the state pytree
+carries none and checkpoints stay sampler-agnostic.  Both iteration
+functions donate the state buffers (``donate_argnums``), so the big
+count/assignment arrays are updated in place instead of copied.
 """
 from __future__ import annotations
 
@@ -50,23 +63,124 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 from repro.core import schedule as sched
-from repro.core.engine.rounds import resolve_sampler, worker_round
+from repro.core.engine.rounds import (resolve_sampler,
+                                      resolve_table_sampler, worker_round,
+                                      worker_round_tables)
 from repro.core.engine.state import MPState
 
 
 @partial(jax.jit, static_argnames=("sampler_mode", "sync_ck",
-                                   "data_parallel"))
+                                   "data_parallel", "table_lifetime",
+                                   "track_error"),
+         donate_argnums=(0,))
 def iteration_vmap(state: MPState, u, doc, woff, mask, alpha, beta, vbeta,
                    sampler_mode: str = "scan", sync_ck: bool = True,
-                   data_parallel: int = 1):
+                   data_parallel: int = 1, table_lifetime: str = "round",
+                   track_error: bool = True):
     """One full iteration = S·M rounds with rotation, stacked on one device.
 
     ``u`` is ``[B, R, T]`` — one uniform per (round, grid row, token slot),
-    with ``R = data_parallel · M``.
+    with ``R = data_parallel · M``.  ``state`` is donated: the returned
+    :class:`MPState` reuses the input buffers, so callers must not touch
+    the argument after the call (the facade always rebinds it).
+
+    ``table_lifetime="iteration"`` selects the traveling-table MH
+    schedule (module docstring); ``track_error=False`` skips the per-round
+    Fig-3 drift statistic (``errs`` comes back all-zero) — with
+    ``sync_ck=True`` the true totals are still computed for the sync.
     """
+    d_ = data_parallel
+
+    def rotate(x):
+        # rotation m -> m-1 within every replica: worker m-1 receives
+        # worker m's payload (resident block / its traveling table) and
+        # parks it at the tail of its queue (immediately resident when
+        # S == 1).
+        if d_ > 1:
+            r_ = x.shape[0]
+            return jnp.roll(x.reshape(d_, r_ // d_, *x.shape[1:]), -1,
+                            axis=1).reshape(x.shape)
+        return jnp.roll(x, -1, axis=0)
+
+    def reconcile(res_ckt, res_pre):
+        if d_ == 1:
+            return res_ckt
+        # delta-psum reconciliation along data (DESIGN.md §8): replica
+        # copies of block b were identical at round start (res_pre),
+        # diverged during sampling; commit pre + Σ_d (post_d − pre).
+        r_, vb, k = res_ckt.shape
+        m_ = r_ // d_
+        delta = (res_ckt - res_pre).reshape(d_, m_, vb, k).sum(axis=0)
+        rec = res_pre.reshape(d_, m_, vb, k)[0] + delta
+        return jnp.broadcast_to(rec[None], (d_, m_, vb, k)) \
+            .reshape(r_, vb, k)
+
+    def sync_and_err(ck_syn, ck_loc):
+        # paper Fig-3 error: pre-sync ℓ1 drift of local {C_k} vs true
+        # totals.  ck_true feeds the sync too, so it is only skippable
+        # when neither consumer is on.
+        err = jnp.float32(0.0)
+        if sync_ck or track_error:
+            ck_true = ck_syn + (ck_loc - ck_syn[None, :]).sum(axis=0)
+        if track_error:
+            n_tok = jnp.maximum(ck_true.sum(), 1).astype(jnp.float32)
+            err = (jnp.abs(ck_loc - ck_true[None, :]).sum()
+                   .astype(jnp.float32) / (ck_loc.shape[0] * n_tok))
+        if sync_ck:
+            ck_loc = jnp.broadcast_to(ck_true, ck_loc.shape)
+            ck_syn = ck_true
+        return ck_syn, ck_loc, err
+
+    if table_lifetime == "iteration":
+        from repro.core.mh import build_doc_tables, build_word_tables
+        tsampler = resolve_table_sampler(sampler_mode)
+        round_fn = partial(worker_round_tables, sampler=tsampler)
+        r_, s_, vb, k = state.ckt.shape
+        # per-iteration doc tables from iteration-start cdk (DESIGN.md
+        # §10): loop-invariant across all S·M rounds.
+        dtab = jax.vmap(build_doc_tables, in_axes=(0, None))(
+            state.cdk, alpha)
+
+        def round_step(carry, u_r, *, build):
+            cdk, ckt, blk, ck_syn, ck_loc, z, ttab = carry
+            res_pre = ckt[:, 0]              # [R, Vb, K] round-start copies
+            res_blk = blk[:, 0]
+            if build:
+                # first residency of this block this iteration: build its
+                # word table from the round-start copy (identical across
+                # replicas, so the D builds agree bitwise).
+                wtab = jax.vmap(build_word_tables, in_axes=(0, None))(
+                    res_pre, beta)
+            else:
+                wtab = ttab[:, 0]            # the table that traveled in
+            cdk, res_ckt, ck_loc, z = jax.vmap(
+                round_fn, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0,
+                                   None, None, None, 0, 0))(
+                cdk, res_pre, res_blk, ck_loc, z, u_r, doc, woff, mask,
+                alpha, beta, vbeta, wtab, dtab)
+            res_ckt = rotate(reconcile(res_ckt, res_pre))
+            res_blk = rotate(res_blk)
+            wtab = rotate(wtab)      # the table travels WITH its block
+            ckt = jnp.concatenate([ckt[:, 1:], res_ckt[:, None]], axis=1)
+            blk = jnp.concatenate([blk[:, 1:], res_blk[:, None]], axis=1)
+            ttab = jnp.concatenate([ttab[:, 1:], wtab[:, None]], axis=1)
+            ck_syn, ck_loc, err = sync_and_err(ck_syn, ck_loc)
+            return (cdk, ckt, blk, ck_syn, ck_loc, z, ttab), err
+
+        # table queue mirroring the block queue; never read before its
+        # slot is written (every block's table is built in rounds < S),
+        # so the zero init is dead weight XLA can elide.
+        ttab0 = jnp.zeros((r_, s_, 3, vb, k), jnp.int32)
+        carry = (state.cdk, state.ckt, state.block_id, state.ck_synced,
+                 state.ck_local, state.z, ttab0)
+        carry, errs_b = jax.lax.scan(partial(round_step, build=True),
+                                     carry, u[:s_])
+        carry, errs_r = jax.lax.scan(partial(round_step, build=False),
+                                     carry, u[s_:])
+        return MPState(*carry[:6]), jnp.concatenate([errs_b, errs_r])
+
     sampler = resolve_sampler(sampler_mode)
     round_fn = partial(worker_round, sampler=sampler)
-    d_ = data_parallel
 
     def round_step(carry, u_r):
         cdk, ckt, blk, ck_syn, ck_loc, z = carry
@@ -77,38 +191,11 @@ def iteration_vmap(state: MPState, u, doc, woff, mask, alpha, beta, vbeta,
                                None, None, None))(
             cdk, res_pre, res_blk, ck_loc, z, u_r, doc, woff, mask,
             alpha, beta, vbeta)
-        if d_ > 1:
-            # delta-psum reconciliation along data (DESIGN.md §8): replica
-            # copies of block b were identical at round start (res_pre),
-            # diverged during sampling; commit pre + Σ_d (post_d − pre).
-            r_, vb, k = res_ckt.shape
-            m_ = r_ // d_
-            delta = (res_ckt - res_pre).reshape(d_, m_, vb, k).sum(axis=0)
-            rec = res_pre.reshape(d_, m_, vb, k)[0] + delta
-            res_ckt = jnp.broadcast_to(rec[None], (d_, m_, vb, k)) \
-                .reshape(r_, vb, k)
-            # rotation m -> m-1 within every replica
-            res_ckt = jnp.roll(res_ckt.reshape(d_, m_, vb, k), -1,
-                               axis=1).reshape(r_, vb, k)
-            res_blk = jnp.roll(res_blk.reshape(d_, m_), -1,
-                               axis=1).reshape(r_)
-        else:
-            # rotation m -> m-1: worker m-1 receives worker m's resident
-            # block and parks it at the tail of its queue (immediately
-            # resident when S == 1).  Parked slots shift one toward the
-            # head.
-            res_ckt = jnp.roll(res_ckt, -1, axis=0)
-            res_blk = jnp.roll(res_blk, -1, axis=0)
+        res_ckt = rotate(reconcile(res_ckt, res_pre))
+        res_blk = rotate(res_blk)
         ckt = jnp.concatenate([ckt[:, 1:], res_ckt[:, None]], axis=1)
         blk = jnp.concatenate([blk[:, 1:], res_blk[:, None]], axis=1)
-        # paper Fig-3 error: pre-sync ℓ1 drift of local {C_k} vs true totals
-        ck_true = ck_syn + (ck_loc - ck_syn[None, :]).sum(axis=0)
-        n_tok = jnp.maximum(ck_true.sum(), 1).astype(jnp.float32)
-        err = (jnp.abs(ck_loc - ck_true[None, :]).sum().astype(jnp.float32)
-               / (ck_loc.shape[0] * n_tok))
-        if sync_ck:
-            ck_loc = jnp.broadcast_to(ck_true, ck_loc.shape)
-            ck_syn = ck_true
+        ck_syn, ck_loc, err = sync_and_err(ck_syn, ck_loc)
         return (cdk, ckt, blk, ck_syn, ck_loc, z), err
 
     carry = (state.cdk, state.ckt, state.block_id, state.ck_synced,
@@ -118,7 +205,9 @@ def iteration_vmap(state: MPState, u, doc, woff, mask, alpha, beta, vbeta,
 
 
 def make_shard_map_iteration(mesh: Mesh, axis: str, sampler_mode: str,
-                             sync_ck: bool, data_axis: str | None = None):
+                             sync_ck: bool, data_axis: str | None = None,
+                             table_lifetime: str = "round",
+                             track_error: bool = True):
     """Build the jitted per-device iteration function for ``mesh``.
 
     ``axis`` is the model axis carrying the block ring.  When ``data_axis``
@@ -127,9 +216,18 @@ def make_shard_map_iteration(mesh: Mesh, axis: str, sampler_mode: str,
     ``state.build_layout``'s row order), resident blocks are reconciled by
     a per-round delta ``psum`` along ``data``, and ``{C_k}`` syncs over
     the whole grid.  ``data_axis=None`` is the original 1D worker ring.
+
+    With ``table_lifetime="iteration"`` the per-round ``ppermute`` of the
+    resident block gains a companion: the block's packed word-proposal
+    table rides the same ring permutation, so table payloads move as one
+    extra ``collective-permute`` per round and never rebuild outside the
+    first ``S`` rounds (module docstring; DESIGN.md §10).  The six state
+    arrays are donated — counts update in place across iterations.
     """
     perm = sched.rotation_permutation(mesh.shape[axis])
-    sampler = resolve_sampler(sampler_mode)
+    tables = table_lifetime == "iteration"
+    sampler = (resolve_table_sampler(sampler_mode) if tables
+               else resolve_sampler(sampler_mode))
     ck_axes = (data_axis, axis) if data_axis is not None else axis
 
     def per_device(cdk, ckt, blk, ck_syn, ck_loc, z, u, doc, woff, mask,
@@ -137,14 +235,25 @@ def make_shard_map_iteration(mesh: Mesh, axis: str, sampler_mode: str,
         # local shards arrive with a leading grid axis of size 1
         cdk, ckt, blk, ck_loc, z = (x[0] for x in (cdk, ckt, blk, ck_loc, z))
         doc, woff, mask, u = (x[0] for x in (doc, woff, mask, u))
+        s_ = ckt.shape[0]
+        if tables:
+            from repro.core.mh import build_doc_tables, build_word_tables
+            dtab = build_doc_tables(cdk, alpha)   # per-iteration, invariant
 
-        def round_step(carry, u_r):
-            cdk, ckt, blk, ck_syn, ck_loc, z = carry
+        def round_step(carry, u_r, build=False):
+            cdk, ckt, blk, ck_syn, ck_loc, z, ttab = carry
             res_pre = ckt[0]
             res_blk = blk[0]
-            cdk, res_ckt, ck_loc, z = worker_round(
-                cdk, res_pre, res_blk, ck_loc, z, u_r, doc, woff, mask,
-                alpha, beta, vbeta, sampler=sampler)
+            if tables:
+                wtab = (build_word_tables(res_pre, beta) if build
+                        else ttab[0])
+                cdk, res_ckt, ck_loc, z = worker_round_tables(
+                    cdk, res_pre, res_blk, ck_loc, z, u_r, doc, woff,
+                    mask, alpha, beta, vbeta, wtab, dtab, sampler=sampler)
+            else:
+                cdk, res_ckt, ck_loc, z = worker_round(
+                    cdk, res_pre, res_blk, ck_loc, z, u_r, doc, woff,
+                    mask, alpha, beta, vbeta, sampler=sampler)
             if data_axis is not None:
                 # delta-psum reconciliation of the D replica copies of the
                 # resident block (DESIGN.md §8) — the only cross-replica
@@ -152,25 +261,42 @@ def make_shard_map_iteration(mesh: Mesh, axis: str, sampler_mode: str,
                 res_ckt = res_pre + jax.lax.psum(res_ckt - res_pre,
                                                  data_axis)
             # Algorithm 2 commit+request: ONLY the resident block travels —
-            # per-round traffic stays one [Vb, K] block per worker no
-            # matter how large S makes the total model.
+            # per-round traffic stays one [Vb, K] block per worker (plus
+            # its packed table under the iteration lifetime) no matter how
+            # large S makes the total model.
             res_ckt = jax.lax.ppermute(res_ckt, axis, perm)
             res_blk = jax.lax.ppermute(res_blk, axis, perm)
             ckt = jnp.concatenate([ckt[1:], res_ckt[None]], axis=0)
             blk = jnp.concatenate([blk[1:], res_blk[None]], axis=0)
-            ck_true = ck_syn + jax.lax.psum(ck_loc - ck_syn, ck_axes)
-            n_tok = jnp.maximum(ck_true.sum(), 1).astype(jnp.float32)
-            err = jax.lax.pmean(
-                jnp.abs(ck_loc - ck_true).sum().astype(jnp.float32),
-                ck_axes) / n_tok
+            if tables:
+                wtab = jax.lax.ppermute(wtab, axis, perm)
+                ttab = jnp.concatenate([ttab[1:], wtab[None]], axis=0)
+            err = jnp.float32(0.0)
+            if sync_ck or track_error:
+                ck_true = ck_syn + jax.lax.psum(ck_loc - ck_syn, ck_axes)
+            if track_error:
+                n_tok = jnp.maximum(ck_true.sum(), 1).astype(jnp.float32)
+                err = jax.lax.pmean(
+                    jnp.abs(ck_loc - ck_true).sum().astype(jnp.float32),
+                    ck_axes) / n_tok
             if sync_ck:
                 ck_loc = ck_true
                 ck_syn = ck_true
-            return (cdk, ckt, blk, ck_syn, ck_loc, z), err
+            return (cdk, ckt, blk, ck_syn, ck_loc, z, ttab), err
 
-        carry, errs = jax.lax.scan(
-            round_step, (cdk, ckt, blk, ck_syn, ck_loc, z), u)
-        cdk, ckt, blk, ck_syn, ck_loc, z = carry
+        ttab0 = (jnp.zeros((s_, 3) + ckt.shape[1:], jnp.int32) if tables
+                 else jnp.zeros((), jnp.int32))
+        carry = (cdk, ckt, blk, ck_syn, ck_loc, z, ttab0)
+        if tables:
+            # first S rounds build each block's table at its first
+            # residency; the rest reuse the traveling payloads.
+            carry, errs_b = jax.lax.scan(
+                partial(round_step, build=True), carry, u[:s_])
+            carry, errs_r = jax.lax.scan(round_step, carry, u[s_:])
+            errs = jnp.concatenate([errs_b, errs_r])
+        else:
+            carry, errs = jax.lax.scan(round_step, carry, u)
+        cdk, ckt, blk, ck_syn, ck_loc, z = carry[:6]
         return (cdk[None], ckt[None], blk[None], ck_syn, ck_loc[None],
                 z[None], errs)
 
@@ -179,4 +305,4 @@ def make_shard_map_iteration(mesh: Mesh, axis: str, sampler_mode: str,
         per_device, mesh=mesh,
         in_specs=(w, w, w, P(), w, w, w, w, w, w, P(), P(), P()),
         out_specs=(w, w, w, P(), w, w, P()),
-        check_vma=False))
+        check_vma=False), donate_argnums=(0, 1, 2, 3, 4, 5))

@@ -17,6 +17,15 @@ register a factory with :func:`register_sampler` and select it via
 ``scan``/``scan_eq1`` serial sweeps, the word-frozen ``batched`` sweep
 and its ``pallas`` kernel form, and the O(1) alias-table MH pair
 ``mh``/``mh_pallas`` (DESIGN.md §9).
+
+A second registry holds the *table-aware* forms of the samplers whose
+proposal tables can outlive a round (DESIGN.md §10): same signature plus
+two trailing packed-table args ``(word_packed [3, Vb, K], doc_packed
+[3, D_loc, K])``.  The engine selects them when running with
+``table_lifetime="iteration"`` — the traveling-table schedule where word
+tables rotate with their block and doc tables are built once per
+iteration.  Only the MH family is table-capable: the exact samplers have
+no proposal tables to amortize.
 """
 from __future__ import annotations
 
@@ -92,6 +101,53 @@ def _mh_pallas_sampler():
     return sweep_block_mh_pallas
 
 
+# ---------------------------------------------------------------------------
+# Table-aware samplers (iteration table lifetime, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+# fn(cdk, ckt_block, ck, doc, woff, z, mask, u, alpha, beta, vbeta,
+#    word_packed, doc_packed) -> (cdk, ckt_block, ck, z_new)
+_TABLE_SAMPLERS: Dict[str, Callable[[], Callable]] = {}
+
+
+def register_table_sampler(name: str):
+    """Decorator registering a table-aware sampler factory under ``name``
+    (the same name as its round-lifetime form in the main registry)."""
+    def deco(factory: Callable[[], Callable]):
+        _TABLE_SAMPLERS[name] = factory
+        return factory
+    return deco
+
+
+def resolve_table_sampler(mode: str) -> Callable:
+    """Instantiate the table-aware sampler registered under ``mode``."""
+    try:
+        factory = _TABLE_SAMPLERS[mode]
+    except KeyError:
+        raise ValueError(
+            f"sampler mode {mode!r} has no table-aware form — "
+            f"table_lifetime='iteration' supports: "
+            f"{sorted(_TABLE_SAMPLERS)}") from None
+    return factory()
+
+
+def table_capable(mode: str) -> bool:
+    """Whether ``mode`` supports the iteration table lifetime."""
+    return mode in _TABLE_SAMPLERS
+
+
+@register_table_sampler("mh")
+def _mh_table_sampler():
+    from repro.core.mh import sweep_block_mh_tables
+    return sweep_block_mh_tables
+
+
+@register_table_sampler("mh_pallas")
+def _mh_pallas_table_sampler():
+    from repro.kernels.ops import sweep_block_mh_pallas_tables
+    return sweep_block_mh_pallas_tables
+
+
 def worker_round(cdk, ckt_blk, block_id, ck_loc, z_all, u_r,
                  doc, woff, mask, alpha, beta, vbeta, *, sampler):
     """One worker, one round: sample the token group of the resident block.
@@ -107,5 +163,24 @@ def worker_round(cdk, ckt_blk, block_id, ck_loc, z_all, u_r,
     mk = mask[block_id]
     cdk, ckt_blk, ck_loc, z_new = sampler(
         cdk, ckt_blk, ck_loc, d, t, zz, mk, u_r, alpha, beta, vbeta)
+    z_all = z_all.at[block_id].set(z_new)
+    return cdk, ckt_blk, ck_loc, z_all
+
+
+def worker_round_tables(cdk, ckt_blk, block_id, ck_loc, z_all, u_r,
+                        doc, woff, mask, alpha, beta, vbeta,
+                        word_packed, doc_packed, *, sampler):
+    """:func:`worker_round` for a table-aware sampler: the resident
+    block's traveling word table (packed, possibly rounds old) and the
+    worker's per-iteration doc table ride along to the sampler.  The
+    backends own the tables' lifecycle — building at first residency,
+    rotating with the block — exactly as they own the block rotation."""
+    d = doc[block_id]
+    t = woff[block_id]
+    zz = z_all[block_id]
+    mk = mask[block_id]
+    cdk, ckt_blk, ck_loc, z_new = sampler(
+        cdk, ckt_blk, ck_loc, d, t, zz, mk, u_r, alpha, beta, vbeta,
+        word_packed, doc_packed)
     z_all = z_all.at[block_id].set(z_new)
     return cdk, ckt_blk, ck_loc, z_all

@@ -9,9 +9,12 @@ that travels in the per-round rotation; slots ``1..S-1`` are *parked*
 non-resident blocks live outside worker RAM).
 
 Nothing in this layout is sampler-specific: the alias tables of the
-``mh`` backend (DESIGN.md §9) are derived state, built per resident
-block inside the sampler at round start, so the pytree carries no table
-arrays and checkpoints are sampler-agnostic.
+``mh`` backend (DESIGN.md §9) are derived state — built inside the
+sampler at round start under ``table_lifetime="round"``, or built and
+rotated by the backends as iteration-local payloads under the
+traveling-table schedule (DESIGN.md §10, where every table a round
+reads was built earlier in the SAME iteration) — so the pytree carries
+no table arrays and checkpoints are sampler-agnostic either way.
 
 Hybrid data×model parallelism (DESIGN.md §8) adds ``D`` data replicas:
 every per-worker array keeps ONE leading axis of length ``R = D·M``

@@ -33,6 +33,16 @@ externally supplied uniforms through the same jitted kernel and the
 device MH chain replays against it draw-for-draw — the replayability
 anchor that lets the MH backend's *statistical* validation
 (`tests/test_mh_stats.py`) rest on a bit-exact structural base.
+
+``table_lifetime="iteration"`` mirrors the engine's traveling-table
+schedule (DESIGN.md §10) in serial form: at iteration start the
+scheduler builds every worker's doc table from its current ``cdk``; a
+block's word table is built exactly once per iteration — at the block's
+first residency, from the same frozen round-start copy every replica
+samples — and is then handed to every later (worker, round) task that
+touches the block, the serial transcript of the packed table riding the
+engine's rotation collective.  Same jitted builder, same frozen inputs,
+so the engine replays draw-for-draw against this schedule too.
 """
 from __future__ import annotations
 
@@ -114,7 +124,7 @@ class HostWorker:
 
     def run_round_frozen(self, block_id: int, ckt_block: np.ndarray,
                          ck_frozen, u_round, alpha, beta, vbeta,
-                         sampler_fn=None):
+                         sampler_fn=None, tables=None):
         """Engine-identical round against CALLER-OWNED frozen state: jitted
         block sampler on the full padded token slice, both the block copy
         and ``C_k`` frozen at the round boundary.  Returns the worker's
@@ -124,14 +134,18 @@ class HostWorker:
         ``sampler_fn`` is any registry sampler (``rounds.resolve_sampler``)
         — the exact-scan oracle by default; with the ``mh`` sampler this
         worker replays the device MH chain draw-for-draw, since the same
-        jitted kernel consumes the same externally supplied uniforms."""
+        jitted kernel consumes the same externally supplied uniforms.
+        ``tables`` — a ``(word_packed, doc_packed)`` pair for the
+        table-aware samplers (``rounds.resolve_table_sampler``): the
+        scheduler owns the traveling word table and this worker's
+        per-iteration doc table (DESIGN.md §10)."""
         import jax.numpy as jnp
 
         from repro.core.sampler import sweep_block_scan
 
         if sampler_fn is None:
             sampler_fn = sweep_block_scan
-        out = sampler_fn(
+        args = (
             jnp.asarray(self.cdk), jnp.asarray(ckt_block),
             jnp.asarray(ck_frozen),
             jnp.asarray(self.index.doc[block_id]),
@@ -140,6 +154,9 @@ class HostWorker:
             jnp.asarray(self.index.mask[block_id]),
             jnp.asarray(u_round), alpha,
             jnp.float32(beta), jnp.float32(vbeta))
+        if tables is not None:
+            args += (jnp.asarray(tables[0]), jnp.asarray(tables[1]))
+        out = sampler_fn(*args)
         self.cdk[...] = np.asarray(out[0])
         self.z[block_id] = np.asarray(out[3])
         return np.asarray(out[1]), np.asarray(out[2]) - ck_frozen
@@ -180,7 +197,8 @@ class HostModelParallelLDA:
     def __init__(self, corpus: Corpus, num_topics: int, num_workers: int,
                  alpha: float = 0.1, beta: float = 0.01, seed: int = 0,
                  blocks_per_worker: int = 1, sampler: str = "numpy",
-                 ck_sync: str = "eager", data_parallel: int = 1):
+                 ck_sync: str = "eager", data_parallel: int = 1,
+                 table_lifetime: str | None = None):
         if ck_sync not in ("eager", "round"):
             raise ValueError(f"unknown ck_sync {ck_sync!r}")
         if ck_sync == "round" and sampler == "numpy":
@@ -228,9 +246,37 @@ class HostModelParallelLDA:
         # so e.g. an "mh" oracle run consumes the same uniforms through
         # the same jitted kernel — device MH replays against it
         # draw-for-draw.
+        from repro.core.engine.rounds import table_capable
+        if table_lifetime is None:
+            # mirror the engine facade's default (MH family -> iteration)
+            # where the oracle can honor it; the eager-sync flavour has no
+            # frozen round-start copies to build traveling tables from, so
+            # it keeps the per-round schedule rather than raising on a
+            # value the caller never chose.
+            table_lifetime = ("iteration"
+                              if sampler != "numpy" and table_capable(sampler)
+                              and ck_sync == "round"
+                              else "round")
+        if table_lifetime not in ("round", "iteration"):
+            raise ValueError(
+                f"unknown table_lifetime {table_lifetime!r}")
+        if table_lifetime == "iteration":
+            if sampler == "numpy" or not table_capable(sampler):
+                raise ValueError(
+                    "table_lifetime='iteration' needs a table-capable "
+                    f"registry sampler (the MH family), got {sampler!r}")
+            if ck_sync != "round":
+                raise ValueError(
+                    "table_lifetime='iteration' needs ck_sync='round': "
+                    "traveling tables are built from frozen round-start "
+                    "block copies")
+        self.table_lifetime = table_lifetime
         if sampler != "numpy":
-            from repro.core.engine.rounds import resolve_sampler
-            self._sampler_fn = resolve_sampler(sampler)
+            from repro.core.engine.rounds import (resolve_sampler,
+                                                  resolve_table_sampler)
+            self._sampler_fn = (resolve_table_sampler(sampler)
+                                if table_lifetime == "iteration"
+                                else resolve_sampler(sampler))
         else:
             self._sampler_fn = None
         cap = common_block_capacity((s.word for s in shards),
@@ -263,6 +309,21 @@ class HostModelParallelLDA:
             # engine-identical uniform stream: [rounds, grid rows, capacity]
             u = self.rng.random((rounds, self.num_shards, self.capacity),
                                 np.float32)
+        travel = self.table_lifetime == "iteration"
+        if travel:
+            # per-iteration schedule (DESIGN.md §10): doc tables from
+            # iteration-start cdk now; word tables lazily at each block's
+            # first residency (from the frozen round-start copy shared by
+            # every replica) — the same jitted builder the engine runs, so
+            # the serial transcript matches the device tables bit-for-bit.
+            import jax.numpy as jnp
+
+            from repro.core.mh import build_doc_tables, build_word_tables
+            alpha_j = jnp.asarray(self.alpha)
+            doc_tabs = [np.asarray(build_doc_tables(jnp.asarray(w.cdk),
+                                                    alpha_j))
+                        for w in self.workers]
+            word_tabs: Dict[int, np.ndarray] = {}
         for r in range(rounds):
             # scheduler: dispatch tasks, then rotate (Algorithm 1)
             if self.ck_sync == "round":
@@ -284,10 +345,18 @@ class HostModelParallelLDA:
                                 blk_id).astype(np.int32)
                             blk_delta[blk_id] = np.zeros_like(
                                 blk_frozen[blk_id])
+                        tables = None
+                        if travel:
+                            if blk_id not in word_tabs:   # first residency
+                                word_tabs[blk_id] = np.asarray(
+                                    build_word_tables(
+                                        jnp.asarray(blk_frozen[blk_id]),
+                                        jnp.float32(self.beta)))
+                            tables = (word_tabs[blk_id], doc_tabs[g])
                         new_blk, d = self.workers[g].run_round_frozen(
                             blk_id, blk_frozen[blk_id], ck_frozen,
                             u[r, g], self.alpha, self.beta, self.vbeta,
-                            sampler_fn=self._sampler_fn)
+                            sampler_fn=self._sampler_fn, tables=tables)
                         blk_delta[blk_id] += new_blk - blk_frozen[blk_id]
                         delta += d
                     else:

@@ -21,8 +21,10 @@ even though the proposal tables are stale (built from round-start counts
 `core/alias.py` (the acceptance evaluates q from that same grid, so the
 quantization shifts only the proposal, never the target).  Per-token
 cost is O(1) amortized: the draw is two table lookups, the acceptance a
-handful of scalar count gathers; the O((Vb + D_loc)·K) table build
-happens once per block per round and is shared by every token.
+handful of scalar count gathers; the O((Vb + D_loc)·K) table build is
+shared by every token that samples against it, and HOW LONG a table is
+shared is the ``table_lifetime`` schedule (see below) — once per block
+per round originally, once per iteration under traveling tables.
 
 Determinism: every decision (cell pick, alias resolve, accept) compares
 values produced by single IEEE ops on integer-derived operands — the
@@ -43,6 +45,23 @@ deltas fold in exactly at round end.  Draws are therefore
 *distribution-equal* but not trajectory-equal to the exact chain —
 validated statistically (`tests/test_mh_stats.py`) instead of bitwise.
 
+Table lifetime (DESIGN.md §10): the acceptance ratio evaluates the
+*target* from the live (round-start frozen) counts and the *proposal*
+density from the table's own ``W`` grid, so ANY table with full support
+keeps the chain exact — tables may be arbitrarily stale.  Two build
+schedules exploit this:
+
+* ``round`` — :func:`sweep_block_mh` builds word + doc tables from the
+  round-start counts on every call (the original schedule, O((Vb +
+  D_loc)·K) per block per round);
+* ``iteration`` — the engine builds each block's word table once per
+  iteration (at the block's first residency) and the doc tables once per
+  iteration (from iteration-start ``cdk``), then feeds them to
+  :func:`sweep_block_mh_tables` for every subsequent round.  Word tables
+  travel the ring with their block in the packed ``core/alias.py``
+  layout; the per-iteration build cost drops from ``B = S·M`` builds to
+  ``S`` word builds + 1 doc build per worker.
+
 Randomness: the engine supplies ONE external uniform per token per round.
 :func:`uniform_streams` expands it into the ``4·num_cycles`` sub-draws a
 token's MH cycle consumes via a splitmix32 hash of the uniform's IEEE
@@ -60,7 +79,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.alias import (alias_resolve, build_alias_tables,
-                              split_cell_uniform)
+                              pack_tables, split_cell_uniform,
+                              unpack_tables)
 
 # MH proposal cycles per token per round (each cycle = one word proposal +
 # one doc proposal, LightLDA's default depth).
@@ -165,6 +185,30 @@ def block_proposal_tables(cdk: jax.Array, ckt_block: jax.Array,
     return word_table, doc_table
 
 
+@jax.jit
+def build_word_tables(ckt_block: jax.Array, beta) -> jax.Array:
+    """One block's word-proposal tables (``q_w ∝ Ĉ_k^t + β``) in the
+    packed rotatable layout: [Vb, K] counts -> [3, Vb, K] int32.
+
+    Per-row bits are identical to the rows :func:`block_proposal_tables`
+    builds — the Vose pairing is row-independent, so splitting the word
+    rows out of the concatenated build changes nothing — which is what
+    lets the per-iteration schedule coexist with the per-round one."""
+    vb, k = ckt_block.shape
+    prior = jnp.broadcast_to(jnp.asarray(beta, jnp.float32), (vb, k))
+    cut, alias_t, _, w = build_alias_tables(ckt_block, prior)
+    return pack_tables(cut, alias_t, w)
+
+
+@jax.jit
+def build_doc_tables(cdk: jax.Array, alpha: jax.Array) -> jax.Array:
+    """One worker's doc-proposal tables (``q_d ∝ Ĉ_d^k + α_k``), packed:
+    [D_loc, K] counts -> [3, D_loc, K] int32."""
+    cut, alias_t, _, w = build_alias_tables(
+        cdk, jnp.broadcast_to(alpha, cdk.shape))
+    return pack_tables(cut, alias_t, w)
+
+
 def _mh_step(z_cur, z0, d, t, mask, u_draw, u_acc, row, table,
              cdk_f, ckt_f, ck_f, alpha, beta, vbeta):
     """One MH proposal step, vectorized over the token axis.
@@ -192,28 +236,18 @@ def _mh_step(z_cur, z0, d, t, mask, u_draw, u_acc, row, table,
 
 
 # ---------------------------------------------------------------------------
-# Engine-facing block sampler
+# Engine-facing block samplers
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("num_cycles",))
-def sweep_block_mh(cdk: jax.Array, ckt_block: jax.Array, ck: jax.Array,
-                   doc: jax.Array, word_off: jax.Array, z: jax.Array,
-                   mask: jax.Array, u: jax.Array,
-                   alpha: jax.Array, beta: jax.Array, vbeta: jax.Array,
-                   num_cycles: int = DEFAULT_MH_CYCLES
-                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Alias-table MH sweep over one block; registry signature/semantics
-    of ``sweep_block_batched`` (frozen per round, deltas folded exactly).
-
-    Per round: O((Vb + D_loc)·K) to build the word/doc alias tables, then
-    O(num_cycles) per token — table lookups and scalar count gathers only,
-    never a [T, K] mass materialization.
-    """
+def _mh_sweep_core(cdk, ckt_block, ck, doc, word_off, z, mask, u,
+                   alpha, beta, vbeta, word_table, doc_table, num_cycles):
+    """Shared sweep body: run the MH cycles against the given proposal
+    tables (fresh or stale — the acceptance corrects either) and fold the
+    count deltas exactly.  The target terms always come from the live
+    round-start counts passed in, never from the tables."""
     ckt_f = ckt_block.astype(jnp.float32)
     cdk_f = cdk.astype(jnp.float32)
     ck_f = ck.astype(jnp.float32)
-    word_table, doc_table = block_proposal_tables(cdk, ckt_block, alpha,
-                                                  beta)
     streams = uniform_streams(u, 4 * num_cycles)
 
     z_cur = z
@@ -234,3 +268,51 @@ def sweep_block_mh(cdk: jax.Array, ckt_block: jax.Array, ck: jax.Array,
                          .at[word_off, z_new].add(delta)
     ck = ck.at[z].add(-delta).at[z_new].add(delta)
     return cdk, ckt_block, ck, z_new
+
+
+@partial(jax.jit, static_argnames=("num_cycles",))
+def sweep_block_mh(cdk: jax.Array, ckt_block: jax.Array, ck: jax.Array,
+                   doc: jax.Array, word_off: jax.Array, z: jax.Array,
+                   mask: jax.Array, u: jax.Array,
+                   alpha: jax.Array, beta: jax.Array, vbeta: jax.Array,
+                   num_cycles: int = DEFAULT_MH_CYCLES
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Alias-table MH sweep over one block; registry signature/semantics
+    of ``sweep_block_batched`` (frozen per round, deltas folded exactly).
+    Round table lifetime: builds fresh word + doc tables on every call.
+
+    Per round: O((Vb + D_loc)·K) to build the word/doc alias tables, then
+    O(num_cycles) per token — table lookups and scalar count gathers only,
+    never a [T, K] mass materialization.
+    """
+    word_table, doc_table = block_proposal_tables(cdk, ckt_block, alpha,
+                                                  beta)
+    return _mh_sweep_core(cdk, ckt_block, ck, doc, word_off, z, mask, u,
+                          alpha, beta, vbeta, word_table, doc_table,
+                          num_cycles)
+
+
+@partial(jax.jit, static_argnames=("num_cycles",))
+def sweep_block_mh_tables(cdk: jax.Array, ckt_block: jax.Array,
+                          ck: jax.Array, doc: jax.Array,
+                          word_off: jax.Array, z: jax.Array,
+                          mask: jax.Array, u: jax.Array,
+                          alpha: jax.Array, beta: jax.Array,
+                          vbeta: jax.Array, word_packed: jax.Array,
+                          doc_packed: jax.Array,
+                          num_cycles: int = DEFAULT_MH_CYCLES
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                     jax.Array]:
+    """Iteration table lifetime: MH sweep against CALLER-OWNED packed
+    proposal tables (``word_packed`` [3, Vb, K] built at the block's first
+    residency and rotated with it, ``doc_packed`` [3, D_loc, K] built from
+    iteration-start ``cdk``) — zero table-build cost on this path.
+
+    The tables may be up to ``B - 1`` rounds stale; the eq.-(1) acceptance
+    evaluates q from the tables' own ``W`` grid and the target from the
+    live round-start counts, so the chain's invariant distribution is the
+    same as :func:`sweep_block_mh`'s (DESIGN.md §10).
+    """
+    return _mh_sweep_core(cdk, ckt_block, ck, doc, word_off, z, mask, u,
+                          alpha, beta, vbeta, unpack_tables(word_packed),
+                          unpack_tables(doc_packed), num_cycles)

@@ -21,6 +21,9 @@ from repro.core.engine.rounds import resolve_sampler, worker_round
 from repro.core.engine.state import MPState
 
 # Pre-package spellings, kept for external callers (e.g. launch/lda_dryrun).
+# Behavioral note: since the table-lifetime PR the iteration functions
+# DONATE their state buffers (in-place count updates) — callers must not
+# read the argument state after the call; rebind it like the facade does.
 _iteration_vmap = iteration_vmap
 _iteration_shard_map = make_shard_map_iteration
 _make_sampler = resolve_sampler

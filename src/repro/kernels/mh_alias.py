@@ -1,28 +1,40 @@
-"""Pallas TPU kernel for the alias-table MH *word proposal* step.
+"""Pallas TPU kernel for the FULL alias-table MH cycle.
 
-The word proposal is the half of the LightLDA cycle that is word-shared:
-its alias table ``(cut, alias, U)`` and frozen ``C_k^t`` row depend only
-on the word, exactly like the eq.-(3) coefficient cache that
-``gibbs_conditional.py`` keeps in VMEM.  The kernel therefore uses the
-same word-grouped ``[G, Tg]`` token layout: each grid step loads TILE_G
-words' alias rows + frozen count rows HBM→VMEM **once** and hits them
-``Tg`` times — per-token work is a cell lookup and a handful of scalar
-gathers, never a K-wide mass or cumsum.
+One ``pallas_call`` runs every MH step of a token's round — word
+proposal, doc proposal, and both eq.-(1) acceptances, for all
+``num_cycles`` cycles — with the word *and* doc alias rows resident in
+VMEM.  Fusing the cycle removes the old kernel-boundary structure (a
+kernel per word step with a jnp doc step between kernels): ``z`` now
+lives in registers across all ``4·num_cycles`` sub-draws and the only
+HBM write is the final assignment tile.
+
+Layout: the word-proposal operands are word-shared — the alias row
+``(cut, alias, W)``, the capacity ``U``, and the frozen ``C_k^t`` row
+depend only on the word, exactly like the eq.-(3) coefficient cache that
+``gibbs_conditional.py`` keeps in VMEM — so the kernel uses the same
+word-grouped ``[G, Tg]`` token layout and loads them once per group.
+The doc-proposal operands are document-local, so their rows arrive
+per-token (``[G, Tg, K]``), as do the frozen ``C_d^k`` rows; fusing
+still wins for them because each row is loaded HBM→VMEM once per round
+instead of once per cycle.
 
 Scalar gathers are expressed as one-hot reductions over the topic lanes
 (`iota == idx` masks) — the TPU-native form of a dynamic lane index; the
-values selected are untouched f32 loads, and the draw/accept comparisons
-are the same division-free single-op forms as the jnp step in
-``core/mh.py`` (`_mh_step`), so the kernel is bit-identical to it —
-asserted by tests.
+values selected are untouched f32 loads, and every draw/accept
+comparison is the same division-free single-op form as the jnp steps in
+``core/mh.py`` (`_mh_step`), in the same association order, so the fused
+kernel is bit-identical to the jnp ``mh`` sweep — asserted by tests at
+both table lifetimes.
 
-The doc-proposal half of the cycle is document-local, not word-local —
-its table rows would have to be re-fetched per token, so it gains nothing
-from this tiling and stays in plain jnp (`ops.sweep_block_mh_pallas`
-composes the two).
+The sub-draw uniforms arrive pre-expanded (``core.mh.uniform_streams``
+stacked to ``[4·num_cycles, G, Tg]``): the splitmix32 expansion is
+token-lane-salted with the FLAT token index, which the wrapper knows and
+a tile does not, and shipping the streams keeps the kernel math
+identical to the jnp path by construction.
 
-K is padded to the 128-lane boundary by the wrapper; the REAL topic count
-rides in the consts row so cell indices never land on padded lanes.
+K is padded to the 128-lane boundary by the wrapper; the REAL topic
+count rides in the consts row so alias cell indices never land on padded
+lanes.
 """
 from __future__ import annotations
 
@@ -50,98 +62,138 @@ def _onehot_i32(values, idx):
     return jnp.sum(jnp.where(iota == idx[..., None], values, 0), axis=-1)
 
 
-def _mh_word_kernel(wcut_ref, walias_ref, wmass_ref, ucap_ref, ckt_ref,
-                    cdk_ref, zcur_ref, z0_ref, udraw_ref, uacc_ref,
-                    mask_ref, ck_ref, alpha_ref, const_ref, out_ref):
+def _mh_cycle_kernel(num_cycles,
+                     wcut_ref, walias_ref, wmass_ref, wucap_ref,
+                     dcut_ref, dalias_ref, dmass_ref, ducap_ref,
+                     ckt_ref, cdk_ref, z0_ref, streams_ref, mask_ref,
+                     ck_ref, alpha_ref, const_ref, out_ref):
     beta = const_ref[0, 0]
     vbeta = const_ref[0, 1]
-    k_real = const_ref[0, 2].astype(jnp.int32)   # unpadded topic count
+    kf = const_ref[0, 2]                   # f32(real K), exact for K < 2²⁴
+    k_real = kf.astype(jnp.int32)
     ck = ck_ref[0, :]                      # [K]
     alpha = alpha_ref[0, :]                # [K]
-    wcut = wcut_ref[...]                   # [G, K] alias cell cut masses
-    walias = walias_ref[...]               # [G, K] alias cell targets
-    wmass = wmass_ref[...]                 # [G, K] f32(W) proposal masses
-    ucap = ucap_ref[...]                   # [G, 1] per-row cell capacity
+    wcut = wcut_ref[...]                   # [G, K] word alias cut masses
+    walias = walias_ref[...]               # [G, K] word alias targets
+    wmass = wmass_ref[...]                 # [G, K] f32(W) word masses
+    wucap = wucap_ref[...]                 # [G, 1] word row capacity
+    dcut = dcut_ref[...]                   # [G, T, K] doc alias cut masses
+    dalias = dalias_ref[...]               # [G, T, K] doc alias targets
+    dmass = dmass_ref[...]                 # [G, T, K] f32(W) doc masses
+    ducap = ducap_ref[...]                 # [G, T] doc row capacity
     ckt = ckt_ref[...]                     # [G, K] frozen C_k^t rows
     cdk = cdk_ref[...]                     # [G, T, K] frozen C_d^k rows
-    z_cur = zcur_ref[...]                  # [G, T]
     z0 = z0_ref[...]                       # [G, T] round-start assignment
-    u_draw = udraw_ref[...]                # [G, T]
-    u_acc = uacc_ref[...]                  # [G, T]
-    mask = mask_ref[...]                   # [G, T] int32 validity
+    streams = streams_ref[...]             # [4·cycles, G, T] sub-draws
+    mask = mask_ref[...] != 0              # [G, T] validity
 
-    # ---- alias draw: one uniform -> (cell, within-cell threshold) -------
-    x = u_draw * k_real.astype(jnp.float32)
-    j = jnp.minimum(x.astype(jnp.int32), k_real - 1)          # [G, T]
-    frac = x - j.astype(jnp.float32)
-    cut_j = _onehot_f32(wcut[:, None, :], j)
-    alias_j = _onehot_i32(walias[:, None, :], j)
-    prop = jnp.where(frac * ucap < cut_j, j, alias_j)
-
-    # ---- exact eq.-(1) acceptance from frozen counts --------------------
     def target_terms(kk):
+        # exact eq.-(1) mass at topic kk from frozen counts, ¬dn
+        # self-exclusion as a rank-1 correction at z0 (core.mh._target_terms)
         excl = (kk == z0).astype(jnp.float32)
-        num = ((_onehot_f32(cdk, kk) - excl + _onehot_f32(
-            alpha[None, None, :], kk))
-            * (_onehot_f32(ckt[:, None, :], kk) - excl + beta))
+        num = ((_onehot_f32(cdk, kk) - excl
+                + _onehot_f32(alpha[None, None, :], kk))
+               * (_onehot_f32(ckt[:, None, :], kk) - excl + beta))
         den = _onehot_f32(ck[None, None, :], kk) - excl + vbeta
         return num, den
 
-    n_new, d_new = target_terms(prop)
-    n_old, d_old = target_terms(z_cur)
-    q_new = _onehot_f32(wmass[:, None, :], prop)
-    q_old = _onehot_f32(wmass[:, None, :], z_cur)
-    # division-free cross-multiplied accept test (same association order
-    # as core.mh._mh_step — bit-identity depends on it)
-    accept = (u_acc * n_old * d_new * q_new < n_new * d_old * q_old) \
-        & (mask != 0)
-    out_ref[...] = jnp.where(accept, prop, z_cur)
+    def draw(cut, alias, ucap, u_draw):
+        # one uniform -> (cell, within-cell threshold) -> resolved topic;
+        # cut/alias are [G, K] (word, cell gathered over lanes) or
+        # [G, T, K] (doc); ucap broadcasts [G, 1] or [G, T].
+        x = u_draw * kf
+        j = jnp.minimum(x.astype(jnp.int32), k_real - 1)       # [G, T]
+        frac = x - j.astype(jnp.float32)
+        if cut.ndim == 2:
+            cut_j = _onehot_f32(cut[:, None, :], j)
+            alias_j = _onehot_i32(alias[:, None, :], j)
+        else:
+            cut_j = _onehot_f32(cut, j)
+            alias_j = _onehot_i32(alias, j)
+        return jnp.where(frac * ucap < cut_j, j, alias_j)
+
+    def gather_mass(massv, kk):
+        if massv.ndim == 2:
+            return _onehot_f32(massv[:, None, :], kk)
+        return _onehot_f32(massv, kk)
+
+    z_cur = z0
+    for c in range(num_cycles):
+        for table, off in (((wcut, walias, wmass, wucap), 0),
+                           ((dcut, dalias, dmass, ducap), 2)):
+            cut, alias, massv, ucap = table
+            u_draw = streams[4 * c + off]
+            u_acc = streams[4 * c + off + 1]
+            prop = draw(cut, alias, ucap, u_draw)
+            n_new, d_new = target_terms(prop)
+            n_old, d_old = target_terms(z_cur)
+            q_new = gather_mass(massv, prop)
+            q_old = gather_mass(massv, z_cur)
+            # division-free cross-multiplied accept test (same association
+            # order as core.mh._mh_step — bit-identity depends on it)
+            accept = (u_acc * n_old * d_new * q_new
+                      < n_new * d_old * q_old) & mask
+            z_cur = jnp.where(accept, prop, z_cur)
+
+    out_ref[...] = z_cur
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k_real", "tile_g", "interpret"))
-def mh_word_call(wcut: jax.Array, walias: jax.Array, wmass: jax.Array,
-                 ucap: jax.Array, ckt_rows: jax.Array, cdk_rows: jax.Array,
-                 z_cur: jax.Array, z0: jax.Array,
-                 u_draw: jax.Array, u_acc: jax.Array, mask: jax.Array,
-                 ck: jax.Array, alpha: jax.Array, beta: float, vbeta: float,
-                 k_real: int, tile_g: int = TILE_G,
-                 interpret: bool = True) -> jax.Array:
+                   static_argnames=("k_real", "num_cycles", "tile_g",
+                                    "interpret"))
+def mh_cycle_call(wcut: jax.Array, walias: jax.Array, wmass: jax.Array,
+                  wucap: jax.Array, dcut: jax.Array, dalias: jax.Array,
+                  dmass: jax.Array, ducap: jax.Array,
+                  ckt_rows: jax.Array, cdk_rows: jax.Array,
+                  z0: jax.Array, streams: jax.Array, mask: jax.Array,
+                  ck: jax.Array, alpha: jax.Array, beta: float,
+                  vbeta: float, k_real: int,
+                  num_cycles: int, tile_g: int = TILE_G,
+                  interpret: bool = True) -> jax.Array:
     """Raw pallas_call wrapper (tile-aligned shapes; padding in ops.py).
 
     Args:
       wcut/walias/wmass: [G, K] per-word alias table rows (f32/int32/f32).
-      ucap:         [G, 1] f32 per-word cell capacity ``U``.
+      wucap:        [G, 1] f32 per-word cell capacity ``U``.
+      dcut/dalias/dmass: [G, Tg, K] per-token DOC alias table rows.
+      ducap:        [G, Tg] f32 per-token doc cell capacity.
       ckt_rows:     [G, K] f32 frozen word-topic rows.
       cdk_rows:     [G, Tg, K] f32 frozen doc-topic rows per token; the
                     token tile Tg is taken from this shape.
-      z_cur/z0/u_draw/u_acc/mask: [G, Tg] per-token state.
+      z0:           [G, Tg] round-start assignments (the chain starts and
+                    self-excludes here).
+      streams:      [4·num_cycles, G, Tg] pre-expanded sub-draw uniforms.
+      mask:         [G, Tg] int32 validity.
       ck/alpha:     [K] f32.
       k_real:       unpadded K — alias cells only index real topics.
     Returns:
-      z after the word MH step, [G, Tg] int32.
+      z after the full fused MH cycle, [G, Tg] int32.
     """
     g, tg, k = cdk_rows.shape
     assert g % tile_g == 0 and k % 128 == 0, (g, k)
+    nstream = 4 * num_cycles
     grid = (g // tile_g,)
     consts = jnp.array([[beta, vbeta, float(k_real), 0.0]], jnp.float32)
     row = lambda i: (i, 0)
     row3 = lambda i: (i, 0, 0)
+    lead3 = lambda i: (0, i, 0)
     rep = lambda i: (0, 0)
     return pl.pallas_call(
-        _mh_word_kernel,
+        functools.partial(_mh_cycle_kernel, num_cycles),
         grid=grid,
         in_specs=[
             pl.BlockSpec((tile_g, k), row),            # wcut
             pl.BlockSpec((tile_g, k), row),            # walias
             pl.BlockSpec((tile_g, k), row),            # wmass
-            pl.BlockSpec((tile_g, 1), row),            # ucap
+            pl.BlockSpec((tile_g, 1), row),            # wucap
+            pl.BlockSpec((tile_g, tg, k), row3),       # dcut
+            pl.BlockSpec((tile_g, tg, k), row3),       # dalias
+            pl.BlockSpec((tile_g, tg, k), row3),       # dmass
+            pl.BlockSpec((tile_g, tg), row),           # ducap
             pl.BlockSpec((tile_g, k), row),            # ckt_rows
             pl.BlockSpec((tile_g, tg, k), row3),       # cdk_rows
-            pl.BlockSpec((tile_g, tg), row),           # z_cur
             pl.BlockSpec((tile_g, tg), row),           # z0
-            pl.BlockSpec((tile_g, tg), row),           # u_draw
-            pl.BlockSpec((tile_g, tg), row),           # u_acc
+            pl.BlockSpec((nstream, tile_g, tg), lead3),  # streams
             pl.BlockSpec((tile_g, tg), row),           # mask
             pl.BlockSpec((1, k), rep),                 # ck (broadcast)
             pl.BlockSpec((1, k), rep),                 # alpha (broadcast)
@@ -151,9 +203,10 @@ def mh_word_call(wcut: jax.Array, walias: jax.Array, wmass: jax.Array,
         out_shape=jax.ShapeDtypeStruct((g, tg), jnp.int32),
         interpret=interpret,
     )(wcut.astype(jnp.float32), walias.astype(jnp.int32),
-      wmass.astype(jnp.float32), ucap.astype(jnp.float32),
+      wmass.astype(jnp.float32), wucap.astype(jnp.float32),
+      dcut.astype(jnp.float32), dalias.astype(jnp.int32),
+      dmass.astype(jnp.float32), ducap.astype(jnp.float32),
       ckt_rows.astype(jnp.float32), cdk_rows.astype(jnp.float32),
-      z_cur.astype(jnp.int32), z0.astype(jnp.int32),
-      u_draw.astype(jnp.float32), u_acc.astype(jnp.float32),
+      z0.astype(jnp.int32), streams.astype(jnp.float32),
       mask.astype(jnp.int32), ck[None, :].astype(jnp.float32),
       alpha[None, :].astype(jnp.float32), consts)

@@ -1,8 +1,11 @@
-"""Jitted public wrappers around the Gibbs-conditional Pallas kernel.
+"""Jitted public wrappers around the Pallas kernels.
 
 Handles padding to tile boundaries, platform selection (interpret mode off
-TPU), the word-grouped token layout, and the engine-facing
-``sweep_block_pallas`` sampler that plugs into ``core.model_parallel``.
+TPU), the word-grouped token layout, and the engine-facing samplers that
+plug into ``core.model_parallel``: ``sweep_block_pallas`` (exact
+Gibbs-conditional kernel) and the fused alias-MH cycle pair
+``sweep_block_mh_pallas`` / ``sweep_block_mh_pallas_tables`` (round vs
+iteration table lifetime, DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -13,11 +16,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mh import (DEFAULT_MH_CYCLES, _mh_step,
-                           block_proposal_tables, uniform_streams)
+from repro.core.alias import unpack_tables
+from repro.core.mh import (DEFAULT_MH_CYCLES, block_proposal_tables,
+                           uniform_streams)
 from repro.kernels.gibbs_conditional import (TILE_G, TILE_T,
                                              gibbs_conditional_call)
-from repro.kernels.mh_alias import mh_word_call
+from repro.kernels.mh_alias import mh_cycle_call
 from repro.kernels.ref import gibbs_conditional_ref
 
 
@@ -126,71 +130,99 @@ def sweep_block_pallas(cdk, ckt_block, ck, doc, word_off, z, mask, u,
     return cdk, ckt_block, ck, z_new
 
 
-@functools.partial(jax.jit, static_argnames=("num_cycles", "interpret"))
-def sweep_block_mh_pallas(cdk, ckt_block, ck, doc, word_off, z, mask, u,
-                          alpha, beta, vbeta,
-                          num_cycles: int = DEFAULT_MH_CYCLES,
-                          interpret: bool | None = None):
-    """Engine-facing alias-MH sampler with the word-proposal half of each
-    cycle evaluated by the Pallas kernel (``kernels/mh_alias.py``) and the
-    document-local half in plain jnp — same signature/semantics as
-    ``core.mh.sweep_block_mh`` and bit-identical to it given the same
-    uniforms (asserted by tests), so the kernel slots into the engine
-    without changing the chain's distribution.
+def _mh_cycle_pallas_core(cdk, ckt_block, ck, doc, word_off, z, mask, u,
+                          alpha, beta, vbeta, word_table, doc_table,
+                          num_cycles, interpret):
+    """Shared fused-kernel body: pad/gather the per-token operand rows,
+    run the FULL MH cycle in one ``mh_cycle_call``, fold count deltas.
 
-    Token-per-group degenerate layout here (like ``sweep_block_pallas``):
-    the per-token row gathers materialize [T, K] operands, so this path
+    Token-per-group degenerate layout (like ``sweep_block_pallas``): the
+    per-token row gathers materialize [T, K] operands, so this path
     trades memory for exercising the kernel end-to-end — it is the
     VALIDATION route for the kernel math; ``mh`` remains the throughput
-    mode (never materializes [T, K]).  The word-grouped [G, Tg]
+    mode (never materializes [T, K]).  The word-grouped [G, Tg > 1]
     VMEM-reuse layout the kernel is designed around is exercised on
-    ``mh_word_call`` directly by tests.
+    ``mh_cycle_call`` directly by
+    ``tests/test_alias.py::test_mh_cycle_kernel_word_grouped_layout``
+    (multi-tile grid, bit-checked against the jnp cycle).
     """
-    if interpret is None:
-        interpret = not _on_tpu()
     t0 = z.shape[0]
     k0 = ck.shape[0]
     ckt_f = ckt_block.astype(jnp.float32)
     cdk_f = cdk.astype(jnp.float32)
     ck_f = ck.astype(jnp.float32)
-    # shared prologue with sweep_block_mh — bit-identity depends on it
-    (wcut, walias, wu, wmass), doc_table = block_proposal_tables(
-        cdk, ckt_block, alpha, beta)
+    wcut, walias, wu, wmass = word_table
+    dcut, dalias, du, dmass = doc_table
     streams = uniform_streams(u, 4 * num_cycles)
 
-    # per-token word rows, padded to kernel tiles (pads never drawn: the
-    # alias cell index is clamped to the REAL K inside the kernel)
+    # per-token rows, padded to kernel tiles (pads never drawn: the alias
+    # cell index is clamped to the REAL K inside the kernel)
     tile_g = 128
     pad2 = lambda x: _pad_to(_pad_to(x, 1, 128), 0, tile_g)
-    wcut_p = pad2(wcut[word_off])
-    walias_p = pad2(walias[word_off])
-    wmass_p = pad2(wmass[word_off].astype(jnp.float32))
-    ucap_p = _pad_to(wu[word_off], 0, tile_g)[:, None]
-    ckt_rows_p = pad2(ckt_f[word_off])
-    cdk_rows_p = _pad_to(_pad_to(cdk_f[doc], 1, 128)[:, None, :], 0, tile_g)
-    z0_p = _pad_to(z, 0, tile_g)[:, None]
-    mask_p = _pad_to(mask.astype(jnp.int32), 0, tile_g)[:, None]
-    ck_p = _pad_to(ck_f, 0, 128)
-    alpha_p = _pad_to(alpha.astype(jnp.float32), 0, 128)
+    pad3 = lambda x: _pad_to(_pad_to(x, 1, 128)[:, None, :], 0, tile_g)
+    z_new = mh_cycle_call(
+        pad2(wcut[word_off]), pad2(walias[word_off]),
+        pad2(wmass[word_off].astype(jnp.float32)),
+        _pad_to(wu[word_off], 0, tile_g)[:, None],
+        pad3(dcut[doc]), pad3(dalias[doc]),
+        pad3(dmass[doc].astype(jnp.float32)),
+        _pad_to(du[doc], 0, tile_g)[:, None],
+        pad2(ckt_f[word_off]), pad3(cdk_f[doc]),
+        _pad_to(z, 0, tile_g)[:, None],
+        _pad_to(streams, 1, tile_g)[:, :, None],
+        _pad_to(mask.astype(jnp.int32), 0, tile_g)[:, None],
+        _pad_to(ck_f, 0, 128), _pad_to(alpha.astype(jnp.float32), 0, 128),
+        beta, vbeta, k_real=k0, num_cycles=num_cycles,
+        tile_g=tile_g, interpret=interpret)[:t0, 0]
 
-    z_cur = z
-    for c in range(num_cycles):
-        z_cur = mh_word_call(
-            wcut_p, walias_p, wmass_p, ucap_p, ckt_rows_p, cdk_rows_p,
-            _pad_to(z_cur, 0, tile_g)[:, None], z0_p,
-            _pad_to(streams[4 * c], 0, tile_g)[:, None],
-            _pad_to(streams[4 * c + 1], 0, tile_g)[:, None],
-            mask_p, ck_p, alpha_p, beta, vbeta, k_real=k0,
-            tile_g=tile_g, interpret=interpret)[:t0, 0]
-        z_cur = _mh_step(
-            z_cur, z, doc, word_off, mask, streams[4 * c + 2],
-            streams[4 * c + 3], doc, doc_table,
-            cdk_f, ckt_f, ck_f, alpha, beta, vbeta)
-
-    z_new = jnp.where(mask, z_cur, z)
+    z_new = jnp.where(mask, z_new, z)
     delta = mask.astype(jnp.int32)
     cdk = cdk.at[doc, z].add(-delta).at[doc, z_new].add(delta)
     ckt_block = ckt_block.at[word_off, z].add(-delta) \
                          .at[word_off, z_new].add(delta)
     ck = ck.at[z].add(-delta).at[z_new].add(delta)
     return cdk, ckt_block, ck, z_new
+
+
+@functools.partial(jax.jit, static_argnames=("num_cycles", "interpret"))
+def sweep_block_mh_pallas(cdk, ckt_block, ck, doc, word_off, z, mask, u,
+                          alpha, beta, vbeta,
+                          num_cycles: int = DEFAULT_MH_CYCLES,
+                          interpret: bool | None = None):
+    """Engine-facing alias-MH sampler with the WHOLE cycle — word
+    proposal, doc proposal, both acceptances, all ``num_cycles`` times —
+    fused into one Pallas kernel (``kernels/mh_alias.py``).  Same
+    signature/semantics as ``core.mh.sweep_block_mh`` (round table
+    lifetime: tables built fresh per call, shared prologue) and
+    bit-identical to it given the same uniforms (asserted by tests), so
+    the kernel slots into the engine without changing the chain's
+    distribution.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    word_table, doc_table = block_proposal_tables(cdk, ckt_block, alpha,
+                                                  beta)
+    return _mh_cycle_pallas_core(cdk, ckt_block, ck, doc, word_off, z,
+                                 mask, u, alpha, beta, vbeta, word_table,
+                                 doc_table, num_cycles, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("num_cycles", "interpret"))
+def sweep_block_mh_pallas_tables(cdk, ckt_block, ck, doc, word_off, z,
+                                 mask, u, alpha, beta, vbeta,
+                                 word_packed, doc_packed,
+                                 num_cycles: int = DEFAULT_MH_CYCLES,
+                                 interpret: bool | None = None):
+    """Table-aware form of :func:`sweep_block_mh_pallas` (iteration table
+    lifetime, DESIGN.md §10): consumes the engine's packed traveling word
+    table and per-iteration doc table instead of building its own — the
+    fused-cycle analogue of ``core.mh.sweep_block_mh_tables`` and
+    bit-identical to it given the same uniforms and tables.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _mh_cycle_pallas_core(cdk, ckt_block, ck, doc, word_off, z,
+                                 mask, u, alpha, beta, vbeta,
+                                 unpack_tables(word_packed),
+                                 unpack_tables(doc_packed), num_cycles,
+                                 interpret)

@@ -31,6 +31,13 @@ def main() -> None:
                     help="per-block sampler: exact scan, word-frozen "
                          "batched/pallas, or O(1) alias-table MH "
                          "(DESIGN.md §9)")
+    ap.add_argument("--table-lifetime",
+                    choices=["auto", "round", "iteration"], default="auto",
+                    help="MH proposal-table build schedule (DESIGN.md "
+                         "§10): 'iteration' = traveling tables built once "
+                         "per iteration (MH default), 'round' = rebuild "
+                         "every round (the A/B baseline); 'auto' defers "
+                         "to the engine default (mp engine, MH samplers)")
     ap.add_argument("--docs", type=int, default=500)
     ap.add_argument("--vocab", type=int, default=2000)
     ap.add_argument("--topics", type=int, default=50)
@@ -55,11 +62,15 @@ def main() -> None:
     print(f"corpus: {corpus.num_tokens:,} tokens, V={args.vocab}, "
           f"K={args.topics}, model vars={args.vocab * args.topics:,}")
     if args.engine == "mp":
+        lifetime = (None if args.table_lifetime == "auto"
+                    else args.table_lifetime)
         lda = ModelParallelLDA(corpus, args.topics, args.workers,
                                alpha=args.alpha, beta=args.beta,
                                seed=args.seed, sampler_mode=args.sampler,
                                blocks_per_worker=args.blocks_per_worker,
-                               data_parallel=args.data_parallel)
+                               data_parallel=args.data_parallel,
+                               table_lifetime=lifetime)
+        print(f"table lifetime: {lda.table_lifetime}")
     else:
         lda = DataParallelLDA(corpus, args.topics, args.workers,
                               alpha=args.alpha, beta=args.beta,
@@ -68,9 +79,13 @@ def main() -> None:
     history = []
     t0 = time.time()
     for it in range(1, args.iters + 1):
+        t_it = time.perf_counter()
         lda.step()
+        iter_s = time.perf_counter() - t_it   # sampling only, no eval
         ll = lda.log_likelihood()
         rec = {"iteration": it, "log_likelihood": ll,
+               "iter_s": round(iter_s, 4),
+               "tokens_per_s": round(corpus.num_tokens / iter_s, 1),
                "elapsed_s": round(time.time() - t0, 2)}
         if args.engine == "mp":
             rec["delta_error"] = lda.delta_error()
@@ -80,7 +95,15 @@ def main() -> None:
         if it % max(args.iters // 10, 1) == 0 or it == 1:
             extra = (f"Δ={rec.get('delta_error', rec.get('staleness_error')):.5f}")
             print(f"iter {it:4d}  LL {ll:,.0f}  {extra}  "
+                  f"{rec['iter_s']:.3f}s/iter "
+                  f"{rec['tokens_per_s']:,.0f} tok/s  "
                   f"[{rec['elapsed_s']}s]", flush=True)
+    # steady-state throughput: median over post-warmup iterations (the
+    # first pays jit compilation)
+    if len(history) > 1:
+        import statistics
+        med = statistics.median(r["tokens_per_s"] for r in history[1:])
+        print(f"median throughput: {med:,.0f} tokens/s")
     score = topic_recovery_score(np.asarray(lda.gather_counts().ckt), phi)
     print(f"topic recovery score: {score:.3f}")
     if args.ckpt:

@@ -12,8 +12,12 @@ from repro.core.alias import (SCALE, alias_cell_masses, alias_draw_int_np,
                               alias_draw_np, alias_table_masses,
                               build_alias_int, build_alias_int_np,
                               build_alias_np, build_alias_tables,
-                              int_masses_np, split_cell_uniform)
-from repro.core.mh import (accept_ratio, sweep_block_mh, uniform_streams,
+                              int_masses_np, pack_tables, pack_tables_np,
+                              split_cell_uniform, unpack_tables,
+                              unpack_tables_np)
+from repro.core.mh import (accept_ratio, build_doc_tables,
+                           build_word_tables, sweep_block_mh,
+                           sweep_block_mh_tables, uniform_streams,
                            uniform_streams_np)
 
 
@@ -269,6 +273,54 @@ def test_mh_sweep_masked_tokens_are_noops():
     np.testing.assert_array_equal(np.asarray(out[3]), z)
 
 
+def test_packed_table_roundtrip_bit_exact():
+    """pack -> unpack is lossless for every plane, U is recomputed
+    bit-identically from the W plane, and the numpy mirror agrees."""
+    rng = np.random.default_rng(3)
+    counts = rng.integers(0, 50, (6, 16)).astype(np.int32)
+    prior = np.full((6, 16), 0.07, np.float32)
+    cut, alias, u_cap, w = build_alias_tables(jnp.asarray(counts),
+                                              jnp.asarray(prior))
+    packed = pack_tables(cut, alias, w)
+    assert packed.shape == (3, 6, 16) and packed.dtype == jnp.int32
+    cut2, alias2, u2, w2 = unpack_tables(packed)
+    np.testing.assert_array_equal(np.asarray(cut).view(np.int32),
+                                  np.asarray(cut2).view(np.int32))
+    np.testing.assert_array_equal(np.asarray(alias), np.asarray(alias2))
+    np.testing.assert_array_equal(np.asarray(u_cap).view(np.int32),
+                                  np.asarray(u2).view(np.int32))
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(w2))
+    packed_np = pack_tables_np(np.asarray(cut), np.asarray(alias),
+                               np.asarray(w))
+    np.testing.assert_array_equal(np.asarray(packed), packed_np)
+    for a, b in zip(unpack_tables_np(packed_np), (cut, alias, u_cap, w)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_tables_sweep_with_fresh_tables_equals_round_sweep():
+    """Row independence of the Vose pairing: word/doc tables built
+    separately (the per-iteration builders) are bit-identical to the
+    slices of the concatenated per-round build, so feeding FRESH packed
+    tables to ``sweep_block_mh_tables`` reproduces ``sweep_block_mh``
+    exactly — the staleness of the iteration lifetime is purely a matter
+    of WHEN the same builder ran."""
+    rng = np.random.default_rng(8)
+    doc, woff, z, cdk, ckt, ck = _block_state(rng, n=160, k=16)
+    n = doc.shape[0]
+    u = rng.random(n).astype(np.float32)
+    alpha = jnp.full(16, 0.1, jnp.float32)
+    args = (jnp.asarray(cdk), jnp.asarray(ckt), jnp.asarray(ck),
+            jnp.asarray(doc), jnp.asarray(woff), jnp.asarray(z),
+            jnp.ones(n, bool), jnp.asarray(u), alpha,
+            jnp.float32(0.01), jnp.float32(0.2))
+    wtab = build_word_tables(jnp.asarray(ckt), jnp.float32(0.01))
+    dtab = build_doc_tables(jnp.asarray(cdk), alpha)
+    out_round = sweep_block_mh(*args)
+    out_tables = sweep_block_mh_tables(*args, wtab, dtab)
+    for a, b in zip(out_round, out_tables):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_mh_pallas_equals_mh():
     """The Pallas word-proposal kernel composes to the same draws as the
     pure-jnp MH sweep, bit for bit, given the same uniforms."""
@@ -285,6 +337,114 @@ def test_mh_pallas_equals_mh():
             jnp.float32(0.01), jnp.float32(0.2))
     out_m = sweep_block_mh(*args)
     out_p = sweep_block_mh_pallas(*args)
+    for a, b in zip(out_m, out_p):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mh_cycle_kernel_word_grouped_layout():
+    """Direct ``mh_cycle_call`` coverage of the word-grouped [G, Tg>1]
+    layout the kernel is designed around (multi-token groups sharing one
+    word's alias/count rows, a grid of several tiles), referenced
+    against the jnp ``_mh_step`` cycle on the flattened tokens — the
+    engine only exercises the degenerate Tg=1 form, so the [G, Tg, K]
+    doc-row branches and [G, 1] capacity broadcasts are pinned here."""
+    from repro.core.mh import _mh_step, block_proposal_tables
+    from repro.kernels.mh_alias import mh_cycle_call
+
+    rng = np.random.default_rng(11)
+    k, vb, dloc, g, tg, tile_g = 24, 16, 12, 20, 4, 8
+    n = g * tg
+    gword = rng.integers(0, vb, g).astype(np.int32)    # one word per group
+    woff = np.repeat(gword, tg)                        # flat [N]
+    doc = rng.integers(0, dloc, n).astype(np.int32)
+    z = rng.integers(0, k, n).astype(np.int32)
+    cdk = np.zeros((dloc, k), np.int32)
+    ckt = np.zeros((vb, k), np.int32)
+    np.add.at(cdk, (doc, z), 1)
+    np.add.at(ckt, (woff, z), 1)
+    ck = ckt.sum(0).astype(np.int32)
+    mask = (rng.random(n) < 0.9).astype(np.int32)
+    u = rng.random(n).astype(np.float32)
+    alpha = jnp.full(k, 0.1, jnp.float32)
+    beta, vbeta = 0.01, 0.2
+
+    word_table, doc_table = block_proposal_tables(
+        jnp.asarray(cdk), jnp.asarray(ckt), alpha, beta)
+    streams = uniform_streams(jnp.asarray(u), 8)        # 2 cycles
+
+    # jnp reference on the flat token axis
+    ckt_f = jnp.asarray(ckt, jnp.float32)
+    cdk_f = jnp.asarray(cdk, jnp.float32)
+    ck_f = jnp.asarray(ck, jnp.float32)
+    z_ref = jnp.asarray(z)
+    for c in range(2):
+        z_ref = _mh_step(z_ref, jnp.asarray(z), jnp.asarray(doc),
+                         jnp.asarray(woff), jnp.asarray(mask, bool),
+                         streams[4 * c], streams[4 * c + 1],
+                         jnp.asarray(woff), word_table,
+                         cdk_f, ckt_f, ck_f, alpha, jnp.float32(beta),
+                         jnp.float32(vbeta))
+        z_ref = _mh_step(z_ref, jnp.asarray(z), jnp.asarray(doc),
+                         jnp.asarray(woff), jnp.asarray(mask, bool),
+                         streams[4 * c + 2], streams[4 * c + 3],
+                         jnp.asarray(doc), doc_table,
+                         cdk_f, ckt_f, ck_f, alpha, jnp.float32(beta),
+                         jnp.float32(vbeta))
+
+    # kernel operands in the grouped layout, padded to (tile_g, 128)
+    wcut, walias, wu, wmass = (np.asarray(t) for t in word_table)
+    dcut, dalias, du, dmass = (np.asarray(t) for t in doc_table)
+    gp = -g % tile_g
+    kp = -k % 128
+    pad_g2 = lambda x: np.pad(x, ((0, gp), (0, kp)))
+    pad_g3 = lambda x: np.pad(x.reshape(g, tg, -1),
+                              ((0, gp), (0, 0), (0, kp)))
+    pad_gt = lambda x: np.pad(x.reshape(g, tg), ((0, gp), (0, 0)))
+    out = mh_cycle_call(
+        jnp.asarray(pad_g2(wcut[gword])), jnp.asarray(pad_g2(walias[gword])),
+        jnp.asarray(pad_g2(wmass[gword].astype(np.float32))),
+        jnp.asarray(np.pad(wu[gword], (0, gp))[:, None]),
+        jnp.asarray(pad_g3(dcut[doc])), jnp.asarray(pad_g3(dalias[doc])),
+        jnp.asarray(pad_g3(dmass[doc].astype(np.float32))),
+        jnp.asarray(pad_gt(du[doc])),
+        jnp.asarray(pad_g2(np.asarray(ckt_f)[gword])),
+        jnp.asarray(pad_g3(np.asarray(cdk_f)[doc])),
+        jnp.asarray(pad_gt(z)),
+        jnp.asarray(np.pad(np.asarray(streams).reshape(8, g, tg),
+                           ((0, 0), (0, gp), (0, 0)))),
+        jnp.asarray(pad_gt(mask)),
+        jnp.asarray(np.pad(np.asarray(ck_f), (0, kp))),
+        jnp.asarray(np.pad(np.asarray(alpha), (0, kp))),
+        beta, vbeta, k_real=k, num_cycles=2, tile_g=tile_g,
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(out)[:g].reshape(-1),
+                                  np.asarray(z_ref))
+
+
+def test_mh_pallas_tables_equals_mh_tables():
+    """The fused Pallas cycle consumes external (possibly stale) packed
+    tables bit-identically to the jnp table sweep — here with genuinely
+    stale tables (built before perturbing the counts)."""
+    from repro.kernels.ops import sweep_block_mh_pallas_tables
+    rng = np.random.default_rng(9)
+    doc, woff, z, cdk, ckt, ck = _block_state(rng, n=200, k=24)
+    n = doc.shape[0]
+    alpha = jnp.full(24, 0.1, jnp.float32)
+    # stale tables: built from a DIFFERENT (earlier) count state
+    z_old = rng.integers(0, 24, n).astype(np.int32)
+    cdk_old = np.zeros_like(cdk); ckt_old = np.zeros_like(ckt)
+    np.add.at(cdk_old, (doc, z_old), 1)
+    np.add.at(ckt_old, (woff, z_old), 1)
+    wtab = build_word_tables(jnp.asarray(ckt_old), jnp.float32(0.01))
+    dtab = build_doc_tables(jnp.asarray(cdk_old), alpha)
+    mask = rng.random(n) < 0.9
+    u = rng.random(n).astype(np.float32)
+    args = (jnp.asarray(cdk), jnp.asarray(ckt), jnp.asarray(ck),
+            jnp.asarray(doc), jnp.asarray(woff), jnp.asarray(z),
+            jnp.asarray(mask), jnp.asarray(u), alpha,
+            jnp.float32(0.01), jnp.float32(0.2), wtab, dtab)
+    out_m = sweep_block_mh_tables(*args)
+    out_p = sweep_block_mh_pallas_tables(*args)
     for a, b in zip(out_m, out_p):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
