@@ -197,7 +197,9 @@ def aggregate_root(e2e_payload: dict | None = None) -> str:
     root = {"e2e": e2e_payload, "benchmarks": {}}
     if os.path.isdir(RESULTS_DIR):
         for name in sorted(os.listdir(RESULTS_DIR)):
-            if not name.endswith(".json") or name.startswith("bench_e2e"):
+            # smoke-mode outputs are CI artifacts, never trajectory data
+            if (not name.endswith(".json") or name.startswith("bench_e2e")
+                    or name.endswith("_smoke.json")):
                 continue
             try:
                 with open(os.path.join(RESULTS_DIR, name)) as f:

@@ -1,0 +1,138 @@
+"""Query-serving benchmark: fold-in latency and throughput (DESIGN.md §11).
+
+    PYTHONPATH=src python -m benchmarks.bench_infer [--smoke]
+
+Trains a small model, snapshots it, then measures the
+:class:`TopicInferenceServer` across samplers × batch sizes on a fixed
+bucket: per-batch latency p50/p99 and derived queries/s + query-tokens/s.
+This is the serving-side twin of `bench_e2e.py` — where that benchmark
+answers "how fast does an iteration train", this one answers "how fast
+does a frozen snapshot answer queries", which is the quantity the
+north-star's "heavy traffic" goal actually bounds.
+
+What to expect: the MH sampler's per-token cost is O(1) against tables
+built ONCE per snapshot, so its advantage over the exact O(K) ``scan``
+GROWS with K — the frozen-model ideal case LightLDA describes.  Batch
+size amortizes dispatch overhead into throughput at the cost of p99.
+
+Results land in ``benchmarks/results/bench_infer.json`` and — full mode
+only — are folded into the repo-root ``BENCH_e2e.json`` trajectory via
+``bench_e2e.aggregate_root`` (smoke mode writes a separate *_smoke file
+that the root digest excludes, so CI never clobbers recorded numbers).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.bench_e2e import aggregate_root
+from benchmarks.common import emit_csv_row, save_result
+from repro.core.engine.api import ModelParallelLDA
+from repro.data.synthetic import synthetic_corpus
+from repro.serve.topic_infer import TopicInferenceServer
+
+FULL = dict(docs=128, vocab=256, topics=16, doc_len=48, k=256,
+            train_iters=3, sweeps=5, query_len=32,
+            samplers=("scan", "mh", "mh_pallas"),
+            batch_sizes=(1, 8, 32),
+            repeats={"scan": 30, "mh": 30, "mh_pallas": 8})
+SMOKE = dict(docs=24, vocab=64, topics=8, doc_len=16, k=16,
+             train_iters=1, sweeps=2, query_len=12,
+             samplers=("mh",), batch_sizes=(4,),
+             repeats={"mh": 3})
+
+
+def _measure(server, docs, repeats: int) -> dict:
+    """Latency distribution of repeated `infer` calls on one bucket."""
+    server.infer(docs)                       # compile + warm the bucket
+    lat = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        theta = server.infer(docs)
+        lat.append(time.perf_counter() - t0)
+    assert np.isfinite(theta).all()
+    lat = np.asarray(lat)
+    p50 = float(np.percentile(lat, 50))
+    tokens = sum(len(d) for d in docs)
+    return {"batch": len(docs),
+            "p50_ms": p50 * 1e3,
+            "p99_ms": float(np.percentile(lat, 99)) * 1e3,
+            "queries_per_s": len(docs) / p50,
+            "query_tokens_per_s": tokens / p50,
+            "repeats": repeats}
+
+
+def run(smoke: bool = False, seed: int = 0) -> dict:
+    cfg = SMOKE if smoke else FULL
+    corpus, _, _ = synthetic_corpus(cfg["docs"], cfg["vocab"],
+                                    cfg["topics"], cfg["doc_len"],
+                                    seed=seed)
+    # train at serving K (the snapshot's K is what the fold-in pays for);
+    # the fast word-frozen sampler keeps the benchmark's setup cheap
+    lda = ModelParallelLDA(corpus, cfg["k"], num_workers=2, seed=seed,
+                           sampler_mode="batched", track_error=False)
+    lda.run(cfg["train_iters"])
+    snap = lda.snapshot()
+    rng = np.random.default_rng(seed + 1)
+    out = {
+        "mode": "smoke" if smoke else "full",
+        "workload": {"vocab": cfg["vocab"], "k": cfg["k"],
+                     "train_tokens": corpus.num_tokens,
+                     "query_len": cfg["query_len"],
+                     "fold_in_sweeps": cfg["sweeps"]},
+        "samplers": {},
+    }
+    for sampler in cfg["samplers"]:
+        server = TopicInferenceServer(snap, sampler=sampler,
+                                      num_sweeps=cfg["sweeps"], seed=seed)
+        rec = {}
+        for b in cfg["batch_sizes"]:
+            docs = [rng.integers(0, cfg["vocab"],
+                                 size=cfg["query_len"]).astype(np.int32)
+                    for _ in range(b)]
+            r = _measure(server, docs, cfg["repeats"][sampler])
+            rec[f"batch{b}"] = r
+            emit_csv_row(f"infer_{sampler}_b{b}_k{cfg['k']}",
+                         r["p50_ms"] * 1e3,
+                         f"qps={r['queries_per_s']:.1f},"
+                         f"p99_ms={r['p99_ms']:.2f}")
+        # sanity: the server really served from one bucket per batch size
+        rec["buckets"] = {f"{k[0]}x{k[1]}": v
+                          for k, v in server.bucket_calls.items()}
+        out["samplers"][sampler] = rec
+    # end-to-end sanity on an explicit server (not whichever sampler the
+    # loop happened to end on): perplexity of a random query set is finite
+    ppl = TopicInferenceServer(snap, sampler=cfg["samplers"][0],
+                               num_sweeps=cfg["sweeps"], seed=seed) \
+        .perplexity([rng.integers(0, cfg["vocab"], size=cfg["query_len"])
+                     for _ in range(4)])
+    out["holdout_perplexity_sanity"] = {"sampler": cfg["samplers"][0],
+                                        "perplexity": ppl["perplexity"]}
+    assert np.isfinite(ppl["perplexity"])
+    save_result("bench_infer_smoke" if smoke else "bench_infer", out)
+    if not smoke:
+        aggregate_root()      # fold into the repo-root BENCH trajectory
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI workload; not recorded in the root "
+                         "BENCH trajectory")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    res = run(smoke=args.smoke)
+    for sampler, rec in res["samplers"].items():
+        for key, r in rec.items():
+            if not key.startswith("batch"):
+                continue
+            print(f"# {sampler} {key}: p50 {r['p50_ms']:.2f} ms  "
+                  f"p99 {r['p99_ms']:.2f} ms  "
+                  f"{r['queries_per_s']:,.1f} queries/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,3 +34,19 @@ PYTHONHASHSEED=0 \
 # silently.  Smoke mode writes results/bench_e2e_smoke.json only; the
 # recorded perf trajectory (BENCH_e2e.json) is full-mode output.
 python -m benchmarks.bench_e2e --smoke
+
+# Pass 5: train -> snapshot -> serve smoke (DESIGN.md §11).  A 2-iter
+# training run exports a frozen snapshot (reporting held-out
+# doc-completion perplexity along the way), lda_infer serves a query
+# batch from it (exits non-zero on non-finite perplexity), and the
+# serving benchmark runs its smoke workload — the full query path from
+# CLI to fold-in kernel exercised on every CI run.
+SNAP_DIR="$(mktemp -d)"
+python -m repro.launch.lda_infer --queries 6 --query-len 16 --sweeps 3 \
+    --docs 48 --vocab 96 --topics 8 --train-iters 2
+python -m repro.launch.lda_train --docs 48 --vocab 96 --topics 8 \
+    --workers 2 --iters 2 --eval-holdout 8 --snapshot-out "$SNAP_DIR/snap.npz"
+python -m repro.launch.lda_infer --snapshot "$SNAP_DIR/snap.npz" \
+    --queries 8 --query-len 24 --sweeps 3
+rm -rf "$SNAP_DIR"
+python -m benchmarks.bench_infer --smoke

@@ -300,6 +300,22 @@ class ModelParallelLDA:
         return engine_state.gather_counts(self.layout, self.state,
                                           self.num_topics)
 
+    def snapshot(self, build_tables: bool = False):
+        """Export the frozen serving snapshot (DESIGN.md §11): the
+        reassembled ``C_k^t``/``C_k`` blocks plus — built once per
+        snapshot, lazily unless ``build_tables`` — the packed per-word
+        alias tables (`alias.pack_tables` layout) that make frozen-model
+        MH fold-in O(1) per query token.  The export is taken at an
+        iteration boundary, where every replica's block copies agree, so
+        snapshots are backend- and geometry-independent for the same
+        chain (the fold-in oracle tests pin this at several (D, M, S)).
+        """
+        from repro.core.infer import ModelSnapshot
+        state = self.gather_counts()
+        return ModelSnapshot.from_counts(
+            np.asarray(state.ckt), np.asarray(state.ck),
+            np.asarray(self.alpha), self.beta, build_tables=build_tables)
+
     def assignments(self) -> np.ndarray:
         """Current z in original token order."""
         return engine_state.gather_assignments(self.layout, self.state)

@@ -1,0 +1,332 @@
+"""Held-out (fold-in) inference against a frozen model snapshot.
+
+Training (PRs 1–4) produces the collapsed counts ``{C_k^t, C_k}``; this
+module is the SERVING half the north-star asks for: given a frozen
+snapshot of those counts, infer the topic mixture ``θ̂`` of documents the
+trainer never saw (Peacock's "online inference" stage; Hou et al. 2014).
+Fold-in runs the same collapsed Gibbs/MH machinery as training but
+updates ONLY the query document's ``C_d^k`` — the model counts stay
+frozen, which changes the systems story completely (DESIGN.md §11):
+
+* **no reconciliation** — queries never write shared state, so a query
+  batch shards embarrassingly along the ``data`` axis: no block ring, no
+  delta psum, no ``C_k`` sync.  The per-doc sweep is a ``vmap`` here and
+  would be a pure data-parallel ``shard_map`` at scale.
+* **alias tables build once per snapshot** — LightLDA notes frozen-model
+  inference is the ideal case for alias proposals: ``q_w ∝ C_k^t + β``
+  is static, so the per-word tables (`core/alias.py`, packed layout) are
+  built once per :class:`ModelSnapshot` and amortize over EVERY query
+  token served from it, not just one round's.
+* **replayable** — uniforms and initial assignments are drawn externally
+  (same convention as the trainer), so a batched device fold-in is
+  replayed draw-for-draw by the serial host oracle
+  (`kvstore.fold_in_oracle`): the jitted per-doc kernel for the exact
+  ``scan`` sampler, a pure-numpy mirror for the MH family.
+
+Two samplers:
+
+* ``scan`` — exact serial CGS per query doc over the frozen word term
+  ``φ̂ᵀ = (C_k^t + β)/(C_k + Vβ)`` (one `lax.scan`, vmapped over docs);
+* ``mh`` / ``mh_pallas`` — the O(1) alias-table MH cycle against the
+  snapshot's static word tables plus per-sweep doc tables, through the
+  SAME table-aware samplers the trainer registers (`engine/rounds.py`),
+  so the serving path inherits the trainer's bit-exactness guarantees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mh import DEFAULT_MH_CYCLES, build_doc_tables
+from repro.core.sampler import sample_from_mass
+
+# Gibbs/MH sweeps over the estimation half of a query doc.  Fold-in
+# burn-in is short because only D_loc = 1 rows of state mix.
+DEFAULT_FOLD_IN_SWEEPS = 5
+
+
+# ---------------------------------------------------------------------------
+# Frozen model snapshot (the serving export)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ModelSnapshot:
+    """Frozen counts + once-per-snapshot alias tables (DESIGN.md §11).
+
+    ``word_tables`` is the packed ``[3, V, K]`` int32 layout of
+    `core/alias.py` (cut-bits / alias / W planes) built by
+    ``mh.build_word_tables`` — the SAME builder, hence the same bits, as
+    the trainer's traveling tables, so MH fold-in replays against the
+    numpy mirrors exactly.  It is built lazily (:meth:`ensure_tables`)
+    and exactly once: the ``scan`` sampler and perplexity scoring never
+    need it, and rebuilding from counts is bit-deterministic, which is
+    why :meth:`save` persists only the counts.
+    """
+
+    ckt: np.ndarray                       # [V, K] int32 word-topic counts
+    ck: np.ndarray                        # [K] int32 topic totals
+    alpha: np.ndarray                     # [K] f32 document prior
+    beta: float                           # word smoothing
+    word_tables: Optional[np.ndarray] = None   # packed [3, V, K] int32
+    _word_term: Optional[np.ndarray] = \
+        dataclasses.field(default=None, repr=False, compare=False)
+
+    @classmethod
+    def from_counts(cls, ckt, ck=None, alpha=0.1, beta=0.01,
+                    build_tables: bool = False) -> "ModelSnapshot":
+        ckt = np.asarray(ckt, np.int32)
+        if ckt.ndim != 2:
+            raise ValueError(f"ckt must be [V, K], got shape {ckt.shape}")
+        if ck is None:
+            ck = ckt.sum(axis=0, dtype=np.int64)
+        ck = np.asarray(ck, np.int32)
+        k = ckt.shape[1]
+        alpha = (np.full(k, alpha, np.float32) if np.isscalar(alpha)
+                 else np.asarray(alpha, np.float32))
+        snap = cls(ckt=ckt, ck=ck, alpha=alpha, beta=float(beta))
+        if build_tables:
+            snap.ensure_tables()
+        return snap
+
+    # -- shape views -------------------------------------------------------
+    @property
+    def vocab_size(self) -> int:
+        return int(self.ckt.shape[0])
+
+    @property
+    def num_topics(self) -> int:
+        return int(self.ckt.shape[1])
+
+    @property
+    def vbeta(self) -> float:
+        return float(self.beta * self.vocab_size)
+
+    # -- derived serving state --------------------------------------------
+    def word_term(self) -> np.ndarray:
+        """``φ̂ᵀ`` [V, K] f32: ``(C_k^t + β) / (C_k + Vβ)`` — row ``t`` is
+        the per-topic probability of word ``t`` (rows of the transposed
+        topic-word matrix; each COLUMN sums to 1 over the vocabulary).
+        One f32 buffer shared by the device sampler and the host oracle,
+        so the exact fold-in's conditionals agree bit-for-bit."""
+        if self._word_term is None:
+            denom = self.ck.astype(np.float32) + np.float32(self.vbeta)
+            self._word_term = (self.ckt.astype(np.float32)
+                               + np.float32(self.beta)) / denom[None, :]
+        return self._word_term
+
+    def ensure_tables(self) -> np.ndarray:
+        """Build (once) and return the packed per-word alias tables."""
+        if self.word_tables is None:
+            from repro.core.mh import build_word_tables
+            self.word_tables = np.asarray(build_word_tables(
+                jnp.asarray(self.ckt), jnp.float32(self.beta)))
+        return self.word_tables
+
+    # -- persistence -------------------------------------------------------
+    def save(self, path: str) -> None:
+        """Persist the counts (npz).  Tables are NOT stored: the builder
+        is bit-deterministic, so a load + ``ensure_tables`` reproduces
+        them exactly — the checkpoint stays sampler-agnostic, like the
+        trainer's (DESIGN.md §10)."""
+        import os
+
+        from repro.data.corpus import npz_stem
+        stem = npz_stem(path)
+        os.makedirs(os.path.dirname(stem) or ".", exist_ok=True)
+        np.savez_compressed(stem + ".npz", ckt=self.ckt, ck=self.ck,
+                            alpha=self.alpha, beta=np.float64(self.beta))
+
+
+def load_snapshot(path: str) -> ModelSnapshot:
+    from repro.data.corpus import npz_stem
+    data = np.load(npz_stem(path) + ".npz")
+    return ModelSnapshot.from_counts(data["ckt"], data["ck"], data["alpha"],
+                                     float(data["beta"]))
+
+
+# ---------------------------------------------------------------------------
+# Query batch layout
+# ---------------------------------------------------------------------------
+
+def pack_queries(docs: Sequence[Sequence[int]], t_pad: int | None = None,
+                 q_pad: int | None = None):
+    """Pack query docs (word-id sequences) into ``(word [Q, T] int32,
+    mask [Q, T] bool)``.  ``t_pad``/``q_pad`` force bucket shapes (the
+    serving path pads to power-of-two buckets so jit compiles once per
+    bucket); padded slots are masked no-ops."""
+    q = len(docs)
+    lens = [len(d) for d in docs]
+    t = int(t_pad) if t_pad is not None else max(lens + [1])
+    t = max(t, 1)
+    qq = int(q_pad) if q_pad is not None else max(q, 1)
+    if qq < q:
+        raise ValueError(f"q_pad {qq} < batch size {q}")
+    if lens and max(lens) > t:
+        raise ValueError(f"t_pad {t} < longest query ({max(lens)} tokens)")
+    word = np.zeros((qq, t), np.int32)
+    mask = np.zeros((qq, t), bool)
+    for i, d in enumerate(docs):
+        word[i, :lens[i]] = np.asarray(d, np.int32)
+        mask[i, :lens[i]] = True
+    return word, mask
+
+
+def init_query_cdk(z0: np.ndarray, mask: np.ndarray, k: int) -> np.ndarray:
+    """Initial per-query doc-topic counts from the initial assignments
+    (shared by the engine and the host oracle)."""
+    q, t = z0.shape
+    cdk = np.zeros((q, k), np.int32)
+    np.add.at(cdk, (np.repeat(np.arange(q), t), z0.reshape(-1)),
+              mask.reshape(-1).astype(np.int32))
+    return cdk
+
+
+def theta_from_cdk(cdk: np.ndarray, alpha: np.ndarray) -> np.ndarray:
+    """Posterior-mean mixture ``θ̂ = (C_d^k + α) / (N_d + Σα)`` [f64]."""
+    cdk = np.asarray(cdk, np.float64)
+    alpha = np.asarray(alpha, np.float64)
+    return (cdk + alpha) / (cdk.sum(axis=1, keepdims=True) + alpha.sum())
+
+
+# ---------------------------------------------------------------------------
+# Device sweeps
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def fold_in_doc_scan(cdk_d, wterm, word_t, z_t, mask_t, u_t, alpha):
+    """ONE query doc, ONE exact serial CGS sweep against the frozen word
+    term.  This is the unit the engine vmaps over the batch — and the
+    unit the host oracle replays serially (`kvstore.fold_in_oracle`), so
+    batched and serial execution are the same jitted program applied
+    per-row (the repo's standard bit-exactness argument)."""
+    def body(carry, xs):
+        cdk_d = carry
+        t_i, k_old, valid, u_i = xs
+        delta = valid.astype(jnp.int32)
+        cdk_d = cdk_d.at[k_old].add(-delta)        # ¬dn self-exclusion
+        p = wterm[t_i] * (alpha + cdk_d.astype(jnp.float32))
+        k_new = sample_from_mass(p, u_i).astype(jnp.int32)
+        k_new = jnp.where(valid, k_new, k_old)
+        cdk_d = cdk_d.at[k_new].add(delta)
+        return cdk_d, k_new
+
+    return jax.lax.scan(body, cdk_d, (word_t, z_t, mask_t, u_t))
+
+
+@jax.jit
+def _fold_in_scan_sweeps(cdk, wterm, word, z, mask, u, alpha):
+    """All sweeps × all query docs of the exact fold-in: `lax.scan` over
+    the sweep axis of ``u`` [S, Q, T], vmap of :func:`fold_in_doc_scan`
+    over the doc axis (docs are independent — the model is frozen)."""
+    def sweep(carry, u_s):
+        cdk, z = carry
+        cdk, z = jax.vmap(fold_in_doc_scan,
+                          in_axes=(0, None, 0, 0, 0, 0, None))(
+            cdk, wterm, word, z, mask, u_s, alpha)
+        return (cdk, z), None
+
+    (cdk, z), _ = jax.lax.scan(sweep, (cdk, z), u)
+    return cdk, z
+
+
+@partial(jax.jit, static_argnames=("sampler_mode", "num_cycles"))
+def _fold_in_mh_sweeps(cdk, ckt, ck, wtab, word, z, mask, u, alpha, beta,
+                       vbeta, sampler_mode: str = "mh",
+                       num_cycles: int = DEFAULT_MH_CYCLES):
+    """MH fold-in: per sweep, build doc tables from sweep-start ``cdk``
+    (the only mutable state) and run the registry's table-aware sampler
+    per doc against the snapshot's STATIC word tables.  The model-count
+    outputs of the sampler are discarded — that single difference from
+    training is what "frozen model" means operationally."""
+    from repro.core.engine.rounds import resolve_table_sampler
+    sampler = resolve_table_sampler(sampler_mode)
+    t = word.shape[1]
+    zero_doc = jnp.zeros((t,), jnp.int32)
+
+    def per_doc(cdk_d, dtab_d, w_t, z_t, m_t, u_t):
+        out = sampler(cdk_d[None], ckt, ck, zero_doc, w_t, z_t, m_t, u_t,
+                      alpha, beta, vbeta, wtab, dtab_d[:, None, :],
+                      num_cycles=num_cycles)
+        return out[0][0], out[3]          # cdk row + draws; ckt/ck frozen
+
+    def sweep(carry, u_s):
+        cdk, z = carry
+        dtab = build_doc_tables(cdk, alpha)          # [3, Q, K] per sweep
+        cdk, z = jax.vmap(per_doc, in_axes=(0, 1, 0, 0, 0, 0))(
+            cdk, dtab, word, z, mask, u_s)
+        return (cdk, z), None
+
+    (cdk, z), _ = jax.lax.scan(sweep, (cdk, z), u)
+    return cdk, z
+
+
+# ---------------------------------------------------------------------------
+# Public fold-in entry point
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FoldInResult:
+    cdk: np.ndarray      # [Q, K] int32 inferred doc-topic counts
+    z: np.ndarray        # [Q, T] int32 final assignments (block layout)
+    theta: np.ndarray    # [Q, K] f64 posterior-mean mixtures
+
+
+def fold_in(snapshot: ModelSnapshot, word: np.ndarray, mask: np.ndarray,
+            num_sweeps: int = DEFAULT_FOLD_IN_SWEEPS, sampler: str = "scan",
+            seed: int = 0, rng: Optional[np.random.Generator] = None,
+            z0: Optional[np.ndarray] = None, u: Optional[np.ndarray] = None,
+            num_cycles: int = DEFAULT_MH_CYCLES) -> FoldInResult:
+    """Infer topic mixtures for a packed query batch (see
+    :func:`pack_queries`) against a frozen snapshot.
+
+    Randomness follows the trainer's convention: initial assignments
+    ``z0`` [Q, T] and uniforms ``u`` [num_sweeps, Q, T] are drawn
+    externally (from ``rng``/``seed`` unless supplied), so any run can be
+    replayed draw-for-draw by `kvstore.fold_in_oracle` fed the same
+    arrays.  ``sampler`` is ``"scan"`` (exact CGS) or any table-capable
+    registry sampler (``"mh"``/``"mh_pallas"`` — the MH pair draws
+    identically, as in training).
+    """
+    word = np.asarray(word, np.int32)
+    mask = np.asarray(mask, bool)
+    if word.shape != mask.shape or word.ndim != 2:
+        raise ValueError(f"word/mask must share a [Q, T] shape, got "
+                         f"{word.shape} vs {mask.shape}")
+    k = snapshot.num_topics
+    if rng is None:
+        rng = np.random.default_rng(seed)
+    if z0 is None:
+        z0 = rng.integers(0, k, size=word.shape).astype(np.int32)
+    if u is None:
+        u = rng.random((num_sweeps, *word.shape), np.float32)
+    u = np.asarray(u, np.float32)
+    cdk0 = init_query_cdk(z0, mask, k)
+    alpha = jnp.asarray(snapshot.alpha)
+
+    if sampler == "scan":
+        cdk, z = _fold_in_scan_sweeps(
+            jnp.asarray(cdk0), jnp.asarray(snapshot.word_term()),
+            jnp.asarray(word), jnp.asarray(z0), jnp.asarray(mask),
+            jnp.asarray(u), alpha)
+    else:
+        from repro.core.engine.rounds import table_capable
+        if not table_capable(sampler):
+            raise ValueError(
+                f"unknown fold-in sampler {sampler!r}; expected 'scan' "
+                "or a table-capable registry sampler (the MH family)")
+        cdk, z = _fold_in_mh_sweeps(
+            jnp.asarray(cdk0), jnp.asarray(snapshot.ckt),
+            jnp.asarray(snapshot.ck), jnp.asarray(snapshot.ensure_tables()),
+            jnp.asarray(word), jnp.asarray(z0), jnp.asarray(mask),
+            jnp.asarray(u), alpha, jnp.float32(snapshot.beta),
+            jnp.float32(snapshot.vbeta), sampler_mode=sampler,
+            num_cycles=num_cycles)
+
+    cdk = np.asarray(cdk)
+    return FoldInResult(cdk=cdk, z=np.asarray(z),
+                        theta=theta_from_cdk(cdk, snapshot.alpha))

@@ -394,3 +394,99 @@ class HostModelParallelLDA:
                                           shard.token_id.shape[0])
             z[shard.token_id] = z_local
         return z
+
+    def snapshot(self, build_tables: bool = False):
+        """Frozen serving export from the store's blocks — the host-side
+        twin of ``ModelParallelLDA.snapshot()`` (identical whenever the
+        engine replays this scheduler draw-for-draw)."""
+        from repro.core.infer import ModelSnapshot
+        return ModelSnapshot.from_counts(self.gather_ckt(), None,
+                                         self.alpha, self.beta,
+                                         build_tables=build_tables)
+
+
+# ---------------------------------------------------------------------------
+# Fold-in host oracle (serving-side replay, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def fold_in_oracle(snapshot, word, mask, z0, u, sampler: str = "scan",
+                   num_cycles: int | None = None):
+    """Serial host replay of the fold-in engine (`core/infer.py`):
+    process ONE (sweep, query doc) at a time, like the scheduler loop
+    above processes one (round, worker) task at a time.  Returns
+    ``(cdk [Q, K], z [Q, T])`` bit-identical to
+    ``infer.fold_in(..., z0=z0, u=u)`` fed the same arrays.
+
+    Two replay flavours, matching how each training sampler is anchored:
+
+    * ``"scan"`` — the same jitted per-doc kernel the engine vmaps
+      (``infer.fold_in_doc_scan``), applied per row: the training path's
+      structural-equivalence argument (vmap == per-row program), which is
+      what makes exact-CGS replay bitwise despite f32 cumsums.
+    * MH family — PURE NUMPY: doc tables via the `core/alias.py` numpy
+      builders, cycles via ``mh.mh_cycle_np``.  Every MH decision is a
+      single-IEEE-op chain on integer-derived operands (DESIGN.md §9),
+      so the mirror is bitwise WITHOUT sharing any compiled code — the
+      stronger statement, and it covers ``mh`` and ``mh_pallas`` at once
+      (the pair draws identically).
+    """
+    from repro.core.alias import (build_alias_int_np, int_masses_np,
+                                  unpack_tables_np)
+    from repro.core.engine.rounds import table_capable
+    from repro.core.infer import (DEFAULT_MH_CYCLES, fold_in_doc_scan,
+                                  init_query_cdk)
+    from repro.core.mh import mh_cycle_np
+
+    if num_cycles is None:
+        num_cycles = DEFAULT_MH_CYCLES
+    word = np.asarray(word, np.int32)
+    mask = np.asarray(mask, bool)
+    z0 = np.asarray(z0, np.int32)
+    u = np.asarray(u, np.float32)
+    num_sweeps, q, t = u.shape
+    k = snapshot.num_topics
+    cdk = init_query_cdk(z0, mask, k)
+    z = z0.copy()
+
+    if sampler == "scan":
+        import jax.numpy as jnp
+        wterm = jnp.asarray(snapshot.word_term())
+        alpha = jnp.asarray(snapshot.alpha)
+        for s in range(num_sweeps):
+            for qi in range(q):
+                cdk_d, z_d = fold_in_doc_scan(
+                    jnp.asarray(cdk[qi]), wterm, jnp.asarray(word[qi]),
+                    jnp.asarray(z[qi]), jnp.asarray(mask[qi]),
+                    jnp.asarray(u[s, qi]), alpha)
+                cdk[qi] = np.asarray(cdk_d)
+                z[qi] = np.asarray(z_d)
+        return cdk, z
+
+    if not table_capable(sampler):
+        raise ValueError(
+            f"unknown fold-in sampler {sampler!r}; expected 'scan' or a "
+            "table-capable registry sampler (the MH family)")
+    word_table = unpack_tables_np(snapshot.ensure_tables())
+    ckt_f = snapshot.ckt.astype(np.float32)
+    ck_f = snapshot.ck.astype(np.float32)
+    alpha = np.asarray(snapshot.alpha, np.float32)
+    zero_doc = np.zeros(t, np.int32)
+    for s in range(num_sweeps):
+        # docs are independent (frozen model): each doc's sweep reads only
+        # its own cdk row, so per-doc serial == the engine's batched sweep
+        for qi in range(q):
+            w_int = int_masses_np(cdk[qi], alpha)        # sweep-start row
+            dcut, dalias, du_cap = build_alias_int_np(w_int)
+            doc_table = (dcut[None], dalias[None],
+                         np.asarray([du_cap], np.float32), w_int[None])
+            z_old = z[qi].copy()
+            z_new = mh_cycle_np(
+                z_old, zero_doc, word[qi], mask[qi], u[s, qi],
+                cdk[qi].astype(np.float32)[None], ckt_f, ck_f, alpha,
+                snapshot.beta, snapshot.vbeta, word_table, doc_table,
+                num_cycles=num_cycles)
+            m = mask[qi]
+            np.add.at(cdk[qi], z_old[m], -1)
+            np.add.at(cdk[qi], z_new[m], 1)
+            z[qi] = z_new
+    return cdk, z

@@ -236,6 +236,67 @@ def _mh_step(z_cur, z0, d, t, mask, u_draw, u_acc, row, table,
 
 
 # ---------------------------------------------------------------------------
+# Numpy mirror of the MH cycle (host-oracle replay of frozen-count sweeps)
+# ---------------------------------------------------------------------------
+
+def _mh_step_np(z_cur, z0, d, t, mask, u_draw, u_acc, row, table,
+                cdk_f, ckt_f, ck_f, alpha, beta, vbeta):
+    """Numpy mirror of :func:`_mh_step`, op-for-op: same single-IEEE-op
+    decision chains (cell pick, alias resolve, cross-multiplied accept),
+    so given the same inputs it produces the same draws bit-for-bit —
+    the fold-in host oracle (`kvstore.fold_in_oracle`) is built on it."""
+    cut, alias_t, u_cap, w = table
+    k = ck_f.shape[0]
+    x = np.asarray(u_draw, np.float32) * np.float32(k)
+    j = np.minimum(x.astype(np.int32), k - 1)
+    frac = x - j.astype(np.float32)
+    prop = np.where(frac * u_cap[row] < cut[row, j], j,
+                    alias_t[row, j]).astype(np.int32)
+
+    def target(kk):
+        excl = (kk == z0).astype(np.float32)
+        num = ((cdk_f[d, kk] - excl + alpha[kk])
+               * (ckt_f[t, kk] - excl + beta))
+        den = ck_f[kk] - excl + vbeta
+        return num, den
+
+    n_new, d_new = target(prop)
+    n_old, d_old = target(z_cur)
+    q_new = w[row, prop].astype(np.float32)
+    q_old = w[row, z_cur].astype(np.float32)
+    accept = u_acc * n_old * d_new * q_new < n_new * d_old * q_old
+    return np.where(accept & mask, prop, z_cur).astype(np.int32)
+
+
+def mh_cycle_np(z, doc, word_off, mask, u, cdk_f, ckt_f, ck_f, alpha,
+                beta, vbeta, word_table, doc_table,
+                num_cycles: int = DEFAULT_MH_CYCLES) -> np.ndarray:
+    """Numpy mirror of the ``_mh_sweep_core`` z-update: run the full MH
+    cycle against FROZEN f32 count views and the given alias tables
+    (each ``(cut, alias, U, W)`` numpy tuples, e.g. from
+    ``alias.unpack_tables_np``).  Returns the new assignments; the caller
+    owns the count-delta fold, which is what lets the fold-in oracle
+    reuse this with the model counts simply never folded."""
+    streams = uniform_streams_np(np.asarray(u, np.float32), 4 * num_cycles)
+    z0 = np.asarray(z, np.int32)
+    z_cur = z0.copy()
+    mask = np.asarray(mask, bool)
+    beta = np.float32(beta)
+    vbeta = np.float32(vbeta)
+    alpha = np.asarray(alpha, np.float32)
+    for c in range(num_cycles):
+        z_cur = _mh_step_np(z_cur, z0, doc, word_off, mask,
+                            streams[4 * c], streams[4 * c + 1], word_off,
+                            word_table, cdk_f, ckt_f, ck_f, alpha, beta,
+                            vbeta)
+        z_cur = _mh_step_np(z_cur, z0, doc, word_off, mask,
+                            streams[4 * c + 2], streams[4 * c + 3], doc,
+                            doc_table, cdk_f, ckt_f, ck_f, alpha, beta,
+                            vbeta)
+    return np.where(mask, z_cur, z0).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
 # Engine-facing block samplers
 # ---------------------------------------------------------------------------
 

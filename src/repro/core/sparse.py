@@ -52,14 +52,21 @@ def sparse_gibbs_sweep_np(cdk, ckt, ck, doc, word, z, u, alpha, beta,
                                 ck.astype(np.float64), alpha, beta, vbeta)
         sa, sb, sc = a.sum(), b.sum(), c.sum()
         x = u[i] * (sa + sb + sc)
+        # The sparse-bucket draws clamp like the dense one below: the
+        # bucket test compares x against a PAIRWISE sum (sc = c.sum())
+        # while the inverse-CDF walks the SEQUENTIAL cumsum over nz, so
+        # roundoff (u -> 1.0, or the x - sc cancellation in B) can leave
+        # x at or past cs[-1] and searchsorted one past the end of nz.
         if x < sc:                      # word-sparse bucket first (most mass)
             nz = np.nonzero(ckt[t])[0]
             cs = np.cumsum(c[nz])
-            k_new = int(nz[np.searchsorted(cs, x, side="right")])
+            k_new = int(nz[min(np.searchsorted(cs, x, side="right"),
+                               len(nz) - 1)])
         elif x < sc + sb:               # document-sparse bucket
             nz = np.nonzero(cdk[d])[0]
             cs = np.cumsum(b[nz])
-            k_new = int(nz[np.searchsorted(cs, x - sc, side="right")])
+            k_new = int(nz[min(np.searchsorted(cs, x - sc, side="right"),
+                               len(nz) - 1)])
         else:                           # dense smoothing bucket
             cs = np.cumsum(a)
             k_new = int(min(np.searchsorted(cs, x - sc - sb, side="right"),

@@ -38,6 +38,14 @@ class Corpus:
         assert self.doc.max(initial=-1) < self.num_docs
         assert self.word.max(initial=-1) < self.vocab_size
 
+    def doc_words(self) -> List[np.ndarray]:
+        """Per-document word-id arrays, in stream order within each doc —
+        the query format the fold-in/serving path consumes."""
+        out: List[List[int]] = [[] for _ in range(self.num_docs)]
+        for d, w in zip(self.doc, self.word):
+            out[d].append(int(w))
+        return [np.asarray(ws, np.int32) for ws in out]
+
 
 def from_documents(docs_as_word_lists: Sequence[Sequence[int]],
                    vocab_size: int, vocab: List[str] | None = None) -> Corpus:
@@ -64,31 +72,85 @@ def from_texts(texts: Sequence[str], min_count: int = 1) -> Corpus:
     return from_documents(docs, len(vocab), vocab)
 
 
-def bigram_corpus(corpus: Corpus) -> Corpus:
+def bigram_corpus(corpus: Corpus, replace: bool = False) -> Corpus:
     """Augment with bigrams the way the paper builds Wiki-bigram (§5):
-    consecutive token pairs become phrase ids in an enlarged vocabulary."""
+    every intra-document consecutive token pair becomes a phrase token in
+    an ENLARGED vocabulary — the unigram stream is kept and the bigram
+    tokens (ids offset by ``vocab_size``) are appended per document, so
+    the result has ``N + #pairs`` tokens over ``V + #unique-pairs`` types.
+
+    ``replace=True`` is the escape hatch for the old behaviour: drop the
+    unigrams and keep only the bigram stream over a bigram-only
+    vocabulary (phrase ids start at 0).
+    """
     doc, word = corpus.doc, corpus.word
     same_doc = doc[1:] == doc[:-1]
     pairs = word[:-1][same_doc].astype(np.int64) * corpus.vocab_size \
         + word[1:][same_doc].astype(np.int64)
     uniq, inv = np.unique(pairs, return_inverse=True)
-    return Corpus(doc[:-1][same_doc].astype(np.int32), inv.astype(np.int32),
-                  corpus.num_docs, int(uniq.shape[0]))
+    bigram_doc = doc[:-1][same_doc].astype(np.int32)
+    bigram_vocab = None
+    if corpus.vocab is not None:
+        bigram_vocab = ["{}_{}".format(corpus.vocab[int(p // corpus.vocab_size)],
+                                       corpus.vocab[int(p % corpus.vocab_size)])
+                        for p in uniq]
+    if replace:
+        return Corpus(bigram_doc, inv.astype(np.int32), corpus.num_docs,
+                      int(uniq.shape[0]), bigram_vocab)
+    aug_doc = np.concatenate([doc, bigram_doc])
+    aug_word = np.concatenate([word.astype(np.int32),
+                               (inv + corpus.vocab_size).astype(np.int32)])
+    order = np.argsort(aug_doc, kind="stable")   # doc-major stream
+    vocab = (corpus.vocab + bigram_vocab
+             if corpus.vocab is not None else None)
+    return Corpus(aug_doc[order].astype(np.int32),
+                  aug_word[order].astype(np.int32), corpus.num_docs,
+                  corpus.vocab_size + int(uniq.shape[0]), vocab)
+
+
+def split_corpus(corpus: Corpus, num_holdout: int) -> tuple:
+    """Split the LAST ``num_holdout`` documents off as a held-out corpus
+    (doc ids renumbered from 0); both halves keep the full vocabulary so a
+    model trained on the first half can score the second."""
+    if not 0 < num_holdout < corpus.num_docs:
+        raise ValueError(
+            f"num_holdout must be in (0, {corpus.num_docs}), "
+            f"got {num_holdout}")
+    cut = corpus.num_docs - num_holdout
+    train_m = corpus.doc < cut
+    train = Corpus(corpus.doc[train_m], corpus.word[train_m], cut,
+                   corpus.vocab_size, corpus.vocab)
+    held = Corpus((corpus.doc[~train_m] - cut).astype(np.int32),
+                  corpus.word[~train_m], num_holdout, corpus.vocab_size,
+                  corpus.vocab)
+    return train, held
+
+
+def npz_stem(path: str) -> str:
+    """Normalize an ``.npz``-or-stem path to its stem: both
+    ``save_corpus("foo")`` and ``load_corpus("foo.npz")`` address the
+    same ``foo.npz`` + ``foo.vocab.json`` pair (the sidecar is keyed off
+    the STEM on both sides — the old code wrote ``foo.vocab.json`` but
+    looked for ``foo.npz.vocab.json``, silently dropping the
+    vocabulary).  Shared by the snapshot I/O in `core/infer.py`."""
+    return path[:-len(".npz")] if path.endswith(".npz") else path
 
 
 def save_corpus(corpus: Corpus, path: str) -> None:
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez_compressed(path, doc=corpus.doc, word=corpus.word,
+    stem = npz_stem(path)
+    os.makedirs(os.path.dirname(stem) or ".", exist_ok=True)
+    np.savez_compressed(stem + ".npz", doc=corpus.doc, word=corpus.word,
                         num_docs=corpus.num_docs, vocab_size=corpus.vocab_size)
     if corpus.vocab is not None:
-        with open(path + ".vocab.json", "w") as f:
+        with open(stem + ".vocab.json", "w") as f:
             json.dump(corpus.vocab, f)
 
 
 def load_corpus(path: str) -> Corpus:
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    stem = npz_stem(path)
+    data = np.load(stem + ".npz")
     vocab = None
-    vpath = path + ".vocab.json"
+    vpath = stem + ".vocab.json"
     if os.path.exists(vpath):
         with open(vpath) as f:
             vocab = json.load(f)

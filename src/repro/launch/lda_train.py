@@ -16,8 +16,11 @@ import time
 import numpy as np
 
 from repro.core.data_parallel import DataParallelLDA
+from repro.core.infer import ModelSnapshot
+from repro.core.likelihood import doc_completion_perplexity
 from repro.core.metrics import topic_recovery_score
 from repro.core.model_parallel import ModelParallelLDA
+from repro.data.corpus import split_corpus
 from repro.data.synthetic import synthetic_corpus
 from repro.train.checkpoint import save_checkpoint
 
@@ -55,10 +58,31 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--out", default="")
+    ap.add_argument("--eval-holdout", type=int, default=0, metavar="N",
+                    help="hold N docs out of training and report their "
+                         "doc-completion perplexity each iteration "
+                         "(fold-in on the first half of each held-out "
+                         "doc, score the second half — DESIGN.md §11)")
+    ap.add_argument("--holdout-sweeps", type=int, default=5,
+                    help="fold-in Gibbs sweeps per holdout evaluation")
+    ap.add_argument("--holdout-sampler", default="scan",
+                    choices=["scan", "mh", "mh_pallas"],
+                    help="fold-in sampler for the holdout eval ('scan' "
+                         "avoids rebuilding alias tables every snapshot)")
+    ap.add_argument("--snapshot-out", default="",
+                    help="write the final frozen serving snapshot "
+                         "(counts .npz consumed by lda_infer)")
     args = ap.parse_args()
 
     corpus, phi, _ = synthetic_corpus(args.docs, args.vocab, args.topics,
                                       args.doc_len, seed=args.seed)
+    holdout_docs = None
+    if args.eval_holdout:
+        corpus, held = split_corpus(corpus, args.eval_holdout)
+        holdout_docs = held.doc_words()
+        print(f"holdout: {held.num_docs} docs / {held.num_tokens:,} tokens "
+              f"(doc-completion, {args.holdout_sweeps} fold-in sweeps, "
+              f"sampler={args.holdout_sampler})")
     print(f"corpus: {corpus.num_tokens:,} tokens, V={args.vocab}, "
           f"K={args.topics}, model vars={args.vocab * args.topics:,}")
     if args.engine == "mp":
@@ -76,6 +100,14 @@ def main() -> None:
                               alpha=args.alpha, beta=args.beta,
                               seed=args.seed)
 
+    def take_snapshot():
+        if hasattr(lda, "snapshot"):
+            return lda.snapshot()
+        state = lda.gather_counts()   # dp baseline: build from the dump
+        return ModelSnapshot.from_counts(np.asarray(state.ckt),
+                                         np.asarray(state.ck),
+                                         args.alpha, args.beta)
+
     history = []
     t0 = time.time()
     for it in range(1, args.iters + 1):
@@ -91,10 +123,18 @@ def main() -> None:
             rec["delta_error"] = lda.delta_error()
         else:
             rec["staleness_error"] = lda.model_error()
+        hstr = ""
+        if holdout_docs is not None:
+            ppl = doc_completion_perplexity(
+                take_snapshot(), holdout_docs,
+                num_sweeps=args.holdout_sweeps,
+                sampler=args.holdout_sampler, seed=args.seed + it)
+            rec["holdout_perplexity"] = ppl["perplexity"]
+            hstr = f"ppl {ppl['perplexity']:,.1f}  "
         history.append(rec)
         if it % max(args.iters // 10, 1) == 0 or it == 1:
             extra = (f"Δ={rec.get('delta_error', rec.get('staleness_error')):.5f}")
-            print(f"iter {it:4d}  LL {ll:,.0f}  {extra}  "
+            print(f"iter {it:4d}  LL {ll:,.0f}  {hstr}{extra}  "
                   f"{rec['iter_s']:.3f}s/iter "
                   f"{rec['tokens_per_s']:,.0f} tok/s  "
                   f"[{rec['elapsed_s']}s]", flush=True)
@@ -111,6 +151,9 @@ def main() -> None:
         save_checkpoint(args.ckpt, {"ckt": state.ckt, "cdk": state.cdk,
                                     "ck": state.ck}, step=args.iters)
         print(f"saved model to {args.ckpt}")
+    if args.snapshot_out:
+        take_snapshot().save(args.snapshot_out)
+        print(f"saved serving snapshot to {args.snapshot_out}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"history": history, "recovery": score}, f, indent=1)

@@ -1,0 +1,111 @@
+"""Corpus I/O and transforms: save/load stem normalization (the vocab
+sidecar must survive BOTH call spellings), bigram augmentation semantics
+(paper §5 Wiki-bigram: bigrams ADD to the vocabulary), and the holdout
+split feeding the serving path."""
+import numpy as np
+import pytest
+
+from repro.data.corpus import (Corpus, bigram_corpus, from_documents,
+                               from_texts, load_corpus, save_corpus,
+                               split_corpus)
+
+
+def _vocab_corpus():
+    return from_texts(["the cat sat", "the dog sat down", "cat dog"])
+
+
+@pytest.mark.parametrize("save_ext,load_ext", [
+    ("", ""), ("", ".npz"), (".npz", ""), (".npz", ".npz")])
+def test_save_load_roundtrip_both_spellings(tmp_path, save_ext, load_ext):
+    """save("foo") / save("foo.npz") x load("foo") / load("foo.npz") all
+    address the same file pair — previously load("foo.npz") looked for
+    foo.npz.vocab.json and silently dropped the vocabulary."""
+    corpus = _vocab_corpus()
+    assert corpus.vocab is not None
+    stem = str(tmp_path / "corpus")
+    save_corpus(corpus, stem + save_ext)
+    out = load_corpus(stem + load_ext)
+    np.testing.assert_array_equal(out.doc, corpus.doc)
+    np.testing.assert_array_equal(out.word, corpus.word)
+    assert out.num_docs == corpus.num_docs
+    assert out.vocab_size == corpus.vocab_size
+    assert out.vocab == corpus.vocab          # the sidecar survived
+    out.validate()
+
+
+def test_save_load_without_vocab(tmp_path):
+    corpus = from_documents([[0, 1], [1, 2]], vocab_size=3)
+    path = str(tmp_path / "novocab")
+    save_corpus(corpus, path)
+    out = load_corpus(path)
+    assert out.vocab is None
+    np.testing.assert_array_equal(out.word, corpus.word)
+
+
+def test_bigram_augments_vocabulary():
+    """Default mode keeps the unigrams and APPENDS offset bigram tokens:
+    token count N + #intra-doc pairs, vocab V + #unique pairs."""
+    corpus = from_documents([[0, 1, 2], [2, 0]], vocab_size=3)
+    aug = bigram_corpus(corpus)
+    # pairs: (0,1), (1,2) in doc 0, (2,0) in doc 1 — all unique
+    assert aug.num_tokens == 5 + 3
+    assert aug.vocab_size == 3 + 3
+    assert aug.num_docs == 2
+    aug.validate()
+    # the unigram stream is intact (ids below V), bigrams sit above V
+    uni = aug.word[aug.word < 3]
+    big = aug.word[aug.word >= 3]
+    assert uni.shape[0] == 5 and big.shape[0] == 3
+    np.testing.assert_array_equal(np.sort(aug.doc[aug.word >= 3]), [0, 0, 1])
+    # doc-major stream: sharding/invindex layers assume a flat doc stream
+    assert (np.diff(aug.doc) >= 0).all()
+
+
+def test_bigram_repeated_pairs_share_ids():
+    corpus = from_documents([[0, 1, 0, 1]], vocab_size=2)
+    aug = bigram_corpus(corpus)
+    # pairs (0,1), (1,0), (0,1): 2 unique types, 3 bigram tokens
+    assert aug.vocab_size == 2 + 2
+    assert aug.num_tokens == 4 + 3
+    assert (aug.word >= 2).sum() == 3
+
+
+def test_bigram_vocab_strings_extended():
+    corpus = _vocab_corpus()
+    aug = bigram_corpus(corpus)
+    assert aug.vocab is not None
+    assert aug.vocab[:corpus.vocab_size] == corpus.vocab
+    assert all("_" in w for w in aug.vocab[corpus.vocab_size:])
+    assert len(aug.vocab) == aug.vocab_size
+
+
+def test_bigram_replace_escape_hatch():
+    """replace=True keeps the old semantics: bigram-only stream over a
+    bigram-only vocabulary."""
+    corpus = from_documents([[0, 1, 2], [2, 0]], vocab_size=3)
+    rep = bigram_corpus(corpus, replace=True)
+    assert rep.num_tokens == 3          # one token per intra-doc pair
+    assert rep.vocab_size == 3          # unique pairs only
+    assert rep.word.max() < 3
+    rep.validate()
+
+
+def test_split_corpus():
+    corpus = from_documents([[0], [1, 2], [2], [0, 1], [1]], vocab_size=3)
+    train, held = split_corpus(corpus, 2)
+    assert train.num_docs == 3 and held.num_docs == 2
+    assert train.num_tokens + held.num_tokens == corpus.num_tokens
+    assert train.vocab_size == held.vocab_size == 3
+    assert held.doc.min() == 0          # renumbered from zero
+    train.validate()
+    held.validate()
+    words = held.doc_words()
+    assert [list(w) for w in words] == [[0, 1], [1]]
+    with pytest.raises(ValueError):
+        split_corpus(corpus, 5)
+
+
+def test_doc_words_roundtrip():
+    docs = [[0, 2, 1], [1], [2, 2]]
+    corpus = from_documents(docs, vocab_size=3)
+    assert [list(w) for w in corpus.doc_words()] == docs

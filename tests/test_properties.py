@@ -42,10 +42,16 @@ def test_worker_shards_cover_corpus(seed):
 
 def test_bigram_corpus_matches_paper_construction():
     corpus = from_documents([[0, 1, 2], [1, 2]], vocab_size=3)
+    # doc0: (0,1), (1,2); doc1: (1,2) -> 2 unique phrases, 3 occurrences.
+    # The paper's Wiki-bigram AUGMENTS the vocabulary (§5): unigrams kept,
+    # phrase ids appended above V.
     big = bigram_corpus(corpus)
-    # doc0: (0,1), (1,2); doc1: (1,2) -> 2 unique phrases, 3 occurrences
-    assert big.num_tokens == 3
-    assert big.vocab_size == 2
+    assert big.num_tokens == 5 + 3
+    assert big.vocab_size == 3 + 2
+    # replace=True is the bigram-only escape hatch (the old behaviour)
+    rep = bigram_corpus(corpus, replace=True)
+    assert rep.num_tokens == 3
+    assert rep.vocab_size == 2
 
 
 def test_from_texts_roundtrip():

@@ -232,3 +232,87 @@ def test_cache_recompute_motivation():
     word_major = cache_recompute_count(doc, word, order_doc_major=False)
     assert doc_major <= 20
     assert word_major > 10 * doc_major
+
+
+def test_sparse_bucket_overflow_clamped():
+    """Regression: the C/B bucket draws used an unclamped searchsorted.
+
+    The bucket test compares ``x`` against ``sc = c.sum()`` (numpy's
+    PAIRWISE summation) while the inverse-CDF walks the SEQUENTIAL
+    ``cumsum(c[nz])``; with u -> 1.0 the two roundings leave ``x`` in
+    ``[cs[-1], sc)`` and the pre-fix ``nz[searchsorted(...)]`` indexed
+    one past the end of ``nz`` (IndexError).  This state + uniform are a
+    found instance of exactly that gap; the fixed sweep must clamp to
+    the last positive-count topic like the dense bucket does.
+    """
+    seed, u_adv = 4, 0.9999977241694266
+    rng = np.random.default_rng(seed)
+    k, v = 24, 50
+    ckt_row = rng.integers(0, 2000, k)
+    ckt_row[rng.random(k) < 0.3] = 0
+    cdk_row = rng.integers(0, 6, k)
+    cdk_row[rng.random(k) < 0.5] = 0
+    ck = ckt_row + rng.integers(0, 3000, k)
+    alpha = np.full(k, 1e-4)
+    beta = 1e-3
+    vbeta = beta * v
+
+    # embed the rows in a 1-token state whose POST-decrement counts are
+    # exactly the searched rows (the sweep removes the token first)
+    j = int(np.nonzero((cdk_row > 0) & (ckt_row > 0))[0][0])
+    cdk = cdk_row[None, :].astype(np.int64).copy()
+    cdk[0, j] += 1
+    ckt = np.zeros((v, k), np.int64)
+    ckt[0] = ckt_row
+    ckt[0, j] += 1
+    ck_full = ck.astype(np.int64).copy()
+    ck_full[j] += 1
+
+    # prove this instance hits the pre-fix out-of-bounds condition
+    a, b, c = bucket_masses(ckt_row.astype(np.float64),
+                            cdk_row.astype(np.float64),
+                            ck.astype(np.float64), alpha, beta, vbeta)
+    x = u_adv * (a.sum() + b.sum() + c.sum())
+    nz = np.nonzero(ckt_row)[0]
+    cs = np.cumsum(c[nz])
+    assert x < c.sum(), "instance must land in the C bucket"
+    assert np.searchsorted(cs, x, side="right") == len(nz), \
+        "instance must overflow the unclamped draw"
+
+    z_new = sparse_gibbs_sweep_np(cdk, ckt, ck_full, np.array([0]),
+                                  np.array([0]), np.array([j], np.int32),
+                                  np.array([u_adv]), alpha, beta)
+    assert z_new[0] == nz[-1]      # clamped like the dense bucket
+
+
+@pytest.mark.parametrize("u_val", [1.0, float(np.nextafter(1.0, 0.0))])
+def test_sparse_sweep_adversarial_uniforms(u_val):
+    """Whole sweeps with every uniform pinned to the u -> 1.0 edge (both
+    exactly 1.0 and its predecessor) stay in range and conserve counts,
+    for a well-mixed state and for the sparse extremes (single-token
+    docs + near-zero alpha, where the A/B buckets carry ~no mass)."""
+    rng = np.random.default_rng(12)
+    doc, word, z, cdk, ckt, ck = _random_state(rng, n=200)
+    u = np.full(200, u_val)
+    z_new = sparse_gibbs_sweep_np(cdk, ckt, ck, doc, word, z, u,
+                                  np.full(6, 0.1, np.float64), 0.01)
+    assert ((z_new >= 0) & (z_new < 6)).all()
+    state = build_counts(doc, word, z_new, 15, 25, 6)
+    check_invariants(state, 200)
+
+    # sparse extreme: every doc holds ONE token (B bucket empties after
+    # the decrement) and alpha ~ 0 starves the dense bucket
+    n, k = 40, 8
+    doc = np.arange(n, dtype=np.int32)
+    word = rng.integers(0, 10, n).astype(np.int32)
+    z = rng.integers(0, k, n).astype(np.int32)
+    state = build_counts(doc, word, z, n, 10, k)
+    cdk2, ckt2, ck2 = (np.array(state.cdk, np.int64),
+                       np.array(state.ckt, np.int64),
+                       np.array(state.ck, np.int64))
+    z_new = sparse_gibbs_sweep_np(cdk2, ckt2, ck2, doc, word, z,
+                                  np.full(n, u_val),
+                                  np.full(k, 1e-9, np.float64), 1e-6)
+    assert ((z_new >= 0) & (z_new < k)).all()
+    state = build_counts(doc, word, z_new, n, 10, k)
+    check_invariants(state, n)
