@@ -40,7 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import RESULTS_DIR, emit_csv_row, save_result
+from benchmarks.common import (RESULTS_DIR, emit_csv_row,
+                               platform_metadata, save_result)
 from repro.core.engine.api import ModelParallelLDA
 from repro.core.engine.backends import iteration_vmap
 from repro.data.synthetic import synthetic_corpus
@@ -194,7 +195,10 @@ def aggregate_root(e2e_payload: dict | None = None) -> str:
             # trajectory rather than clobbering it with null
             with open(out_path) as f:
                 e2e_payload = json.load(f).get("e2e")
-    root = {"e2e": e2e_payload, "benchmarks": {}}
+    # comparability stamp (satellite): trajectory points only mean
+    # something relative to the platform that produced them
+    root = {"platform": platform_metadata(), "e2e": e2e_payload,
+            "benchmarks": {}}
     if os.path.isdir(RESULTS_DIR):
         for name in sorted(os.listdir(RESULTS_DIR)):
             # smoke-mode outputs are CI artifacts, never trajectory data

@@ -1,0 +1,128 @@
+"""Sparse-sampler regime map: tokens/sec over K × doc_len on a Zipf tail.
+
+    PYTHONPATH=src python -m benchmarks.bench_sparse [--smoke]
+
+`bench_samplers.py` established the scan/batched/mh trajectory on a
+uniform workload.  This benchmark maps WHERE the hybrid sparse sampler
+(ISSUE 6, DESIGN.md §12) wins: its per-token cost is
+O(nnz_word + nnz_doc + log K) instead of scan's O(K) or the MH pair's
+O(1)-after-a-O((Vb + D_loc)·K)-table-build, so it should take the
+long-tail corner — large K, short docs, Zipf word frequencies — and
+lose the corner where docs are long relative to K (doc lanes degenerate
+toward dense).
+
+Workload: word slots drawn Zipf(1.1) over the block's Vb rows, so most
+``ckt`` rows are tail-sparse while the head rows overflow ``wcap`` and
+exercise the dense-head fallback; docs are exactly ``doc_len`` tokens,
+making ``dcap = min(K, doc_len)`` the tight per-doc bound.  All three
+samplers are timed on the identical (counts, tokens, uniforms) inputs;
+``mh`` is the round-lifetime form (registry default — builds its alias
+tables inside the timed call, exactly what a per-round schedule pays).
+
+Acceptance bar: at least one grid cell — expected at the largest K and
+shortest docs — where ``sparse`` beats BOTH ``scan`` and ``mh`` in
+tokens/s (``sparse_wins_regime`` non-empty).  Results land in
+``benchmarks/results/bench_sparse.json`` and fold into the repo-root
+``BENCH_e2e.json`` digest via `benchmarks.run` / `bench_e2e.aggregate_root`.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_samplers import _time_sampler
+from benchmarks.common import emit_csv_row, save_result
+from repro.core.engine.rounds import resolve_sampler
+from repro.core.sparse_device import default_sparse_args
+
+SAMPLERS = ("scan", "mh", "sparse")
+
+# grid: model size × doc shape.  T is held fixed so tokens/s is
+# comparable across cells; doc_len repartitions the same token budget
+# into many short docs (sparse's regime) or few long ones (dense's).
+FULL = dict(k_sweep=(256, 4096, 16384), len_sweep=(16, 48, 256),
+            vb=64, tokens=8192, zipf=1.1)
+SMOKE = dict(k_sweep=(256,), len_sweep=(16,),
+             vb=32, tokens=512, zipf=1.1)
+
+
+def _zipf_workload(k: int, doc_len: int, vb: int, tokens: int,
+                   zipf: float, seed: int = 0):
+    """One block's workload with a long-tail word-frequency profile."""
+    rng = np.random.default_rng(seed)
+    dloc = tokens // doc_len
+    tokens = dloc * doc_len     # whole docs only; cells stay comparable
+    # every doc holds exactly doc_len tokens, so dcap = min(K, doc_len)
+    # is a TIGHT correctness bound (per-doc nnz <= token count)
+    doc = np.repeat(np.arange(dloc, dtype=np.int32), doc_len)
+    w = rng.choice(vb, size=tokens,
+                   p=(p := 1.0 / np.arange(1, vb + 1) ** zipf) / p.sum())
+    woff = np.sort(w).astype(np.int32)
+    z = rng.integers(0, k, tokens).astype(np.int32)
+    cdk = np.zeros((dloc, k), np.int32)
+    ckt = np.zeros((vb, k), np.int32)
+    np.add.at(cdk, (doc, z), 1)
+    np.add.at(ckt, (woff, z), 1)
+    u = rng.random(tokens, np.float32)
+    return (jnp.asarray(cdk), jnp.asarray(ckt),
+            jnp.asarray(ckt.sum(0).astype(np.int32)),
+            jnp.asarray(doc), jnp.asarray(woff), jnp.asarray(z),
+            jnp.ones(tokens, bool), jnp.asarray(u),
+            jnp.full(k, 0.1, jnp.float32), jnp.float32(0.01),
+            jnp.float32(0.01 * vb))
+
+
+def run(smoke: bool = False, seed: int = 0) -> dict:
+    cfg = SMOKE if smoke else FULL
+    t = cfg["tokens"]
+    out = {"mode": "smoke" if smoke else "full",
+           "workload": {"vb": cfg["vb"], "tokens": t, "zipf": cfg["zipf"]},
+           "k_sweep": list(cfg["k_sweep"]),
+           "len_sweep": list(cfg["len_sweep"]), "results": {}}
+    wins = []
+    for k in cfg["k_sweep"]:
+        for doc_len in cfg["len_sweep"]:
+            args = _zipf_workload(k, doc_len, cfg["vb"], t,
+                                  cfg["zipf"], seed)
+            tc = (t // doc_len) * doc_len      # whole-doc token count
+            cell = f"k{k}_len{doc_len}"
+            rec = {"tokens": tc}
+            for mode in SAMPLERS:
+                sargs = (default_sparse_args(k, doc_len)
+                         if mode == "sparse" else ())
+                fn = resolve_sampler(mode, sargs)
+                repeats = 1 if (smoke or mode == "scan") else 3
+                sec = _time_sampler(fn, args, repeats)
+                rec[mode] = {"sec_per_block": sec, "tokens_per_s": tc / sec}
+                emit_csv_row(f"sparse_{mode}_{cell}", sec * 1e6,
+                             f"tokens_per_s={tc / sec:.0f}")
+            rec["fastest"] = max(SAMPLERS,
+                                 key=lambda m: rec[m]["tokens_per_s"])
+            if rec["fastest"] == "sparse":
+                wins.append(cell)
+            out["results"][cell] = rec
+    out["sparse_wins_regime"] = wins
+    out["sparse_wins_somewhere"] = bool(wins)
+    save_result("bench_sparse_smoke" if smoke else "bench_sparse", out)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single tiny cell for CI; results kept separate "
+                         "from the recorded trajectory")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    res = run(smoke=args.smoke)
+    for cell, rec in res["results"].items():
+        print(f"# {cell}: fastest={rec['fastest']} "
+              + " ".join(f"{m}={rec[m]['tokens_per_s']:.0f}tok/s"
+                         for m in SAMPLERS))
+    print(f"# sparse wins in: {res['sparse_wins_regime'] or 'NONE'}")
+
+
+if __name__ == "__main__":
+    main()

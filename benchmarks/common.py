@@ -9,9 +9,24 @@ from typing import Callable, Dict, List
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 
+def platform_metadata() -> Dict:
+    """Where a benchmark ran: JAX backend, device count, and whether
+    Pallas kernels execute in interpret mode (the off-TPU validation
+    path — orders of magnitude slower, so trajectory points are only
+    comparable within the same platform tuple).  Injected into every
+    saved result and the root BENCH_e2e.json digest."""
+    import jax
+    backend = jax.default_backend()
+    return {"jax_backend": backend,
+            "device_count": jax.device_count(),
+            "pallas_interpret": backend != "tpu"}
+
+
 def save_result(name: str, payload) -> str:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, name + ".json")
+    if isinstance(payload, dict) and "platform" not in payload:
+        payload = {**payload, "platform": platform_metadata()}
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     return path

@@ -17,7 +17,7 @@ import traceback
 
 from benchmarks import (bench_convergence, bench_e2e, bench_error,
                         bench_kernel, bench_model_size, bench_samplers,
-                        bench_scaling)
+                        bench_scaling, bench_sparse)
 
 BENCHES = {
     "fig2_convergence": bench_convergence.run,
@@ -26,6 +26,7 @@ BENCHES = {
     "fig4_scaling": bench_scaling.run,
     "kernel_sampler": bench_kernel.run,
     "sampler_backends": bench_samplers.run,
+    "sparse_regime_map": bench_sparse.run,
     "e2e_throughput": bench_e2e.run,
 }
 

@@ -50,3 +50,21 @@ python -m repro.launch.lda_infer --snapshot "$SNAP_DIR/snap.npz" \
     --queries 8 --query-len 24 --sweeps 3
 rm -rf "$SNAP_DIR"
 python -m benchmarks.bench_infer --smoke
+
+# Pass 6: hybrid sparse family smoke (DESIGN.md §12) — pinned-seed
+# 4-device hybrid-grid training with the sparse sampler (train ->
+# snapshot -> sparse fold-in serve through the CLI), then the sparse
+# regime-map benchmark on its tiny CI cell.  Guards the whole §12
+# surface: registry resolution with static sampler args, the 2D
+# shard_map path, snapshot sparse state, and the serving alias.
+SPARSE_DIR="$(mktemp -d)"
+PYTHONHASHSEED=0 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    python -m repro.launch.lda_train --docs 48 --vocab 96 --topics 8 \
+    --workers 2 --data-parallel 2 --iters 2 --seed 3 --sampler sparse \
+    --eval-holdout 8 --holdout-sampler sparse \
+    --snapshot-out "$SPARSE_DIR/snap.npz"
+PYTHONHASHSEED=0 \
+    python -m repro.launch.lda_infer --snapshot "$SPARSE_DIR/snap.npz" \
+    --sampler sparse --queries 8 --query-len 24 --sweeps 3
+rm -rf "$SPARSE_DIR"
+python -m benchmarks.bench_sparse --smoke

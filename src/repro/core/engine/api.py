@@ -81,7 +81,8 @@ class ModelParallelLDA:
                  blocks_per_worker: int = 1, data_parallel: int = 1,
                  data_axis: str = "data",
                  table_lifetime: Optional[str] = None,
-                 track_error: bool = True):
+                 track_error: bool = True,
+                 sampler_args: Optional[tuple] = None):
         corpus.validate()
         if blocks_per_worker < 1:
             raise ValueError(
@@ -103,7 +104,19 @@ class ModelParallelLDA:
             if np.isscalar(alpha) else jnp.asarray(alpha, jnp.float32)
         self.beta = float(beta)
         self.vbeta = float(beta * corpus.vocab_size)
-        resolve_sampler(sampler_mode)   # fail fast on unknown modes
+        if sampler_args is None:
+            if sampler_mode in ("sparse", "sparse_pallas"):
+                # the sparse family needs its static lane capacities: dcap
+                # must bound nnz(cdk row) ≤ min(K, longest doc); the host
+                # oracle derives the SAME config from the same corpus so
+                # replays run the identical jitted sampler.
+                from repro.core.sparse_device import default_sparse_args
+                sampler_args = default_sparse_args(
+                    num_topics, int(corpus.doc_lengths().max()))
+            else:
+                sampler_args = ()
+        self.sampler_args = tuple(sampler_args)
+        resolve_sampler(sampler_mode, self.sampler_args)  # fail fast
         self.sampler_mode = sampler_mode
         if table_lifetime is None:
             # the amortized schedule is the default wherever it applies
@@ -162,7 +175,8 @@ class ModelParallelLDA:
                 mesh, axis, sampler_mode, sync_ck,
                 data_axis=data_axis if use_2d else None,
                 table_lifetime=self.table_lifetime,
-                track_error=self.track_error)
+                track_error=self.track_error,
+                sampler_args=self.sampler_args)
         else:
             self.mesh = None
             self._iter_fn = None
@@ -267,7 +281,8 @@ class ModelParallelLDA:
                 sampler_mode=self.sampler_mode, sync_ck=self.sync_ck,
                 data_parallel=self.data_parallel,
                 table_lifetime=self.table_lifetime,
-                track_error=self.track_error)
+                track_error=self.track_error,
+                sampler_args=self.sampler_args)
         else:
             s = self.state
             out = self._iter_fn(

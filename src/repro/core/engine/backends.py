@@ -71,12 +71,12 @@ from repro.core.engine.state import MPState
 
 @partial(jax.jit, static_argnames=("sampler_mode", "sync_ck",
                                    "data_parallel", "table_lifetime",
-                                   "track_error"),
+                                   "track_error", "sampler_args"),
          donate_argnums=(0,))
 def iteration_vmap(state: MPState, u, doc, woff, mask, alpha, beta, vbeta,
                    sampler_mode: str = "scan", sync_ck: bool = True,
                    data_parallel: int = 1, table_lifetime: str = "round",
-                   track_error: bool = True):
+                   track_error: bool = True, sampler_args: tuple = ()):
     """One full iteration = S·M rounds with rotation, stacked on one device.
 
     ``u`` is ``[B, R, T]`` — one uniform per (round, grid row, token slot),
@@ -179,7 +179,7 @@ def iteration_vmap(state: MPState, u, doc, woff, mask, alpha, beta, vbeta,
                                      carry, u[s_:])
         return MPState(*carry[:6]), jnp.concatenate([errs_b, errs_r])
 
-    sampler = resolve_sampler(sampler_mode)
+    sampler = resolve_sampler(sampler_mode, sampler_args)
     round_fn = partial(worker_round, sampler=sampler)
 
     def round_step(carry, u_r):
@@ -207,7 +207,8 @@ def iteration_vmap(state: MPState, u, doc, woff, mask, alpha, beta, vbeta,
 def make_shard_map_iteration(mesh: Mesh, axis: str, sampler_mode: str,
                              sync_ck: bool, data_axis: str | None = None,
                              table_lifetime: str = "round",
-                             track_error: bool = True):
+                             track_error: bool = True,
+                             sampler_args: tuple = ()):
     """Build the jitted per-device iteration function for ``mesh``.
 
     ``axis`` is the model axis carrying the block ring.  When ``data_axis``
@@ -227,7 +228,7 @@ def make_shard_map_iteration(mesh: Mesh, axis: str, sampler_mode: str,
     perm = sched.rotation_permutation(mesh.shape[axis])
     tables = table_lifetime == "iteration"
     sampler = (resolve_table_sampler(sampler_mode) if tables
-               else resolve_sampler(sampler_mode))
+               else resolve_sampler(sampler_mode, sampler_args))
     ck_axes = (data_axis, axis) if data_axis is not None else axis
 
     def per_device(cdk, ckt, blk, ck_syn, ck_loc, z, u, doc, woff, mask,

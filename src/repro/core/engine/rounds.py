@@ -47,15 +47,21 @@ def register_sampler(name: str):
     return deco
 
 
-def resolve_sampler(mode: str) -> Callable:
-    """Instantiate the sampler registered under ``mode``."""
+def resolve_sampler(mode: str, sampler_args: tuple = ()) -> Callable:
+    """Instantiate the sampler registered under ``mode``.
+
+    ``sampler_args`` is a hashable tuple of ``(name, value)`` pairs
+    forwarded to the factory as keyword arguments — static sampler
+    config (e.g. the sparse family's ``dcap``/``wcap`` lane capacities)
+    that must ride the jit cache key, hence a tuple rather than a dict.
+    Factories that take no config reject a non-empty tuple loudly."""
     try:
         factory = _SAMPLERS[mode]
     except KeyError:
         raise ValueError(
             f"unknown sampler mode {mode!r}; "
             f"registered: {sorted(_SAMPLERS)}") from None
-    return factory()
+    return factory(**dict(sampler_args)) if sampler_args else factory()
 
 
 def available_samplers() -> list:
@@ -99,6 +105,35 @@ def _mh_sampler():
 def _mh_pallas_sampler():
     from repro.kernels.ops import sweep_block_mh_pallas
     return sweep_block_mh_pallas
+
+
+@register_sampler("sparse")
+def _sparse_sampler(dcap: int = 64, wcap: int = None):
+    # Hybrid dense-head/sparse-tail bucket sampler (DESIGN.md §12):
+    # frozen-count relaxation like "batched", per-token cost tracking the
+    # cdk/ckt nonzeros instead of K.  dcap MUST bound the per-doc nnz
+    # (the facade derives it via default_sparse_args); wcap is the
+    # head/tail threshold, a pure perf knob.
+    from repro.core.sparse_device import DEFAULT_WCAP, sweep_block_sparse
+    wcap = DEFAULT_WCAP if wcap is None else wcap
+
+    def f(cdk, ckt, ck, d, t, z, mk, u, alpha, beta, vbeta):
+        return sweep_block_sparse(cdk, ckt, ck, d, t, z, mk, u, alpha,
+                                  beta, vbeta, dcap=dcap, wcap=wcap)
+    return f
+
+
+@register_sampler("sparse_pallas")
+def _sparse_pallas_sampler(dcap: int = 64, wcap: int = None):
+    from repro.core.sparse_device import DEFAULT_WCAP
+    from repro.kernels.ops import sweep_block_sparse_pallas
+    wcap = DEFAULT_WCAP if wcap is None else wcap
+
+    def f(cdk, ckt, ck, d, t, z, mk, u, alpha, beta, vbeta):
+        return sweep_block_sparse_pallas(cdk, ckt, ck, d, t, z, mk, u,
+                                         alpha, beta, vbeta, dcap=dcap,
+                                         wcap=wcap)
+    return f
 
 
 # ---------------------------------------------------------------------------

@@ -75,6 +75,8 @@ class ModelSnapshot:
     word_tables: Optional[np.ndarray] = None   # packed [3, V, K] int32
     _word_term: Optional[np.ndarray] = \
         dataclasses.field(default=None, repr=False, compare=False)
+    _sparse_state: Optional[tuple] = \
+        dataclasses.field(default=None, repr=False, compare=False)
 
     @classmethod
     def from_counts(cls, ckt, ck=None, alpha=0.1, beta=0.01,
@@ -118,6 +120,21 @@ class ModelSnapshot:
             self._word_term = (self.ckt.astype(np.float32)
                                + np.float32(self.beta)) / denom[None, :]
         return self._word_term
+
+    def sparse_state(self) -> tuple:
+        """Frozen dense-segment layout for the ``sparse`` fold-in
+        (DESIGN.md §12), built lazily and once per snapshot like the
+        alias tables: ``(Xcs [V, K] f32, sX [V] f32)`` where ``X_v,k =
+        φ̂ᵀ_v,k · α_k`` is the query-independent part of the fold-in
+        conditional and ``Xcs`` its per-word cumsum.  Both the batched
+        device fold-in and the serial host oracle consume this ONE
+        buffer, so their dense-segment bisections agree bit-for-bit."""
+        if self._sparse_state is None:
+            xcs = np.cumsum(
+                self.word_term() * self.alpha[None, :],
+                axis=1, dtype=np.float32)
+            self._sparse_state = (xcs, np.ascontiguousarray(xcs[:, -1]))
+        return self._sparse_state
 
     def ensure_tables(self) -> np.ndarray:
         """Build (once) and return the packed per-word alias tables."""
@@ -265,6 +282,67 @@ def _fold_in_mh_sweeps(cdk, ckt, ck, wtab, word, z, mask, u, alpha, beta,
     return cdk, z
 
 
+@partial(jax.jit, static_argnames=("dcap",))
+def fold_in_doc_sparse(cdk_d, wterm, xcs, sx, word_t, z_t, mask_t, u_t,
+                       dcap: int):
+    """ONE query doc, ONE hybrid sparse fold-in sweep (DESIGN.md §12).
+
+    Frozen-count semantics per sweep, like the training sampler: the
+    conditional ``p_k = φ̂ᵀ_t,k (α_k + C_d'^k)`` splits into the
+    query-independent dense segment ``X = φ̂ᵀ·α`` (cumsummed once per
+    snapshot) and the document-sparse lanes ``φ̂ᵀ·C_d'^k`` on the ≤ dcap
+    nonzeros of the sweep-start doc row.  The model is frozen, so the
+    rank-1 z0 exclusion lives entirely on the doc lanes (z0 is always a
+    sweep-start nonzero) and the dense bisection needs no perturbation —
+    simpler than training's head/tail machinery.  This per-doc unit is
+    what the engine vmaps over the batch and the host oracle replays
+    serially, the repo's standard bit-exactness argument."""
+    from repro.core.sparse_device import (_extract_lanes, _lane_cumsum,
+                                          _row_count, _segment_draw)
+    k = cdk_d.shape[0]
+    lanes = _extract_lanes(cdk_d[None], dcap)[0]           # [dcap]
+    valid = lanes < k
+    kk = jnp.minimum(lanes, k - 1)
+    cdk_v = cdk_d.astype(jnp.float32)[kk]
+    e = ((kk[None, :] == z_t[:, None])
+         & mask_t[:, None]).astype(jnp.float32)
+    wt_v = wterm[word_t[:, None], kk[None, :]]             # [T, dcap]
+    dval = jnp.maximum(
+        jnp.where(valid[None, :], wt_v * (cdk_v[None, :] - e), 0.0), 0.0)
+    dcs = _lane_cumsum(dval)
+    sd = dcs[:, -1]
+    sxt = sx[word_t]
+    total = sd + sxt                       # CDF order [doc lanes | dense]
+    x = u_t * total
+    in_d = x < sd
+    kd = _segment_draw(dcs, sd, x,
+                       jnp.broadcast_to(kk[None, :], dval.shape))
+    y = x - sd
+    idx = _row_count(xcs, word_t, y)
+    last = _row_count(xcs, word_t, sxt, strict=True)
+    k_dense = jnp.minimum(jnp.minimum(idx, last), k - 1).astype(jnp.int32)
+    z_new = jnp.where(mask_t, jnp.where(in_d, kd, k_dense), z_t)
+    d = mask_t.astype(jnp.int32)
+    return cdk_d.at[z_t].add(-d).at[z_new].add(d), z_new
+
+
+@partial(jax.jit, static_argnames=("dcap",))
+def _fold_in_sparse_sweeps(cdk, wterm, xcs, sx, word, z, mask, u,
+                           dcap: int):
+    """All sweeps × all query docs of the sparse fold-in — the structure
+    of ``_fold_in_scan_sweeps`` around :func:`fold_in_doc_sparse`."""
+    unit = partial(fold_in_doc_sparse, dcap=dcap)
+
+    def sweep(carry, u_s):
+        cdk, z = carry
+        cdk, z = jax.vmap(unit, in_axes=(0, None, None, None, 0, 0, 0, 0))(
+            cdk, wterm, xcs, sx, word, z, mask, u_s)
+        return (cdk, z), None
+
+    (cdk, z), _ = jax.lax.scan(sweep, (cdk, z), u)
+    return cdk, z
+
+
 # ---------------------------------------------------------------------------
 # Public fold-in entry point
 # ---------------------------------------------------------------------------
@@ -313,12 +391,24 @@ def fold_in(snapshot: ModelSnapshot, word: np.ndarray, mask: np.ndarray,
             jnp.asarray(cdk0), jnp.asarray(snapshot.word_term()),
             jnp.asarray(word), jnp.asarray(z0), jnp.asarray(mask),
             jnp.asarray(u), alpha)
+    elif sampler in ("sparse", "sparse_pallas"):
+        # one jnp implementation serves both names: with the model frozen
+        # there is no per-round lane extraction to fuse, so the serving
+        # path has no separate kernel form (the alias keeps `--sampler`
+        # choices symmetric between training and inference).
+        xcs, sx = snapshot.sparse_state()
+        cdk, z = _fold_in_sparse_sweeps(
+            jnp.asarray(cdk0), jnp.asarray(snapshot.word_term()),
+            jnp.asarray(xcs), jnp.asarray(sx), jnp.asarray(word),
+            jnp.asarray(z0), jnp.asarray(mask), jnp.asarray(u),
+            dcap=min(k, word.shape[1]))
     else:
         from repro.core.engine.rounds import table_capable
         if not table_capable(sampler):
             raise ValueError(
-                f"unknown fold-in sampler {sampler!r}; expected 'scan' "
-                "or a table-capable registry sampler (the MH family)")
+                f"unknown fold-in sampler {sampler!r}; expected 'scan', "
+                "'sparse'/'sparse_pallas', or a table-capable registry "
+                "sampler (the MH family)")
         cdk, z = _fold_in_mh_sweeps(
             jnp.asarray(cdk0), jnp.asarray(snapshot.ckt),
             jnp.asarray(snapshot.ck), jnp.asarray(snapshot.ensure_tables()),

@@ -198,7 +198,8 @@ class HostModelParallelLDA:
                  alpha: float = 0.1, beta: float = 0.01, seed: int = 0,
                  blocks_per_worker: int = 1, sampler: str = "numpy",
                  ck_sync: str = "eager", data_parallel: int = 1,
-                 table_lifetime: str | None = None):
+                 table_lifetime: str | None = None,
+                 sampler_args: tuple | None = None):
         if ck_sync not in ("eager", "round"):
             raise ValueError(f"unknown ck_sync {ck_sync!r}")
         if ck_sync == "round" and sampler == "numpy":
@@ -271,12 +272,24 @@ class HostModelParallelLDA:
                     "traveling tables are built from frozen round-start "
                     "block copies")
         self.table_lifetime = table_lifetime
+        if sampler_args is None:
+            if sampler in ("sparse", "sparse_pallas"):
+                # identical derivation to the engine facade — same corpus,
+                # same caps, same jitted sampler instance, so oracle
+                # replays of sparse chains are draw-for-draw.
+                from repro.core.sparse_device import default_sparse_args
+                sampler_args = default_sparse_args(
+                    num_topics, int(corpus.doc_lengths().max()))
+            else:
+                sampler_args = ()
+        self.sampler_args = tuple(sampler_args)
         if sampler != "numpy":
             from repro.core.engine.rounds import (resolve_sampler,
                                                   resolve_table_sampler)
             self._sampler_fn = (resolve_table_sampler(sampler)
                                 if table_lifetime == "iteration"
-                                else resolve_sampler(sampler))
+                                else resolve_sampler(sampler,
+                                                     self.sampler_args))
         else:
             self._sampler_fn = None
         cap = common_block_capacity((s.word for s in shards),
@@ -423,6 +436,12 @@ def fold_in_oracle(snapshot, word, mask, z0, u, sampler: str = "scan",
       (``infer.fold_in_doc_scan``), applied per row: the training path's
       structural-equivalence argument (vmap == per-row program), which is
       what makes exact-CGS replay bitwise despite f32 cumsums.
+    * ``"sparse"``/``"sparse_pallas"`` — the same jitted per-doc hybrid
+      sparse unit the engine vmaps (``infer.fold_in_doc_sparse``),
+      applied per row against the snapshot's shared ``sparse_state()``
+      dense-segment cumsum — the scan flavour's structural argument,
+      covering both names at once (the serving pair is one
+      implementation).
     * MH family — PURE NUMPY: doc tables via the `core/alias.py` numpy
       builders, cycles via ``mh.mh_cycle_np``.  Every MH decision is a
       single-IEEE-op chain on integer-derived operands (DESIGN.md §9),
@@ -462,10 +481,30 @@ def fold_in_oracle(snapshot, word, mask, z0, u, sampler: str = "scan",
                 z[qi] = np.asarray(z_d)
         return cdk, z
 
+    if sampler in ("sparse", "sparse_pallas"):
+        import jax.numpy as jnp
+
+        from repro.core.infer import fold_in_doc_sparse
+        xcs, sx = snapshot.sparse_state()
+        wterm = jnp.asarray(snapshot.word_term())
+        xcs, sx = jnp.asarray(xcs), jnp.asarray(sx)
+        dcap = min(k, t)                   # shape-derived, like fold_in()
+        for s in range(num_sweeps):
+            for qi in range(q):
+                cdk_d, z_d = fold_in_doc_sparse(
+                    jnp.asarray(cdk[qi]), wterm, xcs, sx,
+                    jnp.asarray(word[qi]), jnp.asarray(z[qi]),
+                    jnp.asarray(mask[qi]), jnp.asarray(u[s, qi]),
+                    dcap=dcap)
+                cdk[qi] = np.asarray(cdk_d)
+                z[qi] = np.asarray(z_d)
+        return cdk, z
+
     if not table_capable(sampler):
         raise ValueError(
-            f"unknown fold-in sampler {sampler!r}; expected 'scan' or a "
-            "table-capable registry sampler (the MH family)")
+            f"unknown fold-in sampler {sampler!r}; expected 'scan', "
+            "'sparse'/'sparse_pallas', or a table-capable registry "
+            "sampler (the MH family)")
     word_table = unpack_tables_np(snapshot.ensure_tables())
     ckt_f = snapshot.ckt.astype(np.float32)
     ck_f = snapshot.ck.astype(np.float32)

@@ -14,6 +14,24 @@ define the same distribution as eq. 1/eq. 3); (ii) the per-token sampler of
 the data-parallel baseline's host path; (iii) to document why it is the
 WRONG decomposition for inverted-index order (the per-document B cache
 thrashes), motivating the paper's eq. 3 — see ``cache_recompute_count``.
+
+The A and B vectors are maintained INCREMENTALLY (the Sparse-LDA cache):
+a token's draw moves counts at exactly two topic lanes (``z_old`` down,
+``z_new`` up), so only those two lanes of ``A`` and of the current
+document's ``B`` are recomputed per accepted move — O(1) float work where
+the naive form rebuilds both full-K vectors every token.  ``B`` rebuilds
+in full only when the visit order crosses a document boundary (once per
+document in the natural doc-major order).  Bucket SUMS remain full-length
+``np.sum`` over the dense cached vectors: a lane value recomputed by the
+same expression is bitwise identical to a fresh rebuild, and summing the
+identical dense array keeps numpy's pairwise summation tree — so the
+incremental sweep is bit-for-bit the reference sweep
+(:func:`sparse_gibbs_sweep_np_reference`, pinned by regression test),
+not merely statistically equivalent.
+
+The device port of this decomposition (hybrid dense-head/sparse-tail
+layout, engine sampler ``sparse``/``sparse_pallas``) lives in
+``core/sparse_device.py`` — see DESIGN.md §12.
 """
 from __future__ import annotations
 
@@ -29,14 +47,93 @@ def bucket_masses(ckt_row, cdk_row, ck, alpha, beta, vbeta):
     return a, b, c
 
 
+def _bucket_draw(a, b, c, sa, sb, sc, ckt_row, cdk_row, u_i):
+    """One bucket-major inverse-CDF draw given the cached vectors/sums."""
+    x = u_i * (sa + sb + sc)
+    # The sparse-bucket draws clamp like the dense one in sampler.py: the
+    # bucket test compares x against a PAIRWISE sum (sc = c.sum()) while
+    # the inverse-CDF walks the SEQUENTIAL cumsum over nz, so roundoff
+    # (u -> 1.0, or the x - sc cancellation in B) can leave x at or past
+    # cs[-1] and searchsorted one past the end of nz.
+    if x < sc:                      # word-sparse bucket first (most mass)
+        nz = np.nonzero(ckt_row)[0]
+        cs = np.cumsum(c[nz])
+        return int(nz[min(np.searchsorted(cs, x, side="right"),
+                          len(nz) - 1)])
+    if x < sc + sb:                 # document-sparse bucket
+        nz = np.nonzero(cdk_row)[0]
+        cs = np.cumsum(b[nz])
+        return int(nz[min(np.searchsorted(cs, x - sc, side="right"),
+                          len(nz) - 1)])
+    cs = np.cumsum(a)               # dense smoothing bucket
+    return int(min(np.searchsorted(cs, x - sc - sb, side="right"),
+                   len(a) - 1))
+
+
 def sparse_gibbs_sweep_np(cdk, ckt, ck, doc, word, z, u, alpha, beta,
                           order=None):
-    """Exact serial sweep using the A/B/C bucket draw.
+    """Exact serial sweep using the A/B/C bucket draw, incremental caches.
 
     Consumes one uniform per token, like ``gibbs_sweep_np``; the bucket walk
     uses the same uniform rescaled, so the draw is still exact inverse-CDF
     over A+B+C mass (bucket-major ordering of the CDF).
+
+    Cache invariants (module docstring): after every count move, ``a`` and
+    the current doc's ``b`` hold exactly the values a full
+    ``bucket_masses`` rebuild would produce — only the two changed lanes
+    are written, with the same scalar expression the vector rebuild uses.
+    The word-sparse ``c`` is inherently per-token (the word changes every
+    token) and is built only on its nonzero lanes; the zero lanes of a
+    full rebuild are exact ``+0.0`` (finite·0/denom), so the dense
+    scatter reproduces the reference vector bitwise.
     """
+    doc = np.asarray(doc); word = np.asarray(word)
+    z = np.array(z, np.int32, copy=True)
+    alpha = np.asarray(alpha, np.float64)
+    k = ckt.shape[1]
+    vbeta = np.float64(beta * ckt.shape[0])
+    beta = np.float64(beta)
+    if order is None:
+        order = range(doc.shape[0])
+
+    denom = ck.astype(np.float64) + vbeta
+    a = alpha * beta / denom                    # dense smoothing cache
+    b = np.zeros(k, np.float64)                 # per-doc cache (lazy)
+    c = np.zeros(k, np.float64)                 # per-token scatter buffer
+    cur_doc = -1
+
+    def refresh(lane, d):
+        """Recompute the changed lane of every cached vector (O(1))."""
+        dn = np.float64(ck[lane]) + vbeta
+        denom[lane] = dn
+        a[lane] = alpha[lane] * beta / dn
+        b[lane] = beta * np.float64(cdk[d, lane]) / dn
+
+    for i in order:
+        d, t, k_old = doc[i], word[i], z[i]
+        if d != cur_doc:                        # doc boundary: rebuild B
+            b = beta * cdk[d].astype(np.float64) / denom
+            cur_doc = d
+        cdk[d, k_old] -= 1; ckt[t, k_old] -= 1; ck[k_old] -= 1
+        refresh(k_old, d)
+        nzc = np.nonzero(ckt[t])[0]
+        c.fill(0.0)
+        c[nzc] = (alpha[nzc] + cdk[d, nzc]) * ckt[t, nzc] / denom[nzc]
+        # full-length sums over the dense caches — identical arrays to a
+        # per-token rebuild, hence identical pairwise-summation results
+        k_new = _bucket_draw(a, b, c, a.sum(), b.sum(), c.sum(),
+                             ckt[t], cdk[d], u[i])
+        z[i] = k_new
+        cdk[d, k_new] += 1; ckt[t, k_new] += 1; ck[k_new] += 1
+        refresh(k_new, d)
+    return z
+
+
+def sparse_gibbs_sweep_np_reference(cdk, ckt, ck, doc, word, z, u, alpha,
+                                    beta, order=None):
+    """The pre-incremental form: rebuild all three bucket vectors per
+    token.  Kept as the regression anchor — the incremental sweep must
+    reproduce it bit for bit (``tests/test_sampler.py``)."""
     doc = np.asarray(doc); word = np.asarray(word)
     z = np.array(z, np.int32, copy=True)
     alpha = np.asarray(alpha, np.float64)
@@ -50,27 +147,8 @@ def sparse_gibbs_sweep_np(cdk, ckt, ck, doc, word, z, u, alpha, beta,
         a, b, c = bucket_masses(ckt[t].astype(np.float64),
                                 cdk[d].astype(np.float64),
                                 ck.astype(np.float64), alpha, beta, vbeta)
-        sa, sb, sc = a.sum(), b.sum(), c.sum()
-        x = u[i] * (sa + sb + sc)
-        # The sparse-bucket draws clamp like the dense one below: the
-        # bucket test compares x against a PAIRWISE sum (sc = c.sum())
-        # while the inverse-CDF walks the SEQUENTIAL cumsum over nz, so
-        # roundoff (u -> 1.0, or the x - sc cancellation in B) can leave
-        # x at or past cs[-1] and searchsorted one past the end of nz.
-        if x < sc:                      # word-sparse bucket first (most mass)
-            nz = np.nonzero(ckt[t])[0]
-            cs = np.cumsum(c[nz])
-            k_new = int(nz[min(np.searchsorted(cs, x, side="right"),
-                               len(nz) - 1)])
-        elif x < sc + sb:               # document-sparse bucket
-            nz = np.nonzero(cdk[d])[0]
-            cs = np.cumsum(b[nz])
-            k_new = int(nz[min(np.searchsorted(cs, x - sc, side="right"),
-                               len(nz) - 1)])
-        else:                           # dense smoothing bucket
-            cs = np.cumsum(a)
-            k_new = int(min(np.searchsorted(cs, x - sc - sb, side="right"),
-                            len(a) - 1))
+        k_new = _bucket_draw(a, b, c, a.sum(), b.sum(), c.sum(),
+                             ckt[t], cdk[d], u[i])
         z[i] = k_new
         cdk[d, k_new] += 1; ckt[t, k_new] += 1; ck[k_new] += 1
     return z

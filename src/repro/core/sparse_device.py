@@ -1,0 +1,288 @@
+"""Device-side sparse Gibbs sampler: hybrid dense-head/sparse-tail layout.
+
+The host bucket sampler (`core/sparse.py`, Yao et al. 2009) shows WHY
+long-tail corpora admit O(nnz) per-token sampling; this module is the
+device port that makes the engine's per-token cost track the nonzeros
+instead of K (DESIGN.md §12).  It is the first registry sampler whose
+working set *shrinks* with sparsity — the prerequisite for the K ≥ 64k
+regime of ROADMAP item 3.
+
+Semantics: a FROZEN-count batched sweep, exactly the relaxation class of
+``core.sampler.sweep_block_batched`` — counts frozen at round start, the
+¬dn self-exclusion applied as a rank-1 correction at the round-start
+assignment ``z0``, deltas folded exactly afterwards.  Token draws are
+therefore independent given the frozen counts: the chain is
+distribution-equal (not trajectory-equal) to the exact ``scan`` chain,
+validated statistically like ``mh`` (tests/test_sparse_stats.py), while
+everything around the draw stays bitwise testable — the host oracle
+resolves this very sampler from the registry, so engine runs replay
+draw-for-draw at any (D, M, S) geometry.
+
+Per-token mass decomposition (paper eq. 2 rearranged around a hybrid
+vocabulary split; ``'`` marks the rank-1 z0 exclusion, ``denom`` is
+``C_k + Vβ``):
+
+* **tail word** (``nnz(C^t) ≤ wcap``):
+  ``p_k = A_k + B_k + C_k`` with the dense smoothing bucket
+  ``A_k = α_k β/denom'_k``, the document-sparse bucket
+  ``B_k = β C_d'^k/denom'_k`` on the ≤ ``dcap`` nonzero lanes of the
+  doc row, and the word-sparse bucket
+  ``C_k = (α_k + C_d'^k) C'^t_k/denom'_k`` on the ≤ ``wcap`` nonzero
+  lanes of the word row.
+* **head word** (``nnz(C^t) > wcap`` — the hot-vocabulary prefix):
+  the word row is dense anyway, so the word term folds into the dense
+  segment: ``p_k = X_k + Y_k`` with ``X_k = α_k(β + C'^t_k)/denom'_k``
+  dense and ``Y_k = C_d'^k(β + C'^t_k)/denom'_k`` on the doc lanes —
+  eq. (3)'s split, evaluated on the head row.
+
+The dense segment is shared machinery for both cases: per word row
+``D_v,k = α_k(β + head_v·C^t_v,k)/denom_k`` (frozen counts) is cumsummed
+ONCE per round into ``Dcs [Vb, K+?]``; a token's exclusion perturbs
+exactly one lane (``z0``), handled as a shift ``δ = D'(z0) − D(z0)`` on
+the cumsum suffix, so the dense draw is two O(log K) binary searches —
+never an O(K) row materialization.  The head/tail split is decided per
+round from the frozen counts, so ``wcap`` is a pure performance knob
+(overflowing rows fall back to the dense-head path, never drop mass);
+``dcap`` by contrast must bound ``nnz(C_d^k)`` — ``min(K, max doc
+length)``, which :func:`default_sparse_args` derives and the facade and
+host oracle share so replays stay bitwise.
+
+The CDF a token draws from is segment-ordered
+``[word lanes | doc lanes | dense]``, one uniform per token rescaled by
+the total mass, with the counted-clamped inverse-CDF idiom of
+``sample_from_mass`` inside each segment (exact at ``u → 1.0`` and on
+zero-mass segments).
+
+``sweep_block_sparse`` is the jnp form; ``kernels/ops.py`` wraps the
+Pallas kernel (`kernels/sparse_gibbs.py`) around the same prologue and
+epilogue so ``sparse_pallas`` is bit-identical to ``sparse``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_WCAP = 32
+
+
+def default_sparse_args(num_topics: int, max_doc_len: int,
+                        wcap: int = DEFAULT_WCAP) -> tuple:
+    """Static sampler config for the sparse family, as a hashable tuple of
+    pairs (it rides jit cache keys).  ``dcap`` is the CORRECTNESS bound —
+    every ``C_d^k`` row has at most ``min(K, N_d)`` nonzeros; ``wcap`` is
+    the head/tail threshold (pure perf knob).  The engine facade and the
+    host oracle both derive their config through this one function, so an
+    oracle replay runs the identical jitted sampler."""
+    k = int(num_topics)
+    return (("dcap", max(1, min(k, int(max_doc_len)))),
+            ("wcap", max(1, min(k, int(wcap)))))
+
+
+def _extract_lanes(counts: jax.Array, cap: int) -> jax.Array:
+    """Nonzero topic lanes of each count row, CSR-style padded: [N, cap]
+    int32 of ascending topic ids, sentinel K past the row's nnz.  The
+    cumsum-position scatter is the `core/alias.py` compaction idiom; rows
+    with nnz > cap overflow silently (callers either bound cap — doc
+    rows — or route overflowing rows to the dense head — word rows)."""
+    n, k = counts.shape
+    nzm = counts > 0
+    pos = jnp.cumsum(nzm.astype(jnp.int32), axis=1) - 1
+    tgt = jnp.where(nzm, pos, cap)             # cap/overflow -> dropped
+    kio = jax.lax.broadcasted_iota(jnp.int32, (n, k), 1)
+    lanes = jnp.full((n, cap), k, jnp.int32)
+    return lanes.at[jnp.arange(n)[:, None], tgt].set(kio, mode="drop")
+
+
+def _row_count(csrows: jax.Array, rows: jax.Array, y: jax.Array,
+               strict: bool = False) -> jax.Array:
+    """``#{j : csrows[rows, j] ≤ y}`` (``< y`` when strict) per token by
+    bisection — O(log K) scalar gathers per token instead of an O(K) row
+    load; ``csrows`` rows are nondecreasing (cumsums of non-negatives,
+    monotone under f32 rounding)."""
+    kp = csrows.shape[1]
+    t = rows.shape[0]
+    steps = int(np.ceil(np.log2(kp + 1))) + 1
+
+    def body(_, lo_hi):
+        lo, hi = lo_hi
+        act = lo < hi
+        mid = (lo + hi) // 2
+        v = csrows[rows, jnp.minimum(mid, kp - 1)]
+        go = act & ((v < y) if strict else (v <= y))
+        return (jnp.where(go, mid + 1, lo),
+                jnp.where(act & ~go, mid, hi))
+
+    lo = jnp.zeros(t, jnp.int32)
+    hi = jnp.full(t, kp, jnp.int32)
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo
+
+
+def _lane_cumsum(x: jax.Array) -> jax.Array:
+    """Sequential-association prefix sum over the last (lane) axis.
+
+    NOT ``jnp.cumsum``: XLA may associate a parallel prefix sum
+    differently at different widths, and the Pallas kernel runs this scan
+    over lanes PADDED to the 128 boundary — appending exact ``+0.0``
+    terms to a left-to-right chain preserves every prefix bitwise, which
+    is what keeps ``sparse_pallas == sparse`` exact.  Lane counts are
+    ≤ 256, so the unrolled chain is cheap."""
+    cols = [x[..., 0:1]]
+    for j in range(1, x.shape[-1]):
+        cols.append(cols[-1] + x[..., j:j + 1])
+    return jnp.concatenate(cols, axis=-1)
+
+
+def _segment_draw(cs: jax.Array, total: jax.Array, x: jax.Array,
+                  lanes_k: jax.Array) -> jax.Array:
+    """Counted-clamped inverse-CDF draw within one padded lane segment
+    (the ``sample_from_mass`` idiom, rowwise): returns the drawn lane's
+    topic id.  Only consumed when ``x < total`` for the segment, where
+    the clamp guarantees a positive-mass (hence valid) lane."""
+    idx = jnp.sum((cs <= x[:, None]).astype(jnp.int32), axis=1)
+    last = jnp.sum((cs < total[:, None]).astype(jnp.int32), axis=1)
+    pick = jnp.minimum(jnp.minimum(idx, last), cs.shape[1] - 1)
+    return jnp.take_along_axis(lanes_k, pick[:, None], axis=1)[:, 0]
+
+
+def sparse_prologue(cdk, ckt_block, ck, doc, word_off, z, mask, alpha,
+                    beta, vbeta, dcap: int, wcap: int) -> dict:
+    """Round-frozen layout build + per-token operand gathers — everything
+    upstream of the lane-mass arithmetic, shared verbatim by the jnp
+    sampler and the Pallas wrapper (bit-identity by construction).
+
+    Cost per round: O((Vb + D_loc)·K) for the lane extraction and the
+    dense cumsum — the same amortization class as the MH table builds —
+    then O(wcap + dcap + log K) per token."""
+    k = ck.shape[0]
+    ckt_f = ckt_block.astype(jnp.float32)
+    cdk_f = cdk.astype(jnp.float32)
+    ck_f = ck.astype(jnp.float32)
+    denom = ck_f + vbeta
+
+    nnz_w = jnp.sum((ckt_block > 0).astype(jnp.int32), axis=1)
+    head = nnz_w > wcap                                    # [Vb]
+    wl = _extract_lanes(ckt_block, wcap)                   # [Vb, wcap]
+    dl = _extract_lanes(cdk, dcap)                         # [Dloc, dcap]
+
+    # dense segment, frozen: D_v = α(β + head_v·C^t_v)/denom, cumsummed
+    hterm = jnp.where(head[:, None], ckt_f, 0.0)
+    dmass = alpha[None, :] * (beta + hterm) / denom[None, :]
+    dcs = jnp.cumsum(dmass, axis=1)                        # [Vb, K]
+    sdense_row = dcs[:, -1]
+
+    h_t = head[word_off]                                   # [T]
+
+    def gather(lanes_rows, rows):
+        lanes = lanes_rows[rows]                           # [T, cap]
+        valid = lanes < k
+        kk = jnp.minimum(lanes, k - 1)
+        return {"kk": kk, "valid": valid,
+                "ckt": ckt_f[word_off[:, None], kk],
+                "cdk": cdk_f[doc[:, None], kk],
+                "ck": ck_f[kk], "alpha": alpha[kk]}
+
+    wops = gather(wl, word_off)
+    wops["valid"] = wops["valid"] & ~h_t[:, None]          # head: lane off
+    dops = gather(dl, doc)
+
+    # per-token rank-1 dense perturbation at z0: δ = D'(z0) − D(z0).
+    # D(z0) recomputed per token is bitwise the cumsum addend (same ops
+    # on the same gathered inputs), so sD + δ ≥ 0 and the shifted-suffix
+    # search below is exact.
+    a0 = alpha[z]
+    c0 = ckt_f[word_off, z]
+    k0 = ck_f[z]
+    dz0 = a0 * (beta + jnp.where(h_t, c0, 0.0)) / (k0 + vbeta)
+    dz0x = a0 * (beta + jnp.where(h_t, c0 - 1.0, 0.0)) / (k0 - 1.0 + vbeta)
+    delta = jnp.where(mask, dz0x - dz0, 0.0)
+    sdense = sdense_row[word_off] + delta
+
+    return {"wops": wops, "dops": dops, "h_t": h_t, "dcs": dcs,
+            "sdense": sdense, "delta": delta}
+
+
+def lane_masses_jnp(wops, dops, h_t, z0, mask, beta, vbeta):
+    """The lane-segment arithmetic the Pallas kernel mirrors op-for-op:
+    masses, cumsums and segment totals for the word-sparse and
+    document-sparse lanes of every token."""
+    ew = ((wops["kk"] == z0[:, None]) & mask[:, None]).astype(jnp.float32)
+    wraw = ((wops["alpha"] + (wops["cdk"] - ew)) * (wops["ckt"] - ew)
+            / (wops["ck"] - ew + vbeta))
+    wval = jnp.maximum(jnp.where(wops["valid"], wraw, 0.0), 0.0)
+    wcs = _lane_cumsum(wval)
+    sw = wcs[:, -1]
+
+    ed = ((dops["kk"] == z0[:, None]) & mask[:, None]).astype(jnp.float32)
+    cross = jnp.where(h_t[:, None], dops["ckt"] - ed, 0.0)
+    draw_ = ((dops["cdk"] - ed) * (beta + cross)
+             / (dops["ck"] - ed + vbeta))
+    dval = jnp.maximum(jnp.where(dops["valid"], draw_, 0.0), 0.0)
+    dcs = _lane_cumsum(dval)
+    sd = dcs[:, -1]
+    return wcs, sw, dcs, sd
+
+
+def _lane_draw_jnp(ops, z0, mask, u, beta, vbeta):
+    """jnp lane block: segment the CDF as [word | doc | dense], draw the
+    lane segments, hand the dense residual to the epilogue.  Returns
+    ``(z_lane, is_dense, y_dense)`` — the Pallas kernel computes exactly
+    this triple."""
+    wops, dops, h_t = ops["wops"], ops["dops"], ops["h_t"]
+    wcs, sw, dcs, sd = lane_masses_jnp(wops, dops, h_t, z0, mask, beta,
+                                       vbeta)
+    total = sw + sd + ops["sdense"]
+    x = u * total
+    yd = x - sw
+    ydense = yd - sd
+    in_w = x < sw
+    in_d = ~in_w & (yd < sd)
+    kw = _segment_draw(wcs, sw, x, wops["kk"])
+    kd = _segment_draw(dcs, sd, yd, dops["kk"])
+    z_lane = jnp.where(in_w, kw, kd)
+    return z_lane, ~(in_w | in_d), ydense
+
+
+def sparse_epilogue(ops, z_lane, is_dense, ydense, cdk, ckt_block, ck,
+                    doc, word_off, z, mask):
+    """Dense-segment draw (shifted-suffix bisection on the frozen cumsum)
+    + final select + exact delta fold — downstream of the lane block,
+    shared by the jnp and Pallas paths."""
+    k = ck.shape[0]
+    dcs, delta = ops["dcs"], ops["delta"]
+    # counted draw on the z0-perturbed cumsum Dcs'_k = Dcs_k + δ·[k ≥ z0]:
+    # split the count at z0 — prefix counts against y, suffix against
+    # y − δ — so the rank-1 exclusion never materializes a dense row.
+    c1 = _row_count(dcs, word_off, ydense)
+    c2 = _row_count(dcs, word_off, ydense - delta)
+    idx = jnp.minimum(c1, z) + jnp.maximum(c2 - z, 0)
+    l1 = _row_count(dcs, word_off, ops["sdense"], strict=True)
+    l2 = _row_count(dcs, word_off, ops["sdense"] - delta, strict=True)
+    last = jnp.minimum(l1, z) + jnp.maximum(l2 - z, 0)
+    k_dense = jnp.minimum(jnp.minimum(idx, last), k - 1).astype(jnp.int32)
+
+    z_new = jnp.where(is_dense, k_dense, z_lane)
+    z_new = jnp.where(mask, z_new, z)
+    d = mask.astype(jnp.int32)
+    cdk = cdk.at[doc, z].add(-d).at[doc, z_new].add(d)
+    ckt_block = ckt_block.at[word_off, z].add(-d).at[word_off, z_new].add(d)
+    ck = ck.at[z].add(-d).at[z_new].add(d)
+    return cdk, ckt_block, ck, z_new
+
+
+@partial(jax.jit, static_argnames=("dcap", "wcap"))
+def sweep_block_sparse(cdk, ckt_block, ck, doc, word_off, z, mask, u,
+                       alpha, beta, vbeta, dcap: int = 64,
+                       wcap: int = DEFAULT_WCAP):
+    """Engine-facing hybrid sparse sampler (module docstring).  Same
+    signature and frozen-count semantics as ``sweep_block_batched``; the
+    registry closes ``dcap``/``wcap`` over it (static — they shape every
+    lane buffer)."""
+    ops = sparse_prologue(cdk, ckt_block, ck, doc, word_off, z, mask,
+                          alpha, beta, vbeta, dcap, wcap)
+    z_lane, is_dense, ydense = _lane_draw_jnp(ops, z, mask, u, beta, vbeta)
+    return sparse_epilogue(ops, z_lane, is_dense, ydense, cdk, ckt_block,
+                           ck, doc, word_off, z, mask)

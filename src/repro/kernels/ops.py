@@ -226,3 +226,29 @@ def sweep_block_mh_pallas_tables(cdk, ckt_block, ck, doc, word_off, z,
                                  unpack_tables(word_packed),
                                  unpack_tables(doc_packed), num_cycles,
                                  interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("dcap", "wcap", "interpret"))
+def sweep_block_sparse_pallas(cdk, ckt_block, ck, doc, word_off, z, mask,
+                              u, alpha, beta, vbeta, dcap: int,
+                              wcap: int, interpret: bool | None = None):
+    """Engine-facing hybrid sparse sampler with the lane block — segment
+    masses, prefix sums, counted draws, segment select — run in the
+    Pallas kernel (``kernels/sparse_gibbs.py``).  Same signature and
+    frozen-count semantics as ``core.sparse_device.sweep_block_sparse``
+    and bit-identical to it given the same uniforms (asserted by tests):
+    the round-frozen prologue and the dense-segment epilogue are the
+    SHARED jnp functions, and the kernel mirrors the jnp lane block op
+    for op.
+    """
+    from repro.core.sparse_device import sparse_epilogue, sparse_prologue
+    from repro.kernels.sparse_gibbs import sparse_lane_call
+    if interpret is None:
+        interpret = not _on_tpu()
+    ops = sparse_prologue(cdk, ckt_block, ck, doc, word_off, z, mask,
+                          alpha, beta, vbeta, dcap, wcap)
+    z_lane, is_dense, ydense = sparse_lane_call(
+        ops["wops"], ops["dops"], ops["h_t"], z, mask, u, ops["sdense"],
+        beta, vbeta, interpret=interpret)
+    return sparse_epilogue(ops, z_lane, is_dense, ydense, cdk, ckt_block,
+                           ck, doc, word_off, z, mask)

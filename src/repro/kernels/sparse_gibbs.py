@@ -1,0 +1,174 @@
+"""Pallas TPU kernel for the hybrid sparse Gibbs lane block.
+
+The sparse sampler's per-token work is confined to the nonzero topic
+LANES of the word and doc count rows (``core/sparse_device.py``,
+DESIGN.md §12) — at most ``wcap + dcap`` lanes per token instead of K.
+This kernel runs exactly that lane block: the ``[word | doc]`` segment
+masses with the rank-1 z0 exclusion, their sequential prefix sums, the
+counted-clamped segment draws, and the three-way segment select — for a
+tile of tokens per grid step, with ONLY the padded lane operands resident
+in VMEM.  Unlike `gibbs_conditional.py`/`mh_alias.py`, whose VMEM
+working set grows with K, this kernel's footprint is fixed by the lane
+capacities: it *shrinks* with sparsity, which is the point of the sparse
+family.
+
+The dense-segment machinery stays outside: the frozen per-word cumsum
+``Dcs`` is built once per round in the shared prologue, and the O(log K)
+shifted-suffix bisection runs in the shared jnp epilogue.  The kernel
+returns the triple ``(z_lane, is_dense, y_dense)`` — the drawn lane
+topic, whether the draw fell through to the dense segment, and the dense
+residual — which is precisely what ``sparse_device._lane_draw_jnp``
+computes, op for op and in the same association order:
+
+* lane masses, ``where``-masking and clamping mirror
+  ``lane_masses_jnp`` exactly;
+* prefix sums use the same sequential-association chain
+  (``_lane_cumsum``), so the 128-lane padding appends exact ``+0.0``
+  terms and every real-lane prefix is preserved bitwise;
+* the counted draws consume padded lanes only in branches that are never
+  selected (padded cumsum entries equal the segment total, which the
+  ``<``/``≤`` counts exclude whenever the draw is consumed);
+* scalar lane picks are one-hot reductions (`mh_alias.py` idiom) — exact
+  selects, associativity-free.
+
+Hence ``sparse_pallas == sparse`` bit for bit, asserted by
+tests/test_sparse_device.py.  Tokens ride the grid rows ([Tp, 1] scalar
+columns, [Tp, capP] lane blocks, capP padded to the 128-lane boundary);
+invalid padding rows carry ``mask = 0`` and are dropped by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.sparse_device import _lane_cumsum
+
+TILE_T = 128
+
+
+def _sel(vals, idx, zero):
+    """vals [G, L] gathered at idx [G, 1] -> [G, 1] one-hot reduction."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1)
+    return jnp.sum(jnp.where(iota == idx, vals, zero), axis=-1,
+                   keepdims=True)
+
+
+def _segment_draw(cs, total, x, lanes_k):
+    """Counted-clamped inverse-CDF draw over one padded lane segment —
+    the kernel form of ``sparse_device._segment_draw`` ([G, 1] scalars,
+    one-hot lane pick)."""
+    idx = jnp.sum((cs <= x).astype(jnp.int32), axis=-1, keepdims=True)
+    last = jnp.sum((cs < total).astype(jnp.int32), axis=-1, keepdims=True)
+    pick = jnp.minimum(jnp.minimum(idx, last), cs.shape[-1] - 1)
+    return _sel(lanes_k, pick, 0)
+
+
+def _sparse_lane_kernel(wkk_ref, wvalid_ref, wckt_ref, wcdk_ref, wck_ref,
+                        wal_ref, dkk_ref, dvalid_ref, dckt_ref, dcdk_ref,
+                        dck_ref, h_ref, z0_ref, mask_ref, u_ref,
+                        sdense_ref, const_ref,
+                        zlane_ref, isdense_ref, ydense_ref):
+    beta = const_ref[0, 0]
+    vbeta = const_ref[0, 1]
+    z0 = z0_ref[...]                       # [G, 1]
+    mask = mask_ref[...] != 0              # [G, 1]
+    h = h_ref[...] != 0                    # [G, 1] head-word flag
+    u = u_ref[...]                         # [G, 1]
+    sdense = sdense_ref[...]               # [G, 1] perturbed dense total
+
+    # word-sparse segment (tail words only — wvalid is 0 on head rows)
+    wkk = wkk_ref[...]                     # [G, WP] lane topic ids
+    ew = ((wkk == z0) & mask).astype(jnp.float32)
+    wraw = ((wal_ref[...] + (wcdk_ref[...] - ew)) * (wckt_ref[...] - ew)
+            / (wck_ref[...] - ew + vbeta))
+    wval = jnp.maximum(jnp.where(wvalid_ref[...] != 0, wraw, 0.0), 0.0)
+    wcs = _lane_cumsum(wval)
+    sw = wcs[..., -1:]
+
+    # doc-sparse segment (B_k on tail rows, Y_k on head rows)
+    dkk = dkk_ref[...]                     # [G, DP]
+    ed = ((dkk == z0) & mask).astype(jnp.float32)
+    cross = jnp.where(h, dckt_ref[...] - ed, 0.0)
+    draw_ = ((dcdk_ref[...] - ed) * (beta + cross)
+             / (dck_ref[...] - ed + vbeta))
+    dval = jnp.maximum(jnp.where(dvalid_ref[...] != 0, draw_, 0.0), 0.0)
+    dcs = _lane_cumsum(dval)
+    sd = dcs[..., -1:]
+
+    # segment-ordered CDF [word | doc | dense], one uniform rescaled
+    total = sw + sd + sdense
+    x = u * total
+    yd = x - sw
+    ydense = yd - sd
+    in_w = x < sw
+    in_d = ~in_w & (yd < sd)
+    kw = _segment_draw(wcs, sw, x, wkk)
+    kd = _segment_draw(dcs, sd, yd, dkk)
+
+    zlane_ref[...] = jnp.where(in_w, kw, kd)
+    isdense_ref[...] = (~(in_w | in_d)).astype(jnp.int32)
+    ydense_ref[...] = ydense
+
+
+def _pad_lanes(x, value):
+    """Pad [T, cap] lane arrays to the 128-lane boundary, [T] scalars to
+    [T, 1] columns, and the token axis to the tile boundary."""
+    if x.ndim == 1:
+        x = x[:, None]
+    t, c = x.shape
+    cp = -(-c // 128) * 128 if c > 1 else 1
+    tp = -(-t // TILE_T) * TILE_T
+    return jnp.pad(x, ((0, tp - t), (0, cp - c)), constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparse_lane_call(wops: dict, dops: dict, h_t: jax.Array,
+                     z0: jax.Array, mask: jax.Array, u: jax.Array,
+                     sdense: jax.Array, beta, vbeta,
+                     interpret: bool = True):
+    """Pad, tile and launch the lane kernel; returns the unpadded
+    ``(z_lane, is_dense, y_dense)`` triple of ``_lane_draw_jnp``.
+
+    ``wops``/``dops`` are the gathered per-token lane operand dicts of
+    ``sparse_device.sparse_prologue`` — the wrapper adds no arithmetic of
+    its own, so the kernel consumes bit-identical inputs to the jnp lane
+    block.  Padding rows carry ``mask = 0`` and zero operands; padded
+    lanes are invalid (zero mass), which the kernel's counted draws never
+    select in a consumed branch."""
+    t = z0.shape[0]
+    args = [_pad_lanes(wops["kk"], 0),
+            _pad_lanes(wops["valid"].astype(jnp.int32), 0),
+            _pad_lanes(wops["ckt"], 0.0), _pad_lanes(wops["cdk"], 0.0),
+            _pad_lanes(wops["ck"], 0.0), _pad_lanes(wops["alpha"], 0.0),
+            _pad_lanes(dops["kk"], 0),
+            _pad_lanes(dops["valid"].astype(jnp.int32), 0),
+            _pad_lanes(dops["ckt"], 0.0), _pad_lanes(dops["cdk"], 0.0),
+            _pad_lanes(dops["ck"], 0.0),
+            _pad_lanes(h_t.astype(jnp.int32), 0),
+            _pad_lanes(z0.astype(jnp.int32), 0),
+            _pad_lanes(mask.astype(jnp.int32), 0),
+            _pad_lanes(u.astype(jnp.float32), 0.0),
+            _pad_lanes(sdense.astype(jnp.float32), 0.0),
+            jnp.array([[beta, vbeta, 0.0, 0.0]], jnp.float32)]
+    tp = args[0].shape[0]
+    wp, dp = args[0].shape[1], args[6].shape[1]
+    grid = (tp // TILE_T,)
+    row = lambda i: (i, 0)
+    rep = lambda i: (0, 0)
+    lane_spec = lambda c: pl.BlockSpec((TILE_T, c), row)
+    col = pl.BlockSpec((TILE_T, 1), row)
+    z_lane, is_dense, ydense = pl.pallas_call(
+        _sparse_lane_kernel,
+        grid=grid,
+        in_specs=[lane_spec(wp)] * 6 + [lane_spec(dp)] * 5
+        + [col] * 5 + [pl.BlockSpec((1, 4), rep)],
+        out_specs=[col, col, col],
+        out_shape=[jax.ShapeDtypeStruct((tp, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((tp, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((tp, 1), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+    return (z_lane[:t, 0], is_dense[:t, 0] != 0, ydense[:t, 0])

@@ -61,8 +61,15 @@ def run(cfg_name: str, workers: int = 64, sampler: str = "batched",
         alpha=s((k,), jnp.float32), beta=s((), jnp.float32),
         vbeta=s((), jnp.float32),
     )
+    sampler_args = ()
+    if sampler in ("sparse", "sparse_pallas"):
+        # shape-derived caps, like the engine facade: a dryrun has no
+        # corpus, so the per-row token capacity bounds the doc nonzeros
+        from repro.core.sparse_device import default_sparse_args
+        sampler_args = default_sparse_args(k, cap)
     fn = _iteration_shard_map(mesh, "w", sampler, sync_ck=True,
-                              data_axis="data" if dp > 1 else None)
+                              data_axis="data" if dp > 1 else None,
+                              sampler_args=sampler_args)
     with set_mesh(mesh):
         lowered = fn.lower(*state.values())
         compiled = lowered.compile()
@@ -138,8 +145,11 @@ def main() -> None:
     ap.add_argument("--data-parallel", type=int, default=1,
                     help="D: replicate the block ring over D doc shards "
                          "(hybrid 2D grid; needs D*workers devices)")
+    from repro.core.engine.rounds import available_samplers
+    # registry-derived, no "auto": a dryrun lowers one named sampler, and
+    # compile-only means interpret-mode Pallas needs no --force gate
     ap.add_argument("--sampler", default="batched",
-                    choices=["scan", "batched", "pallas", "mh", "mh_pallas"])
+                    choices=available_samplers())
     args = ap.parse_args()
     names = list(LDA_CONFIGS) if args.all else [args.config]
     for name in names:

@@ -25,6 +25,8 @@ import numpy as np
 
 from repro.core.infer import load_snapshot
 from repro.data.corpus import load_corpus, split_corpus
+from repro.launch.samplers import (infer_sampler_choices,
+                                   resolve_sampler_choice)
 from repro.serve.topic_infer import TopicInferenceServer
 
 
@@ -54,10 +56,15 @@ def main() -> None:
     ap.add_argument("--query-corpus", default="",
                     help="saved corpus whose docs become the queries "
                          "(with --snapshot)")
-    ap.add_argument("--sampler", choices=["scan", "mh", "mh_pallas"],
+    ap.add_argument("--sampler", choices=infer_sampler_choices(),
                     default="mh",
-                    help="fold-in sampler (DESIGN.md §11): exact scan or "
-                         "the O(1) alias-table MH pair")
+                    help="fold-in sampler (DESIGN.md §11–§12): exact "
+                         "scan, the O(1) alias-table MH pair, or the "
+                         "hybrid sparse family; 'auto' picks per "
+                         "platform")
+    ap.add_argument("--force", action="store_true",
+                    help="run an explicitly requested *_pallas sampler "
+                         "in interpret mode off-TPU instead of refusing")
     ap.add_argument("--sweeps", type=int, default=5)
     ap.add_argument("--queries", type=int, default=8)
     ap.add_argument("--query-len", type=int, default=32)
@@ -75,6 +82,7 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     args = ap.parse_args()
+    args.sampler = resolve_sampler_choice(args.sampler, force=args.force)
 
     if args.snapshot:
         snap = load_snapshot(args.snapshot)

@@ -22,18 +22,25 @@ from repro.core.metrics import topic_recovery_score
 from repro.core.model_parallel import ModelParallelLDA
 from repro.data.corpus import split_corpus
 from repro.data.synthetic import synthetic_corpus
+from repro.launch.samplers import (infer_sampler_choices,
+                                   resolve_sampler_choice,
+                                   train_sampler_choices)
 from repro.train.checkpoint import save_checkpoint
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", choices=["mp", "dp"], default="mp")
-    ap.add_argument("--sampler",
-                    choices=["scan", "batched", "pallas", "mh", "mh_pallas"],
+    ap.add_argument("--sampler", choices=train_sampler_choices(),
                     default="scan",
-                    help="per-block sampler: exact scan, word-frozen "
-                         "batched/pallas, or O(1) alias-table MH "
-                         "(DESIGN.md §9)")
+                    help="per-block sampler from the engine registry: "
+                         "exact scan, word-frozen batched/pallas, O(1) "
+                         "alias-table MH, or the hybrid sparse family "
+                         "(DESIGN.md §9, §12); 'auto' picks the Pallas "
+                         "form on TPU and the jnp twin elsewhere")
+    ap.add_argument("--force", action="store_true",
+                    help="run an explicitly requested *_pallas sampler "
+                         "in interpret mode off-TPU instead of refusing")
     ap.add_argument("--table-lifetime",
                     choices=["auto", "round", "iteration"], default="auto",
                     help="MH proposal-table build schedule (DESIGN.md "
@@ -66,13 +73,16 @@ def main() -> None:
     ap.add_argument("--holdout-sweeps", type=int, default=5,
                     help="fold-in Gibbs sweeps per holdout evaluation")
     ap.add_argument("--holdout-sampler", default="scan",
-                    choices=["scan", "mh", "mh_pallas"],
+                    choices=infer_sampler_choices(),
                     help="fold-in sampler for the holdout eval ('scan' "
                          "avoids rebuilding alias tables every snapshot)")
     ap.add_argument("--snapshot-out", default="",
                     help="write the final frozen serving snapshot "
                          "(counts .npz consumed by lda_infer)")
     args = ap.parse_args()
+    args.sampler = resolve_sampler_choice(args.sampler, force=args.force)
+    args.holdout_sampler = resolve_sampler_choice(args.holdout_sampler,
+                                                  force=args.force)
 
     corpus, phi, _ = synthetic_corpus(args.docs, args.vocab, args.topics,
                                       args.doc_len, seed=args.seed)

@@ -1,0 +1,59 @@
+"""CLI sampler selection: registry-derived choices + the ``auto`` probe.
+
+The launch drivers (`lda_train`, `lda_infer`) used to hard-code their
+``--sampler`` choice lists, so every new registry sampler meant touching
+every CLI.  Choices now come from the engine registry itself
+(`engine/rounds.py`), plus the pseudo-sampler ``auto``:
+
+* ``auto`` resolves per platform: the Pallas kernels on TPU, their jnp
+  twins elsewhere.  The pairs draw identically, so ``auto`` never
+  changes a chain — only which compiled form runs it.
+* Off TPU, an EXPLICITLY requested ``*_pallas`` sampler runs the kernel
+  in interpret mode — correct (the bit-identity tests rely on it) but
+  slow at real workload sizes (the repo-root BENCH digest shows
+  ``mh_pallas`` collapsing 208→36 q/s at serving batch 32 on CPU), so
+  the drivers refuse it unless ``--force`` is given.
+"""
+from __future__ import annotations
+
+
+def train_sampler_choices() -> list:
+    """``--sampler`` choices for training: every registered engine
+    sampler, plus ``auto``."""
+    from repro.core.engine.rounds import available_samplers
+    return available_samplers() + ["auto"]
+
+
+def infer_sampler_choices() -> list:
+    """``--sampler`` choices for fold-in/serving: ``scan``, the
+    table-capable family, the sparse family, plus ``auto`` — i.e. every
+    registry sampler `infer.fold_in` can run against a frozen snapshot."""
+    from repro.core.engine.rounds import available_samplers, table_capable
+    names = ["scan"] + [m for m in available_samplers()
+                        if table_capable(m)
+                        or m in ("sparse", "sparse_pallas")]
+    return names + ["auto"]
+
+
+def resolve_sampler_choice(name: str, *, force: bool = False,
+                           auto_tpu: str = "mh_pallas",
+                           auto_default: str = "mh") -> str:
+    """Resolve a CLI ``--sampler`` value to a registry sampler name.
+
+    ``auto`` picks the Pallas form on TPU and the jnp form elsewhere
+    (distribution-identical either way).  An explicit ``*_pallas`` off
+    TPU exits with guidance unless ``force`` — interpret mode is a
+    validation vehicle, not a serving path.
+    """
+    import jax
+    on_tpu = jax.default_backend() == "tpu"
+    if name == "auto":
+        return auto_tpu if on_tpu else auto_default
+    if name.endswith("_pallas") and not on_tpu and not force:
+        raise SystemExit(
+            f"--sampler {name}: Pallas kernels run in interpret mode on "
+            f"{jax.default_backend()!r} — orders of magnitude slower at "
+            f"real sizes (see BENCH_e2e.json). Use --sampler auto, the "
+            f"jnp twin {name.removesuffix('_pallas')!r}, or pass --force "
+            f"to run interpret mode anyway.")
+    return name

@@ -39,12 +39,13 @@ def bucket_size(n: int, floor: int = 1) -> int:
 class TopicInferenceServer:
     """Serve topic mixtures for unseen docs from a frozen snapshot.
 
-    ``sampler`` is ``"scan"`` (exact CGS) or the O(1) MH pair
-    ``"mh"``/``"mh_pallas"`` — for the MH family the snapshot's packed
-    word alias tables are built once at server construction and shared
-    by every query (the LightLDA frozen-model ideal).  Randomness flows
-    from one seeded generator, so a server's response stream is
-    reproducible end to end.
+    ``sampler`` is ``"scan"`` (exact CGS), the O(1) MH pair
+    ``"mh"``/``"mh_pallas"``, or the hybrid ``"sparse"`` family
+    (DESIGN.md §12) — per-snapshot derived state (packed word alias
+    tables for MH, the dense-segment cumsum for sparse) is built once at
+    server construction and shared by every query (the LightLDA
+    frozen-model ideal).  Randomness flows from one seeded generator, so
+    a server's response stream is reproducible end to end.
     """
 
     def __init__(self, snapshot: ModelSnapshot, sampler: str = "mh",
@@ -56,7 +57,9 @@ class TopicInferenceServer:
         self.min_batch_bucket = int(min_batch_bucket)
         self.min_token_bucket = int(min_token_bucket)
         self._rng = np.random.default_rng(seed)
-        if sampler != "scan":
+        if sampler in ("sparse", "sparse_pallas"):
+            snapshot.sparse_state()       # build once, serve many
+        elif sampler != "scan":
             snapshot.ensure_tables()      # build once, serve many
         # serving observability: how many calls landed in each bucket
         # (tests assert reuse; ops would watch for bucket explosion)

@@ -24,8 +24,9 @@ from repro.core.counts import build_counts, check_invariants
 from repro.core.sampler import (conditional_eq1, conditional_eq3,
                                 gibbs_sweep_np, sample_from_mass,
                                 sweep_block_batched, sweep_block_scan)
-from repro.core.sparse import bucket_masses, cache_recompute_count, \
-    sparse_gibbs_sweep_np
+from repro.core.sparse import (bucket_masses, cache_recompute_count,
+                               sparse_gibbs_sweep_np,
+                               sparse_gibbs_sweep_np_reference)
 
 
 if HAVE_HYPOTHESIS:
@@ -92,6 +93,39 @@ def test_numpy_vs_sparse_sweep_identical_draws():
     # the draws define the same distribution; counts must stay conserved
     state = build_counts(doc, word, z_sparse, 15, 25, 6)
     check_invariants(state, doc.shape[0])
+
+
+@pytest.mark.parametrize("seed,ordering", [(4, "natural"), (11, "natural"),
+                                           (7, "word_major"),
+                                           (9, "shuffled")])
+def test_sparse_incremental_matches_reference_bitwise(seed, ordering):
+    """The incremental A/B cache sweep is bit-for-bit the per-token
+    full-rebuild reference: same draws, same mutated counts — including
+    under visit orders that thrash the per-doc cache (word-major,
+    shuffled) and adversarial u -> 1.0 clamp uniforms."""
+    rng = np.random.default_rng(seed)
+    doc, word, z, cdk, ckt, ck = _random_state(rng)
+    n = doc.shape[0]
+    u = rng.random(n)
+    u[:: n // 7] = 1.0                       # exercise the clamp paths
+    u[1:: n // 5] = np.nextafter(1.0, 0.0)
+    alpha = rng.random(6) + 0.01
+    if ordering == "natural":
+        order = None
+    elif ordering == "word_major":
+        order = np.lexsort((doc, word))
+    else:
+        order = rng.permutation(n)
+    cdk_i, ckt_i, ck_i = cdk.copy(), ckt.copy(), ck.copy()
+    cdk_r, ckt_r, ck_r = cdk.copy(), ckt.copy(), ck.copy()
+    z_inc = sparse_gibbs_sweep_np(cdk_i, ckt_i, ck_i, doc, word, z, u,
+                                  alpha, 0.01, order=order)
+    z_ref = sparse_gibbs_sweep_np_reference(cdk_r, ckt_r, ck_r, doc, word,
+                                            z, u, alpha, 0.01, order=order)
+    np.testing.assert_array_equal(z_inc, z_ref)
+    np.testing.assert_array_equal(cdk_i, cdk_r)
+    np.testing.assert_array_equal(ckt_i, ckt_r)
+    np.testing.assert_array_equal(ck_i, ck_r)
 
 
 def test_scan_sweep_matches_numpy_oracle():

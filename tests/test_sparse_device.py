@@ -1,0 +1,251 @@
+"""Structural layer of the hybrid sparse sampler family (DESIGN.md §12).
+
+The sparse family shares the MH family's two-layer verification story
+(`tests/test_mh_stats.py` docstring): the draws are frozen-count batched
+— distribution-equal but not trajectory-equal to exact ``scan`` — so the
+distributional claim lives in `tests/test_sparse_stats.py`, while
+everything around the draw is anchored bitwise here:
+
+* the mass DECOMPOSITION is algebra, not sampling: word-lane + doc-lane
+  + perturbed-dense segments must reassemble the eq.-(1) conditional of
+  the frozen counts exactly (up to f32 association), head and tail words
+  alike;
+* engine runs replay draw-for-draw against the `kvstore` host oracle —
+  which resolves the SAME jitted sampler from the registry — across the
+  (D, M, S) grid;
+* the vmap and shard_map backends agree bitwise, and ``sparse_pallas``
+  is a drop-in for ``sparse`` (the Pallas lane kernel == the jnp lane
+  block), including under a tiny ``wcap`` that forces the dense-head
+  fallback;
+* serving: the sparse fold-in equals its serial host replay, and the
+  pallas alias draws identically.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine.api import ModelParallelLDA
+from repro.core.engine.rounds import available_samplers
+from repro.core.infer import fold_in, pack_queries
+from repro.core.kvstore import HostModelParallelLDA, fold_in_oracle
+from repro.core.sampler import conditional_eq1
+from repro.core.sparse_device import (default_sparse_args, lane_masses_jnp,
+                                      sparse_prologue)
+from repro.data.synthetic import synthetic_corpus
+
+K = 8
+# wcap = 2 forces most vocabulary rows over the head threshold (dense-
+# head fallback path); dcap = K keeps the doc-lane bound exact.
+HEAD_HEAVY_ARGS = (("dcap", K), ("wcap", 2))
+
+
+@pytest.fixture(scope="module")
+def sparse_corpus():
+    corpus, _, _ = synthetic_corpus(
+        num_docs=40, vocab_size=120, num_topics=K, doc_len=30,
+        alpha=0.5, seed=0, peaked=False)
+    return corpus
+
+
+# ---------------------------------------------------------------------------
+# The decomposition is exact algebra on the frozen counts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wcap", [4, 64])
+def test_sparse_mass_decomposition_matches_conditional(wcap):
+    """Reassembling the three CDF segments — word lanes, doc lanes, and
+    the δ-perturbed dense row — recovers the eq.-(1) conditional of the
+    round-frozen counts with the ¬dn exclusion, for every token, at a
+    wcap that mixes head/tail words AND one where every word is tail."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(3)
+    k, vb, dloc = 12, 8, 5
+    # long-tail word profile BY CONSTRUCTION: the hot rows exceed
+    # wcap = 4 distinct topics, the rare rows cannot
+    occ = np.array([30, 25, 15, 8, 3, 2, 2, 1])
+    t = int(occ.sum())
+    doc = rng.integers(0, dloc, t).astype(np.int32)
+    woff = np.repeat(np.arange(vb, dtype=np.int32), occ)
+    z = rng.integers(0, k, t).astype(np.int32)
+    mask = rng.random(t) < 0.9                  # some padding tokens too
+    cdk = np.zeros((dloc, k), np.int32)
+    ckt = np.zeros((vb, k), np.int32)
+    np.add.at(cdk, (doc[mask], z[mask]), 1)
+    np.add.at(ckt, (woff[mask], z[mask]), 1)
+    ck = ckt.sum(0) + rng.integers(0, 5, k)     # + other blocks' tokens
+    alpha = rng.random(k).astype(np.float32) + 0.05
+    beta, vbeta = np.float32(0.01), np.float32(0.01 * vb)
+    dcap = k
+
+    ops = sparse_prologue(jnp.asarray(cdk), jnp.asarray(ckt),
+                          jnp.asarray(ck.astype(np.int32)),
+                          jnp.asarray(doc), jnp.asarray(woff),
+                          jnp.asarray(z), jnp.asarray(mask),
+                          jnp.asarray(alpha), beta, vbeta,
+                          dcap=dcap, wcap=wcap)
+    wcs, sw, dlcs, sd = lane_masses_jnp(ops["wops"], ops["dops"],
+                                        ops["h_t"], jnp.asarray(z),
+                                        jnp.asarray(mask), beta, vbeta)
+    h_t = np.asarray(ops["h_t"])
+    if wcap == 4:
+        assert h_t.any() and (~h_t).any(), "want a head/tail mixture"
+    wval = np.diff(np.asarray(wcs), prepend=0.0)        # lane masses back
+    dval = np.diff(np.asarray(dlcs), prepend=0.0)
+    dmass = np.diff(np.asarray(ops["dcs"]), prepend=0.0)  # [Vb, K] dense
+    delta = np.asarray(ops["delta"])
+    wkk = np.asarray(ops["wops"]["kk"])
+    wvalid = np.asarray(ops["wops"]["valid"])
+    dkk = np.asarray(ops["dops"]["kk"])
+    dvalid = np.asarray(ops["dops"]["valid"])
+
+    for i in range(t):
+        p = dmass[woff[i]].copy()
+        p[z[i]] += delta[i]
+        np.add.at(p, wkk[i][wvalid[i]], wval[i][wvalid[i]])
+        np.add.at(p, dkk[i][dvalid[i]], dval[i][dvalid[i]])
+        e = int(mask[i])                        # ¬dn exclusion at z0
+        ref = np.asarray(conditional_eq1(
+            jnp.asarray(ckt[woff[i]] - e * (np.arange(k) == z[i])),
+            jnp.asarray(cdk[doc[i]] - e * (np.arange(k) == z[i])),
+            jnp.asarray(ck - e * (np.arange(k) == z[i])),
+            jnp.asarray(alpha), beta, vbeta))
+        # tolerance: lane masses are reconstructed as diffs of the f32
+        # cumsum, which loses low bits against a large running prefix
+        np.testing.assert_allclose(p, ref, rtol=1e-3, atol=1e-6)
+        # the drawable total equals the segment totals the draw uses
+        tot = float(np.asarray(sw)[i] + np.asarray(sd)[i]
+                    + np.asarray(ops["sdense"])[i])
+        np.testing.assert_allclose(tot, ref.sum(), rtol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# Engine == host oracle, draw for draw, across the (D, M, S) grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,s,d", [
+    (2, 1, 1), (2, 2, 1), (2, 1, 2), (2, 2, 2),
+])
+def test_sparse_host_oracle_replay_draw_for_draw(sparse_corpus, m, s, d):
+    """Device sparse == kvstore host-oracle sparse, bit for bit: the
+    oracle resolves the SAME jitted sampler (and the same
+    `default_sparse_args` derivation) from the registry, so engine runs
+    replay exactly at every pipeline/data-replication geometry."""
+    lda = ModelParallelLDA(sparse_corpus, K, num_workers=m, seed=0,
+                           sampler_mode="sparse", blocks_per_worker=s,
+                           data_parallel=d)
+    host = HostModelParallelLDA(sparse_corpus, K, num_workers=m, seed=0,
+                                sampler="sparse", ck_sync="round",
+                                blocks_per_worker=s, data_parallel=d)
+    for _ in range(2):
+        lda.step()
+        host.step()
+    np.testing.assert_array_equal(lda.assignments(), host.assignments())
+    np.testing.assert_array_equal(np.asarray(lda.gather_counts().ckt),
+                                  host.gather_ckt())
+
+
+@pytest.mark.parametrize("sampler", ["sparse", "sparse_pallas"])
+def test_sparse_backends_bit_identical(sparse_corpus, sampler):
+    """vmap and shard_map run the same sparse worker_round: bitwise-equal
+    states after two iterations, for both family members."""
+    import jax
+    if len(jax.devices()) < 2:
+        pytest.skip("needs 2 devices")
+    a = ModelParallelLDA(sparse_corpus, K, num_workers=2, seed=0,
+                         sampler_mode=sampler, backend="vmap")
+    b = ModelParallelLDA(sparse_corpus, K, num_workers=2, seed=0,
+                         sampler_mode=sampler, backend="shard_map")
+    for _ in range(2):
+        a.step()
+        b.step()
+    for x, y in [(a.state.cdk, b.state.cdk), (a.state.ckt, b.state.ckt),
+                 (a.state.ck_local, b.state.ck_local),
+                 (a.state.z, b.state.z)]:
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("sampler_args", [None, HEAD_HEAVY_ARGS])
+def test_sparse_pallas_engine_equals_sparse_engine(sparse_corpus,
+                                                   sampler_args):
+    """``sparse_pallas`` is a drop-in: same chain bit for bit (the Pallas
+    lane kernel == the jnp lane block around the shared prologue and
+    epilogue) — at the derived caps AND at a head-heavy wcap = 2 where
+    most words overflow into the dense-head fallback."""
+    a = ModelParallelLDA(sparse_corpus, K, num_workers=2, seed=0,
+                         sampler_mode="sparse", sampler_args=sampler_args)
+    b = ModelParallelLDA(sparse_corpus, K, num_workers=2, seed=0,
+                         sampler_mode="sparse_pallas",
+                         sampler_args=sampler_args)
+    for _ in range(2):
+        a.step()
+        b.step()
+    np.testing.assert_array_equal(np.asarray(a.state.z),
+                                  np.asarray(b.state.z))
+    np.testing.assert_array_equal(np.asarray(a.state.ckt),
+                                  np.asarray(b.state.ckt))
+    np.testing.assert_array_equal(np.asarray(a.state.cdk),
+                                  np.asarray(b.state.cdk))
+
+
+# ---------------------------------------------------------------------------
+# Serving: sparse fold-in == host replay, pallas alias identical
+# ---------------------------------------------------------------------------
+
+def _snapshot_and_queries(corpus, q=4, t=18, sweeps=3):
+    lda = ModelParallelLDA(corpus, K, num_workers=2, seed=0)
+    lda.run(2)
+    snap = lda.snapshot()
+    rng = np.random.default_rng(1)
+    docs = [rng.integers(0, corpus.vocab_size,
+                         size=int(n)).astype(np.int32)
+            for n in rng.integers(3, t + 1, size=q)]
+    word, mask = pack_queries(docs, t_pad=t)
+    z0 = rng.integers(0, K, size=word.shape).astype(np.int32)
+    u = rng.random((sweeps, *word.shape), np.float32)
+    return snap, word, mask, z0, u
+
+
+def test_sparse_fold_in_matches_host_oracle(sparse_corpus):
+    snap, word, mask, z0, u = _snapshot_and_queries(sparse_corpus)
+    res = fold_in(snap, word, mask, sampler="sparse", z0=z0, u=u)
+    cdk_o, z_o = fold_in_oracle(snap, word, mask, z0, u, sampler="sparse")
+    np.testing.assert_array_equal(res.z, z_o)
+    np.testing.assert_array_equal(res.cdk, cdk_o)
+
+
+def test_sparse_fold_in_pallas_alias_bitwise(sparse_corpus):
+    """At serve time the model is frozen, so one jnp implementation
+    serves both names — the alias must be draw-identical."""
+    snap, word, mask, z0, u = _snapshot_and_queries(sparse_corpus)
+    a = fold_in(snap, word, mask, sampler="sparse", z0=z0, u=u)
+    b = fold_in(snap, word, mask, sampler="sparse_pallas", z0=z0, u=u)
+    np.testing.assert_array_equal(a.z, b.z)
+    np.testing.assert_array_equal(a.cdk, b.cdk)
+
+
+# ---------------------------------------------------------------------------
+# Registry / CLI plumbing
+# ---------------------------------------------------------------------------
+
+def test_sparse_registered_and_cli_choices():
+    from repro.launch.samplers import (infer_sampler_choices,
+                                       resolve_sampler_choice,
+                                       train_sampler_choices)
+    regs = available_samplers()
+    assert "sparse" in regs and "sparse_pallas" in regs
+    for choices in (train_sampler_choices(), infer_sampler_choices()):
+        assert {"sparse", "sparse_pallas", "auto"} <= set(choices)
+    import jax
+    if jax.default_backend() != "tpu":
+        with pytest.raises(SystemExit, match="interpret mode"):
+            resolve_sampler_choice("sparse_pallas")
+        assert resolve_sampler_choice("sparse_pallas",
+                                      force=True) == "sparse_pallas"
+        assert resolve_sampler_choice("auto") == "mh"
+    assert resolve_sampler_choice("sparse") == "sparse"
+
+
+def test_default_sparse_args_derivation():
+    assert default_sparse_args(4096, 16) == (("dcap", 16), ("wcap", 32))
+    assert default_sparse_args(8, 300) == (("dcap", 8), ("wcap", 8))
+    # hashable — rides jit cache keys and facade attributes
+    hash(default_sparse_args(64, 64))
