@@ -15,10 +15,20 @@ Four parts:
       (DESIGN.md §8) at a fixed total worker budget: resident bytes stay
       a function of S·M only, distributed bytes grow with D, and the
       per-round-synced staleness error stays orders below the AD-LDA
-      corner (D = R, M = 1).
+      corner (D = R, M = 1);
+  (e) the K ≥ 64k big-model point (DESIGN.md §13): a subprocess streams
+      a sharded zipf corpus through `StreamingLDA` at V×K = 8192×65536
+      (2 GiB of dense counts), trains, and exports a sharded serving
+      snapshot — while ``ru_maxrss`` stays well under the full model
+      size, the measured proof that neither the corpus nor the model is
+      ever resident.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 from benchmarks.common import emit_csv_row, save_result
@@ -167,16 +177,84 @@ def measured(seed=0):
     return rows
 
 
+_BIG_STREAM_SCRIPT = r"""
+import json, os, resource, sys, tempfile, time
+workdir = sys.argv[1]
+vocab, topics, m, s = 8192, 65536, 2, 8
+from repro.data.stream import ShardedCorpus, write_zipf_stream
+from repro.core.engine.streaming import StreamingLDA
+write_zipf_stream(os.path.join(workdir, "corpus"), num_docs=256,
+                  vocab_size=vocab, doc_len=32, zipf_a=1.1, seed=0,
+                  docs_per_shard=64)
+sc = ShardedCorpus(os.path.join(workdir, "corpus"))
+lda = StreamingLDA(sc, os.path.join(workdir, "run"), topics, m,
+                   blocks_per_worker=s, sampler_mode="sparse", seed=0)
+iters = []
+for _ in range(2):
+    t0 = time.perf_counter()
+    lda.step()
+    iters.append(round(time.perf_counter() - t0, 2))
+lda.save_checkpoint()
+lda.save_snapshot_sharded(os.path.join(workdir, "snap"))
+rep = lda.memory_report()
+peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+print("BIGSTREAM " + json.dumps({
+    "vocab": vocab, "topics": topics, "num_workers": m,
+    "blocks_per_worker": s, "num_blocks": rep["num_blocks"],
+    "num_tokens": sc.num_tokens, "sampler": "sparse",
+    "resident_block_bytes": rep["resident_block_bytes"],
+    "total_model_bytes": rep["total_model_bytes"],
+    "peak_rss_bytes": peak, "iter_seconds": iters,
+    "log_likelihood": None}))
+"""
+
+
+def big_model_stream():
+    """The K = 65536 point: train + checkpoint + sharded-snapshot export
+    entirely out of core, with the OS-measured peak RSS as the resident
+    ceiling.  Runs in a subprocess so ``ru_maxrss`` reflects this
+    workload alone, not whatever the benchmark driver touched before."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.abspath(
+            os.path.join(os.path.dirname(__file__), "..", "src"))
+        out = subprocess.run(
+            [sys.executable, "-c", _BIG_STREAM_SCRIPT, td], env=env,
+            capture_output=True, text=True, timeout=3600)
+        if out.returncode != 0:
+            return {"error": out.stderr[-2000:]}
+        line = [ln for ln in out.stdout.splitlines()
+                if ln.startswith("BIGSTREAM ")][0]
+        row = json.loads(line[len("BIGSTREAM "):])
+    row["peak_rss_gib"] = round(row["peak_rss_bytes"] / 2 ** 30, 3)
+    row["total_model_gib"] = round(row["total_model_bytes"] / 2 ** 30, 3)
+    row["resident_block_mib"] = round(
+        row["resident_block_bytes"] / 2 ** 20, 1)
+    row["rss_fraction_of_model"] = round(
+        row["peak_rss_bytes"] / row["total_model_bytes"], 3)
+    # the whole point: the full dense model never became resident
+    row["out_of_core"] = row["peak_rss_bytes"] < row["total_model_bytes"]
+    return row
+
+
 def run():
     out = {"feasibility_paper_scale": feasibility(),
            "measured_scaled_down": measured(),
            "blocks_per_worker_sweep": pipeline_sweep(),
-           "hybrid_dms_sweep": hybrid_sweep()}
+           "hybrid_dms_sweep": hybrid_sweep(),
+           "big_model_stream_64k": big_model_stream()}
     save_result("table1_model_size", out)
     big = out["feasibility_paper_scale"][-1]
     m = out["measured_scaled_down"][-1]
     deep = out["blocks_per_worker_sweep"][-1]
     hyb = out["hybrid_dms_sweep"][1]          # (D=2, M=4, S=1) hybrid row
+    stream = out["big_model_stream_64k"]
+    stream_note = (
+        f"k64k_peak_rss_gib={stream['peak_rss_gib']};"
+        f"k64k_model_gib={stream['total_model_gib']};"
+        f"k64k_out_of_core={stream['out_of_core']}"
+        if "error" not in stream else "k64k=ERROR")
     emit_csv_row("table1_model_size", m["mp"]["seconds"] * 1e6,
                  f"bigram10k_dp_dense_gib={big['dense_dp_per_worker_gib']};"
                  f"mp_dense_gib={big['dense_mp_per_worker_gib']};"
@@ -185,7 +263,7 @@ def run():
                  f"s{deep['blocks_per_worker']}_resident_frac="
                  f"{deep['resident_fraction']};"
                  f"hybrid_d{hyb['data_parallel']}m{hyb['num_workers']}"
-                 f"_delta={hyb['delta_error']:.5f}")
+                 f"_delta={hyb['delta_error']:.5f};{stream_note}")
     return out
 
 

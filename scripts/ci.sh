@@ -68,3 +68,23 @@ PYTHONHASHSEED=0 \
     --sampler sparse --queries 8 --query-len 24 --sweeps 3
 rm -rf "$SPARSE_DIR"
 python -m benchmarks.bench_sparse --smoke
+
+# Pass 7: out-of-core streaming + bit-exact resume smoke (DESIGN.md §13).
+# Shard a corpus to disk, train the streaming engine 2 iterations with
+# per-iteration checkpoints, then "crash" and resume the run to 4
+# iterations from the workdir alone (no corpus flags — geometry, sampler
+# and rng all come from the checkpoint), export a SHARDED serving
+# snapshot, and serve it row-restricted through lda_infer
+# --snapshot-dir.  --sampler auto also exercises the measured regime
+# map's (K, doc-len) lookup on a real manifest.
+STREAM_DIR="$(mktemp -d)"
+python -m repro.data.stream --out "$STREAM_DIR/corpus" --zipf 1.1 \
+    --docs 64 --vocab 128 --doc-len 24 --shards 4 --seed 11
+python -m repro.launch.lda_train --corpus-dir "$STREAM_DIR/corpus" \
+    --workdir "$STREAM_DIR/run" --topics 8 --workers 2 \
+    --blocks-per-worker 2 --iters 2 --sampler auto --checkpoint-every 1
+python -m repro.launch.lda_train --workdir "$STREAM_DIR/run" --resume \
+    --iters 4 --checkpoint-every 2 --snapshot-dir "$STREAM_DIR/snap"
+python -m repro.launch.lda_infer --snapshot-dir "$STREAM_DIR/snap" \
+    --queries 8 --query-len 16 --sweeps 3 --sampler scan
+rm -rf "$STREAM_DIR"

@@ -54,6 +54,8 @@ sync points per iteration).
 """
 from __future__ import annotations
 
+import json
+import os
 from typing import Callable, List, Optional
 
 import jax
@@ -308,6 +310,118 @@ class ModelParallelLDA:
             if callback is not None:
                 callback(i, self)
         return history
+
+    # -- checkpoint / resume -----------------------------------------------
+    CKPT_FORMAT = "mp-lda-ckpt-v1"
+
+    def save_checkpoint(self, path: str) -> str:
+        """Serialize the full chain state to one ``.npz``: the six
+        ``MPState`` arrays (the slot queues ``ckt``/``block_id`` included),
+        the host rng's bit-generator state, the iteration count, and a
+        config echo.  Taken at an iteration boundary — the only place
+        ``step()`` returns control — where the traveling-table queue is
+        empty (tables are iteration-local derived state, DESIGN.md §10)
+        and ``ck_synced`` is reconciled, so nothing sampler- or
+        backend-specific needs saving: a checkpoint written by the vmap
+        backend resumes bit-exactly on shard_map and vice versa.
+
+        The write is atomic (temp file + ``os.replace``), so a kill during
+        checkpointing leaves either the old file or the new one, never a
+        torn state."""
+        from repro.data.corpus import npz_stem
+        s = self.state
+        cfg = {
+            "format": self.CKPT_FORMAT,
+            "num_topics": self.num_topics,
+            "num_workers": self.num_workers,
+            "blocks_per_worker": self.blocks_per_worker,
+            "data_parallel": self.data_parallel,
+            "sampler_mode": self.sampler_mode,
+            "sampler_args": [list(p) for p in self.sampler_args],
+            "table_lifetime": self.table_lifetime,
+            "sync_ck": self.sync_ck,
+            "alpha": np.asarray(self.alpha, np.float32).tolist(),
+            "beta": self.beta,
+            "iteration_count": self.iteration_count,
+            # corpus fingerprint: resume re-derives the static layout from
+            # the corpus, so the wrong corpus must be rejected loudly
+            "num_tokens": self.corpus.num_tokens,
+            "vocab_size": self.corpus.vocab_size,
+            "num_docs": self.corpus.num_docs,
+        }
+        rng_state = self._rng.bit_generator.state
+        stem = npz_stem(path)
+        os.makedirs(os.path.dirname(stem) or ".", exist_ok=True)
+        tmp = stem + ".tmp.npz"
+        np.savez(tmp,
+                 cdk=np.asarray(s.cdk), ckt=np.asarray(s.ckt),
+                 block_id=np.asarray(s.block_id),
+                 ck_synced=np.asarray(s.ck_synced),
+                 ck_local=np.asarray(s.ck_local), z=np.asarray(s.z),
+                 config=np.frombuffer(
+                     json.dumps(cfg).encode(), np.uint8),
+                 rng_state=np.frombuffer(
+                     json.dumps(rng_state).encode(), np.uint8))
+        os.replace(tmp, stem + ".npz")
+        return stem + ".npz"
+
+    @classmethod
+    def resume(cls, corpus: Corpus, path: str, backend: str = "vmap",
+               mesh: Optional[Mesh] = None, axis: str = "w",
+               data_axis: str = "data",
+               track_error: bool = True) -> "ModelParallelLDA":
+        """Rebuild a trainer from :meth:`save_checkpoint` output.  The
+        geometry, sampler, and hyperparameters come from the checkpoint's
+        config echo; the backend is the caller's choice (checkpoints are
+        backend-agnostic).  The restored run is draw-for-draw identical
+        to one that never stopped: the static layout is a pure function
+        of ``(corpus, M, S, D)``, the chain state is restored bitwise,
+        and the rng continues from the saved bit-generator state."""
+        from repro.data.corpus import npz_stem
+        stem = npz_stem(path)
+        with np.load(stem + ".npz") as data:
+            try:
+                cfg = json.loads(bytes(data["config"]).decode())
+                rng_state = json.loads(bytes(data["rng_state"]).decode())
+                arrays = {k: np.asarray(data[k]) for k in
+                          ("cdk", "ckt", "block_id", "ck_synced",
+                           "ck_local", "z")}
+            except KeyError as e:
+                raise ValueError(
+                    f"{stem}.npz is not an engine checkpoint: "
+                    f"missing {e}") from e
+        if cfg.get("format") != cls.CKPT_FORMAT:
+            raise ValueError(
+                f"unknown checkpoint format {cfg.get('format')!r} in "
+                f"{stem}.npz; expected {cls.CKPT_FORMAT!r}")
+        for key in ("num_tokens", "vocab_size", "num_docs"):
+            if int(cfg[key]) != int(getattr(corpus, key)):
+                raise ValueError(
+                    f"corpus does not match checkpoint: {key} is "
+                    f"{getattr(corpus, key)}, checkpoint has {cfg[key]}")
+        lda = cls(corpus, num_topics=cfg["num_topics"],
+                  num_workers=cfg["num_workers"],
+                  alpha=np.asarray(cfg["alpha"], np.float32),
+                  beta=cfg["beta"],
+                  sampler_mode=cfg["sampler_mode"],
+                  sync_ck=cfg["sync_ck"], backend=backend, mesh=mesh,
+                  axis=axis, blocks_per_worker=cfg["blocks_per_worker"],
+                  data_parallel=cfg["data_parallel"],
+                  data_axis=data_axis,
+                  table_lifetime=cfg["table_lifetime"],
+                  track_error=track_error,
+                  sampler_args=tuple(
+                      tuple(p) for p in cfg["sampler_args"]))
+        lda.state = engine_state.MPState(
+            cdk=jnp.asarray(arrays["cdk"]),
+            ckt=jnp.asarray(arrays["ckt"]),
+            block_id=jnp.asarray(arrays["block_id"]),
+            ck_synced=jnp.asarray(arrays["ck_synced"]),
+            ck_local=jnp.asarray(arrays["ck_local"]),
+            z=jnp.asarray(arrays["z"]))
+        lda._rng.bit_generator.state = rng_state
+        lda.iteration_count = int(cfg["iteration_count"])
+        return lda
 
     # -- observation -------------------------------------------------------
     def gather_counts(self) -> CountState:

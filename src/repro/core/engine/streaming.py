@@ -1,0 +1,559 @@
+"""Out-of-core streaming trainer: the big-model regime (DESIGN.md §13).
+
+:class:`StreamingLDA` runs the exact model-parallel chain of
+:class:`~repro.core.engine.api.ModelParallelLDA` with BOTH halves of the
+state out of core:
+
+* the corpus stays in its sharded on-disk format (`data/stream.py`) and
+  is demultiplexed once into per-(grid row, block) token files under a
+  working directory — training never holds the full token stream;
+* the model blocks live in a disk-backed block store (one ``.npy`` file
+  per ``[Vb, K]`` block — the paper's key-value store made literal), and
+  at most ONE block (plus its traveling table, for the MH family) is in
+  memory at any time.
+
+Peak training memory is therefore bounded by the resident ``[Vb, K]``
+block and one in-flight row/block token group, independent of corpus
+size and of total model size ``V × K`` — the paper's capacity claim,
+measured by ``benchmarks/bench_model_size.py --big``.
+
+Bit-exactness.  The scheduler is the serial transcript of the SPMD
+engine — the same frozen-per-round semantics as the host oracle
+(`core/kvstore.py`): within a round every replica samples frozen
+round-start block copies and frozen ``{C_k}``, deltas are reconciled and
+committed at the round boundary.  The rng stream is the engine's own:
+numpy ``Generator`` fills arrays sequentially from the bit stream, so
+drawing ``z0`` chunk-by-chunk in disk-shard order and uniforms
+round-by-row in grid order reproduces the engine's one-shot
+``integers(0, K, N)`` / ``random((B, R, cap))`` draws bit-for-bit (the
+property is pinned by ``tests/test_stream_resume.py``).  Per-row calls
+into the SAME jitted registry samplers equal the engine's vmap over rows
+— the structural-equivalence argument the oracle already proves — so a
+streaming run is draw-for-draw identical to the in-memory engine at any
+``(D, M, S)``, any sampler, both table lifetimes.
+
+Checkpoint/resume.  The working directory *is* the persistent state:
+``static/`` holds the immutable layout, ``state/`` the mutable chain
+(blocks, ``C_k``, per-row ``z``/``cdk``, rng bit-generator state,
+iteration count).  :meth:`save_checkpoint` snapshots ``state/`` into
+``ckpt/`` with an atomic directory swap at an iteration boundary — where
+the table queue is empty and every replica agrees, so nothing
+sampler-specific needs saving — and :meth:`StreamingLDA.resume` restores
+it; a resumed run re-draws from the restored bit-generator state and is
+bit-identical to an uninterrupted one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import schedule as sched
+from repro.core.invindex import build_inverted_index
+from repro.data.stream import ShardedCorpus
+
+RUN_JSON = "run.json"
+PROGRESS_JSON = "progress.json"
+
+
+def _save_npy(path: str, arr: np.ndarray) -> None:
+    np.save(path, arr)
+
+
+def _rng_state_jsonable(state: dict) -> dict:
+    """numpy bit-generator state dicts are JSON-safe except for numpy
+    integer leaves — normalize to built-in ints recursively."""
+    def conv(x):
+        if isinstance(x, dict):
+            return {k: conv(v) for k, v in x.items()}
+        if isinstance(x, (np.integer,)):
+            return int(x)
+        return x
+    return conv(state)
+
+
+class StreamingLDA:
+    """Out-of-core model-parallel LDA over a sharded on-disk corpus.
+
+    Same chain as ``ModelParallelLDA(corpus, ...)`` with the same seed —
+    proven draw-for-draw by ``tests/test_stream_resume.py`` — but memory
+    bounded by one resident block + one in-flight token group.
+    """
+
+    def __init__(self, corpus: "ShardedCorpus | str", workdir: str,
+                 num_topics: int, num_workers: int,
+                 alpha: float = 0.1, beta: float = 0.01, seed: int = 0,
+                 sampler_mode: str = "scan", blocks_per_worker: int = 1,
+                 data_parallel: int = 1,
+                 table_lifetime: Optional[str] = None,
+                 sampler_args: Optional[tuple] = None):
+        from repro.core.engine.rounds import table_capable
+        if isinstance(corpus, str):
+            corpus = ShardedCorpus(corpus)
+        self.workdir = workdir
+        self.num_topics = int(num_topics)
+        self.num_workers = int(num_workers)
+        self.blocks_per_worker = int(blocks_per_worker)
+        self.data_parallel = int(data_parallel)
+        if self.blocks_per_worker < 1 or self.data_parallel < 1:
+            raise ValueError("blocks_per_worker and data_parallel must "
+                             "be >= 1")
+        self.alpha = np.full(self.num_topics, alpha, np.float32) \
+            if np.isscalar(alpha) else np.asarray(alpha, np.float32)
+        self.alpha_scalar = float(alpha) if np.isscalar(alpha) else None
+        self.beta = float(beta)
+        self.seed = int(seed)
+        self.sampler_mode = sampler_mode
+        if table_lifetime is None:
+            table_lifetime = ("iteration" if table_capable(sampler_mode)
+                              else "round")
+        if table_lifetime not in ("round", "iteration"):
+            raise ValueError(f"unknown table_lifetime {table_lifetime!r}")
+        if table_lifetime == "iteration" and not table_capable(sampler_mode):
+            raise ValueError(
+                "table_lifetime='iteration' needs a table-capable sampler "
+                f"(the MH family), got {sampler_mode!r}")
+        self.table_lifetime = table_lifetime
+        self.vocab_size = corpus.vocab_size
+        self.num_docs = corpus.num_docs
+        self.num_tokens = corpus.num_tokens
+        self.max_doc_len = corpus.max_doc_len
+        self.vbeta = float(beta * self.vocab_size)
+        if sampler_args is None:
+            if sampler_mode in ("sparse", "sparse_pallas"):
+                # same derivation as the engine facade (same corpus-level
+                # max doc length, recorded in the corpus manifest), so the
+                # identical jitted sampler instance runs both sides
+                from repro.core.sparse_device import default_sparse_args
+                sampler_args = default_sparse_args(self.num_topics,
+                                                   int(self.max_doc_len))
+            else:
+                sampler_args = ()
+        self.sampler_args = tuple(sampler_args)
+        self._resolve_sampler()
+        self.num_blocks = self.num_workers * self.blocks_per_worker
+        self.num_shards = self.data_parallel * self.num_workers
+        self.num_rounds = self.num_blocks
+        self.partition = sched.partition_vocab(self.vocab_size,
+                                               self.num_blocks)
+        sched.validate_schedule(self.num_workers, self.blocks_per_worker)
+        self._rng = np.random.default_rng(self.seed)
+        if os.path.exists(self._p("state", PROGRESS_JSON)):
+            raise ValueError(
+                f"workdir {workdir!r} already holds a run; use "
+                "StreamingLDA.resume() to continue it")
+        self._init_from_corpus(corpus)
+
+    # -- paths -------------------------------------------------------------
+    def _p(self, *parts: str) -> str:
+        return os.path.join(self.workdir, *parts)
+
+    def _block_path(self, blk: int, root: str = "state") -> str:
+        return self._p(root, "blocks", f"block_{blk:05d}.npy")
+
+    def _lay_path(self, g: int, b: int) -> str:
+        return self._p("static", "rows", f"row{g:04d}_b{b:04d}.npz")
+
+    def _z_path(self, g: int, b: int) -> str:
+        return self._p("state", "rows", f"row{g:04d}_z_b{b:04d}.npy")
+
+    def _cdk_path(self, g: int) -> str:
+        return self._p("state", "rows", f"row{g:04d}_cdk.npy")
+
+    # -- construction ------------------------------------------------------
+    def _resolve_sampler(self) -> None:
+        from repro.core.engine.rounds import (resolve_sampler,
+                                              resolve_table_sampler)
+        self._sampler_fn = (resolve_table_sampler(self.sampler_mode)
+                            if self.table_lifetime == "iteration"
+                            else resolve_sampler(self.sampler_mode,
+                                                 self.sampler_args))
+
+    def _row_docs(self, g: int) -> np.ndarray:
+        """Round-robin doc assignment — identical to `data/sharding.py`:
+        grid row ``g`` owns global docs ``{g, g + R, ...}``."""
+        return np.arange(g, self.num_docs, self.num_shards, dtype=np.int32)
+
+    @property
+    def dloc(self) -> int:
+        return -(-self.num_docs // self.num_shards)
+
+    @property
+    def resident_block_rows(self) -> int:
+        return self.partition.block_size
+
+    def _init_from_corpus(self, corpus: ShardedCorpus) -> None:
+        """Two streaming passes build the static layout and the initial
+        chain state; peak memory is one disk shard plus one grid row's
+        token slice (plus one ``[Vb, K]`` block during count scatter)."""
+        r_, b_ = self.num_shards, self.num_blocks
+        k, part = self.num_topics, self.partition
+        for sub in ("static/rows", "state/rows", "state/blocks", "tables"):
+            os.makedirs(self._p(*sub.split("/")), exist_ok=True)
+
+        # pass 1: per-(row, block) token counts -> common capacity, and the
+        # z0 chunk draws (engine-identical: integers(0, K, N) consumed in
+        # stream order), parked next to their shard for pass 2
+        counts = np.zeros((r_, b_), np.int64)
+        for shard in corpus.iter_shards():
+            z0c = self._rng.integers(0, k, size=shard.num_tokens) \
+                .astype(np.int32)
+            _save_npy(self._p("static", f"z0_shard{shard.index:05d}.npy"),
+                      z0c)
+            row = shard.doc % r_
+            blk = part.block_of_word(shard.word)
+            np.add.at(counts, (row, blk), 1)
+        self.capacity = max(1, int(counts.max(initial=0)))
+
+        # pass 2: per grid row, gather its token slice (global stream
+        # order), build the inverted-index layout, scatter initial counts
+        tok_start = np.zeros(corpus.num_shards + 1, np.int64)
+        for i, entry in enumerate(corpus.meta["shards"]):
+            tok_start[i + 1] = tok_start[i] + int(entry["num_tokens"])
+        for g in range(r_):
+            docs_g, words_g, z_g, tid_g = [], [], [], []
+            for shard in corpus.iter_shards():
+                m = (shard.doc % r_) == g
+                docs_g.append(shard.doc[m])
+                words_g.append(shard.word[m])
+                z0c = np.load(
+                    self._p("static", f"z0_shard{shard.index:05d}.npy"))
+                z_g.append(z0c[m])
+                tid_g.append(np.nonzero(m)[0].astype(np.int64)
+                             + tok_start[shard.index])
+            doc_glob = np.concatenate(docs_g) if docs_g \
+                else np.zeros(0, np.int32)
+            word_g = np.concatenate(words_g) if words_g \
+                else np.zeros(0, np.int32)
+            z_row = np.concatenate(z_g) if z_g else np.zeros(0, np.int32)
+            tid_row = np.concatenate(tid_g) if tid_g \
+                else np.zeros(0, np.int64)
+            doc_local = ((doc_glob - g) // r_).astype(np.int32)
+            idx = build_inverted_index(doc_local, word_g, part,
+                                       self.capacity)
+            cdk_g = np.zeros((self.dloc, k), np.int32)
+            np.add.at(cdk_g, (doc_local, z_row), 1)
+            _save_npy(self._cdk_path(g), cdk_g)
+            mine = self._row_docs(g)
+            doc_global = np.full(self.dloc, -1, np.int32)
+            doc_global[:mine.shape[0]] = mine
+            _save_npy(self._p("static", "rows", f"row{g:04d}_docs.npy"),
+                      doc_global)
+            for b in range(b_):
+                msk = idx.mask[b]
+                zlay = np.zeros(self.capacity, np.int32)
+                zlay[msk] = z_row[idx.token_id[b][msk]]
+                glob_tid = np.zeros(self.capacity, np.int64)
+                glob_tid[msk] = tid_row[idx.token_id[b][msk]]
+                np.savez(self._lay_path(g, b), doc=idx.doc[b],
+                         woff=idx.word_off[b], mask=msk, tid=glob_tid)
+                _save_npy(self._z_path(g, b), zlay)
+                # scatter this (row, block) group's initial counts into the
+                # block store — one block in memory at a time
+                bp = self._block_path(b)
+                blk_arr = (np.load(bp) if os.path.exists(bp) else
+                           np.zeros((part.block_size, k), np.int32))
+                np.add.at(blk_arr, (idx.word_off[b][msk], zlay[msk]), 1)
+                _save_npy(bp, blk_arr)
+        for shard_entry in range(corpus.num_shards):
+            os.remove(self._p("static", f"z0_shard{shard_entry:05d}.npy"))
+
+        ck = np.zeros(k, np.int64)
+        for b in range(b_):
+            ck += np.load(self._block_path(b)).sum(axis=0, dtype=np.int64)
+        _save_npy(self._p("state", "ck.npy"), ck)
+        self.iteration_count = 0
+        self._write_run_json()
+        self._write_progress()
+
+    def _write_run_json(self) -> None:
+        cfg = {
+            "format": "streaming-lda-v1",
+            "num_topics": self.num_topics,
+            "num_workers": self.num_workers,
+            "blocks_per_worker": self.blocks_per_worker,
+            "data_parallel": self.data_parallel,
+            "sampler_mode": self.sampler_mode,
+            "sampler_args": list(map(list, self.sampler_args)),
+            "table_lifetime": self.table_lifetime,
+            "alpha": self.alpha_scalar if self.alpha_scalar is not None
+            else self.alpha.tolist(),
+            "beta": self.beta,
+            "seed": self.seed,
+            "vocab_size": self.vocab_size,
+            "num_docs": self.num_docs,
+            "num_tokens": self.num_tokens,
+            "max_doc_len": self.max_doc_len,
+            "capacity": self.capacity,
+        }
+        with open(self._p(RUN_JSON), "w") as f:
+            json.dump(cfg, f, indent=1)
+
+    def _write_progress(self) -> None:
+        prog = {"iteration_count": self.iteration_count,
+                "rng_state": _rng_state_jsonable(
+                    self._rng.bit_generator.state)}
+        with open(self._p("state", PROGRESS_JSON), "w") as f:
+            json.dump(prog, f)
+
+    # -- checkpoint / resume ----------------------------------------------
+    def save_checkpoint(self) -> str:
+        """Snapshot ``state/`` into ``ckpt/`` with an atomic directory
+        swap.  Taken at an iteration boundary (the only place `step`
+        returns control), where the traveling-table queue is empty and
+        replicas agree — so the snapshot is sampler- and
+        backend-agnostic."""
+        tmp, final = self._p("ckpt.tmp"), self._p("ckpt")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        shutil.copytree(self._p("state"), tmp)
+        old = self._p("ckpt.old")
+        if os.path.exists(final):
+            os.rename(final, old)
+        os.rename(tmp, final)
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        return final
+
+    @classmethod
+    def resume(cls, workdir: str) -> "StreamingLDA":
+        """Reopen a run from its last :meth:`save_checkpoint`.  Restores
+        ``ckpt/`` over ``state/`` (a kill mid-iteration leaves ``state/``
+        partially advanced — the checkpoint is the consistent truth),
+        then reloads config, rng bit-generator state, and iteration
+        count; subsequent draws are bit-identical to a run that never
+        stopped."""
+        with open(os.path.join(workdir, RUN_JSON)) as f:
+            cfg = json.load(f)
+        if cfg.get("format") != "streaming-lda-v1":
+            raise ValueError(f"not a StreamingLDA workdir: {workdir!r}")
+        ckpt = os.path.join(workdir, "ckpt")
+        if not os.path.isdir(ckpt):
+            old = os.path.join(workdir, "ckpt.old")
+            if os.path.isdir(old):      # killed between the two renames
+                os.rename(old, ckpt)
+            else:
+                raise ValueError(
+                    f"no checkpoint under {workdir!r}; save_checkpoint() "
+                    "must run before a kill to resume from")
+        alpha = cfg["alpha"]
+        # constructed manually: the corpus-derived fields come from
+        # run.json, not from a corpus scan
+        self = cls.__new__(cls)
+        self.workdir = workdir
+        self.num_topics = int(cfg["num_topics"])
+        self.num_workers = int(cfg["num_workers"])
+        self.blocks_per_worker = int(cfg["blocks_per_worker"])
+        self.data_parallel = int(cfg["data_parallel"])
+        self.alpha = (np.full(self.num_topics, alpha, np.float32)
+                      if np.isscalar(alpha)
+                      else np.asarray(alpha, np.float32))
+        self.alpha_scalar = float(alpha) if np.isscalar(alpha) else None
+        self.beta = float(cfg["beta"])
+        self.seed = int(cfg["seed"])
+        self.sampler_mode = cfg["sampler_mode"]
+        self.table_lifetime = cfg["table_lifetime"]
+        self.vocab_size = int(cfg["vocab_size"])
+        self.num_docs = int(cfg["num_docs"])
+        self.num_tokens = int(cfg["num_tokens"])
+        self.max_doc_len = int(cfg["max_doc_len"])
+        self.capacity = int(cfg["capacity"])
+        self.vbeta = float(self.beta * self.vocab_size)
+        self.sampler_args = tuple(
+            tuple(p) for p in cfg.get("sampler_args", []))
+        self._resolve_sampler()
+        self.num_blocks = self.num_workers * self.blocks_per_worker
+        self.num_shards = self.data_parallel * self.num_workers
+        self.num_rounds = self.num_blocks
+        self.partition = sched.partition_vocab(self.vocab_size,
+                                               self.num_blocks)
+        state = os.path.join(workdir, "state")
+        if os.path.exists(state):
+            shutil.rmtree(state)
+        shutil.copytree(ckpt, state)
+        with open(self._p("state", PROGRESS_JSON)) as f:
+            prog = json.load(f)
+        self.iteration_count = int(prog["iteration_count"])
+        self._rng = np.random.default_rng(self.seed)
+        self._rng.bit_generator.state = prog["rng_state"]
+        return self
+
+    # -- stepping ----------------------------------------------------------
+    def step(self) -> None:
+        """One iteration = ``S·M`` rounds, round-major over the grid rows
+        with frozen-per-round semantics — the serial transcript of the
+        SPMD engine, with at most one block (plus its packed table) and
+        one row/block token group in memory at a time."""
+        import jax.numpy as jnp
+        m_, s_, d_ = (self.num_workers, self.blocks_per_worker,
+                      self.data_parallel)
+        k, cap = self.num_topics, self.capacity
+        travel = self.table_lifetime == "iteration"
+        alpha_j = jnp.asarray(self.alpha)
+        beta_j = jnp.float32(self.beta)
+        vbeta_j = jnp.float32(self.vbeta)
+        if travel:
+            from repro.core.mh import build_doc_tables
+            # per-iteration doc tables from iteration-start cdk; word
+            # tables are built lazily at each block's first residency
+            for g in range(self.num_shards):
+                dtab = np.asarray(build_doc_tables(
+                    jnp.asarray(np.load(self._cdk_path(g))), alpha_j))
+                _save_npy(self._p("tables", f"doc_g{g:04d}.npy"), dtab)
+            for f in os.listdir(self._p("tables")):
+                if f.startswith("word_"):
+                    os.remove(self._p("tables", f))
+
+        ck = np.load(self._p("state", "ck.npy"))
+        for r in range(self.num_rounds):
+            ck_frozen = ck.astype(np.int32)
+            delta = np.zeros(k, np.int64)
+            # engine-identical uniforms: random((B, R, cap)) consumed
+            # round-major then row-major — drawn per round here so memory
+            # stays one round's worth
+            u_r = self._rng.random((self.num_shards, cap), np.float32)
+            # process rows grouped by model position so each round's M
+            # distinct blocks are loaded, updated by their D replicas, and
+            # committed ONE AT A TIME (the memory bound); within a round
+            # the tasks are independent given the frozen inputs, so the
+            # regrouping cannot change any draw
+            for m in range(m_):
+                blk_id = sched.block_for(m, r, m_, s_)
+                blk_frozen = np.load(self._block_path(blk_id))
+                blk_delta = np.zeros_like(blk_frozen)
+                tables = None
+                if travel:
+                    wpath = self._p("tables", f"word_b{blk_id:04d}.npy")
+                    if not os.path.exists(wpath):   # first residency
+                        from repro.core.mh import build_word_tables
+                        wtab = np.asarray(build_word_tables(
+                            jnp.asarray(blk_frozen), beta_j))
+                        _save_npy(wpath, wtab)
+                    else:
+                        wtab = np.load(wpath)
+                for d in range(d_):
+                    g = d * m_ + m
+                    lay = np.load(self._lay_path(g, blk_id))
+                    z = np.load(self._z_path(g, blk_id))
+                    cdk = np.load(self._cdk_path(g))
+                    args = (jnp.asarray(cdk), jnp.asarray(blk_frozen),
+                            jnp.asarray(ck_frozen),
+                            jnp.asarray(lay["doc"]),
+                            jnp.asarray(lay["woff"]), jnp.asarray(z),
+                            jnp.asarray(lay["mask"]),
+                            jnp.asarray(u_r[g]), alpha_j, beta_j, vbeta_j)
+                    if travel:
+                        dtab = np.load(
+                            self._p("tables", f"doc_g{g:04d}.npy"))
+                        args += (jnp.asarray(wtab), jnp.asarray(dtab))
+                    out = self._sampler_fn(*args)
+                    _save_npy(self._cdk_path(g), np.asarray(out[0]))
+                    _save_npy(self._z_path(g, blk_id), np.asarray(out[3]))
+                    blk_delta += np.asarray(out[1]) - blk_frozen
+                    delta += (np.asarray(out[2]).astype(np.int64)
+                              - ck_frozen)
+                _save_npy(self._block_path(blk_id), blk_frozen + blk_delta)
+            ck = ck + delta
+            _save_npy(self._p("state", "ck.npy"), ck)
+        self.iteration_count += 1
+        self._write_progress()
+
+    def run(self, num_iterations: int,
+            checkpoint_every: int = 0) -> List[dict]:
+        history = []
+        for i in range(num_iterations):
+            self.step()
+            history.append({"iteration": self.iteration_count})
+            if checkpoint_every and (i + 1) % checkpoint_every == 0:
+                self.save_checkpoint()
+        return history
+
+    # -- observation -------------------------------------------------------
+    def memory_report(self) -> dict:
+        vb, k = self.partition.block_size, self.num_topics
+        return {
+            "num_workers": self.num_workers,
+            "blocks_per_worker": self.blocks_per_worker,
+            "data_parallel": self.data_parallel,
+            "num_blocks": self.num_blocks,
+            "resident_block_shape": (vb, k),
+            "resident_block_bytes": vb * k * 4,
+            "total_model_bytes": self.vocab_size * k * 4,
+            "row_group_bytes": self.capacity * 4 * 4,
+            "row_cdk_bytes": self.dloc * k * 4,
+        }
+
+    def gather_counts(self):
+        """Reassemble the global model — materializes ``[V, K]``; for
+        tests and small runs (use :meth:`save_snapshot_sharded` at
+        scale)."""
+        from repro.core.counts import CountState
+        import jax.numpy as jnp
+        vb, k = self.partition.block_size, self.num_topics
+        ckt = np.zeros((self.partition.padded_vocab, k), np.int32)
+        for b in range(self.num_blocks):
+            ckt[b * vb:(b + 1) * vb] = np.load(self._block_path(b))
+        ckt = ckt[:self.vocab_size]
+        cdk = np.zeros((self.num_docs, k), np.int32)
+        for g in range(self.num_shards):
+            docs = np.load(self._p("static", "rows", f"row{g:04d}_docs.npy"))
+            real = docs >= 0
+            cdk[docs[real]] = np.load(self._cdk_path(g))[:real.sum()]
+        ck = ckt.sum(axis=0).astype(np.int32)
+        return CountState(jnp.asarray(cdk), jnp.asarray(ckt),
+                          jnp.asarray(ck))
+
+    def assignments(self) -> np.ndarray:
+        """Current z in original token order (streamed, O(N) output)."""
+        z = np.zeros(self.num_tokens, np.int32)
+        for g in range(self.num_shards):
+            for b in range(self.num_blocks):
+                lay = np.load(self._lay_path(g, b))
+                msk = lay["mask"]
+                z[lay["tid"][msk]] = np.load(self._z_path(g, b))[msk]
+        return z
+
+    def log_likelihood(self) -> float:
+        from repro.core.likelihood import (doc_log_likelihood,
+                                           word_log_likelihood)
+        state = self.gather_counts()
+        return float(word_log_likelihood(state.ckt, state.ck, self.beta)
+                     + doc_log_likelihood(state.cdk, self.alpha))
+
+    def snapshot(self, build_tables: bool = False):
+        """In-memory frozen serving snapshot (small runs)."""
+        from repro.core.infer import ModelSnapshot
+        state = self.gather_counts()
+        return ModelSnapshot.from_counts(
+            np.asarray(state.ckt), np.asarray(state.ck), self.alpha,
+            self.beta, build_tables=build_tables)
+
+    def save_snapshot_sharded(self, out_dir: str) -> str:
+        """Streaming snapshot export: one block file at a time is copied
+        into a sharded snapshot directory (`core/infer.py`
+        ``load_snapshot_rows`` serves from it row-by-row) — the full
+        ``[V, K]`` model is never materialized."""
+        os.makedirs(out_dir, exist_ok=True)
+        ck = np.zeros(self.num_topics, np.int64)
+        for b in range(self.num_blocks):
+            blk = np.load(self._block_path(b))
+            np.save(os.path.join(out_dir, f"block_{b:05d}.npy"), blk)
+            ck += blk.sum(axis=0, dtype=np.int64)
+        np.save(os.path.join(out_dir, "ck.npy"), ck.astype(np.int64))
+        meta = {
+            "format": "sharded-snapshot-v1",
+            "vocab_size": self.vocab_size,
+            "num_topics": self.num_topics,
+            "num_blocks": self.num_blocks,
+            "block_size": self.partition.block_size,
+            "alpha": (self.alpha_scalar if self.alpha_scalar is not None
+                      else self.alpha.tolist()),
+            "beta": self.beta,
+            "iteration": self.iteration_count,
+        }
+        with open(os.path.join(out_dir, "meta.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+        return out_dir

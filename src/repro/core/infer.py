@@ -73,6 +73,10 @@ class ModelSnapshot:
     alpha: np.ndarray                     # [K] f32 document prior
     beta: float                           # word smoothing
     word_tables: Optional[np.ndarray] = None   # packed [3, V, K] int32
+    # set on row-restricted views (load_snapshot_rows): the smoothing
+    # denominator must use the FULL vocabulary size, not the number of
+    # resident rows, for sub-snapshot fold-in to stay bitwise
+    true_vocab_size: Optional[int] = None
     _word_term: Optional[np.ndarray] = \
         dataclasses.field(default=None, repr=False, compare=False)
     _sparse_state: Optional[tuple] = \
@@ -106,7 +110,9 @@ class ModelSnapshot:
 
     @property
     def vbeta(self) -> float:
-        return float(self.beta * self.vocab_size)
+        v = (self.true_vocab_size if self.true_vocab_size is not None
+             else self.vocab_size)
+        return float(self.beta * v)
 
     # -- derived serving state --------------------------------------------
     def word_term(self) -> np.ndarray:
@@ -161,9 +167,75 @@ class ModelSnapshot:
 
 def load_snapshot(path: str) -> ModelSnapshot:
     from repro.data.corpus import npz_stem
-    data = np.load(npz_stem(path) + ".npz")
-    return ModelSnapshot.from_counts(data["ckt"], data["ck"], data["alpha"],
-                                     float(data["beta"]))
+    with np.load(npz_stem(path) + ".npz") as data:
+        return ModelSnapshot.from_counts(data["ckt"], data["ck"],
+                                         data["alpha"],
+                                         float(data["beta"]))
+
+
+# ---------------------------------------------------------------------------
+# Sharded snapshot (out-of-core serving, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+SHARDED_SNAPSHOT_FORMAT = "sharded-snapshot-v1"
+
+
+def load_sharded_snapshot_meta(snap_dir: str) -> dict:
+    """Manifest of a sharded snapshot directory
+    (``StreamingLDA.save_snapshot_sharded`` output) — O(1) in model
+    size."""
+    import json
+    import os
+    try:
+        with open(os.path.join(snap_dir, "meta.json")) as f:
+            meta = json.load(f)
+    except OSError as e:
+        raise ValueError(
+            f"{snap_dir!r} is not a sharded snapshot directory "
+            "(missing meta.json)") from e
+    if meta.get("format") != SHARDED_SNAPSHOT_FORMAT:
+        raise ValueError(
+            f"unknown snapshot format {meta.get('format')!r} in "
+            f"{snap_dir!r}; expected {SHARDED_SNAPSHOT_FORMAT!r}")
+    return meta
+
+
+def load_snapshot_rows(snap_dir: str, word: np.ndarray):
+    """Row-restricted snapshot view for one query batch: load ONLY the
+    ``C_k^t`` rows of the batch's unique words (touching one block file
+    per needed block), returning ``(snapshot, remapped_word_ids)`` for
+    :func:`fold_in`.
+
+    Every serving quantity is row-independent given the global ``C_k`` —
+    ``φ̂ᵀ`` rows, sparse-state rows, and per-word alias tables are all
+    computed per vocabulary row with the full-vocabulary smoothing
+    denominator (``true_vocab_size`` keeps ``Vβ`` honest) — so fold-in
+    against this view is BITWISE the full-snapshot fold-in, while peak
+    serving memory is O(unique query words × K) + one block file,
+    never ``[V, K]``.
+    """
+    import os
+    meta = load_sharded_snapshot_meta(snap_dir)
+    word = np.asarray(word, np.int32)
+    v, k = int(meta["vocab_size"]), int(meta["num_topics"])
+    if word.size and (word.min() < 0 or word.max() >= v):
+        raise ValueError(
+            f"query word id outside [0, {v}) for snapshot {snap_dir!r}")
+    uniq, inv = np.unique(word, return_inverse=True)
+    uniq = uniq.astype(np.int64)
+    vb = int(meta["block_size"])
+    rows = np.zeros((max(uniq.shape[0], 1), k), np.int32)
+    for b in np.unique(uniq // vb):
+        sel = (uniq // vb) == b
+        blk = np.load(os.path.join(snap_dir, f"block_{int(b):05d}.npy"))
+        rows[:uniq.shape[0]][sel] = blk[uniq[sel] - b * vb]
+    ck = np.load(os.path.join(snap_dir, "ck.npy")).astype(np.int32)
+    alpha = meta["alpha"]
+    alpha = (np.full(k, alpha, np.float32) if np.isscalar(alpha)
+             else np.asarray(alpha, np.float32))
+    snap = ModelSnapshot(ckt=rows, ck=ck, alpha=alpha,
+                         beta=float(meta["beta"]), true_vocab_size=v)
+    return snap, inv.reshape(word.shape).astype(np.int32)
 
 
 # ---------------------------------------------------------------------------

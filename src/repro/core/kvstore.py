@@ -389,6 +389,109 @@ class HostModelParallelLDA:
                 self.store.put_ck_delta(delta.astype(np.int64))
         self.iteration_count += 1
 
+    # -- checkpoint / resume -----------------------------------------------
+    CKPT_FORMAT = "host-lda-ckpt-v1"
+
+    def save_checkpoint(self, path: str) -> str:
+        """Serialize the scheduler/worker/store state to one ``.npz`` so
+        an oracle replay can cross a resume boundary: the store's blocks
+        and ``C_k``, every worker's ``cdk``/``z``, the rng bit-generator
+        state, and a config echo.  Same iteration-boundary invariant as
+        the engine checkpoint — tables are iteration-local, the store is
+        reconciled — so host and device checkpoints cut the chain at the
+        same points and resumed runs stay draw-for-draw comparable."""
+        import json
+
+        from repro.data.corpus import npz_stem
+        cfg = {
+            "format": self.CKPT_FORMAT,
+            "num_topics": self.num_topics,
+            "num_workers": self.num_workers,
+            "blocks_per_worker": self.blocks_per_worker,
+            "data_parallel": self.data_parallel,
+            "sampler": self.sampler,
+            "ck_sync": self.ck_sync,
+            "table_lifetime": self.table_lifetime,
+            "sampler_args": [list(p) for p in self.sampler_args],
+            "alpha": np.asarray(self.alpha, np.float32).tolist(),
+            "beta": self.beta,
+            "iteration_count": self.iteration_count,
+            "num_tokens": self.corpus.num_tokens,
+            "vocab_size": self.corpus.vocab_size,
+            "num_docs": self.corpus.num_docs,
+        }
+        arrays = {
+            "blocks": np.stack([self.store.get_block(b)
+                                for b in range(self.num_blocks)]),
+            "ck": self.store.get_ck(),
+            "config": np.frombuffer(json.dumps(cfg).encode(), np.uint8),
+            "rng_state": np.frombuffer(
+                json.dumps(self.rng.bit_generator.state).encode(),
+                np.uint8),
+        }
+        for g, w in enumerate(self.workers):
+            arrays[f"cdk_{g}"] = w.cdk
+            arrays[f"z_{g}"] = w.z
+        import os
+        stem = npz_stem(path)
+        os.makedirs(os.path.dirname(stem) or ".", exist_ok=True)
+        tmp = stem + ".tmp.npz"
+        np.savez(tmp, **arrays)
+        os.replace(tmp, stem + ".npz")
+        return stem + ".npz"
+
+    @classmethod
+    def resume(cls, corpus: Corpus, path: str) -> "HostModelParallelLDA":
+        """Rebuild a host oracle from :meth:`save_checkpoint` output; the
+        static layout is re-derived from the corpus, the mutable chain
+        and rng stream restored bitwise."""
+        import json
+
+        from repro.data.corpus import npz_stem
+        stem = npz_stem(path)
+        with np.load(stem + ".npz") as data:
+            try:
+                cfg = json.loads(bytes(data["config"]).decode())
+                rng_state = json.loads(bytes(data["rng_state"]).decode())
+                blocks = np.asarray(data["blocks"])
+                ck = np.asarray(data["ck"])
+                worker_state = [
+                    (np.asarray(data[f"cdk_{g}"]), np.asarray(data[f"z_{g}"]))
+                    for g in range(cfg["data_parallel"]
+                                   * cfg["num_workers"])]
+            except KeyError as e:
+                raise ValueError(
+                    f"{stem}.npz is not a host-oracle checkpoint: "
+                    f"missing {e}") from e
+        if cfg.get("format") != cls.CKPT_FORMAT:
+            raise ValueError(
+                f"unknown checkpoint format {cfg.get('format')!r} in "
+                f"{stem}.npz; expected {cls.CKPT_FORMAT!r}")
+        for key in ("num_tokens", "vocab_size", "num_docs"):
+            if int(cfg[key]) != int(getattr(corpus, key)):
+                raise ValueError(
+                    f"corpus does not match checkpoint: {key} is "
+                    f"{getattr(corpus, key)}, checkpoint has {cfg[key]}")
+        host = cls(corpus, num_topics=cfg["num_topics"],
+                   num_workers=cfg["num_workers"],
+                   alpha=np.asarray(cfg["alpha"], np.float32),
+                   beta=cfg["beta"],
+                   blocks_per_worker=cfg["blocks_per_worker"],
+                   sampler=cfg["sampler"], ck_sync=cfg["ck_sync"],
+                   data_parallel=cfg["data_parallel"],
+                   table_lifetime=cfg["table_lifetime"],
+                   sampler_args=tuple(
+                       tuple(p) for p in cfg["sampler_args"]))
+        for b in range(host.num_blocks):
+            host.store.put_block(b, blocks[b])
+        host.store.init_ck(ck)
+        for g, (cdk_g, z_g) in enumerate(worker_state):
+            host.workers[g].cdk[...] = cdk_g
+            host.workers[g].z[...] = z_g
+        host.rng.bit_generator.state = rng_state
+        host.iteration_count = int(cfg["iteration_count"])
+        return host
+
     def gather_ckt(self) -> np.ndarray:
         vb = self.partition.block_size
         out = np.zeros((self.partition.padded_vocab, self.num_topics),

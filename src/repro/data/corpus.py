@@ -33,18 +33,42 @@ class Corpus:
         return np.bincount(self.word, minlength=self.vocab_size)
 
     def validate(self) -> None:
-        assert self.doc.shape == self.word.shape
-        assert self.doc.min(initial=0) >= 0 and self.word.min(initial=0) >= 0
-        assert self.doc.max(initial=-1) < self.num_docs
-        assert self.word.max(initial=-1) < self.vocab_size
+        """Raise ``ValueError`` on a structurally invalid corpus.
+
+        Raises (not asserts): a corrupt or mismatched on-disk corpus must
+        fail at the I/O boundary even under ``python -O``, instead of
+        surfacing as an out-of-bounds scatter deep inside the engine.
+        """
+        if self.doc.shape != self.word.shape:
+            raise ValueError(
+                f"doc/word length mismatch: {self.doc.shape} vs "
+                f"{self.word.shape}")
+        if self.doc.min(initial=0) < 0 or self.word.min(initial=0) < 0:
+            raise ValueError("negative doc or word id in token stream")
+        if self.doc.max(initial=-1) >= self.num_docs:
+            raise ValueError(
+                f"doc id {int(self.doc.max())} >= num_docs {self.num_docs}")
+        if self.word.max(initial=-1) >= self.vocab_size:
+            raise ValueError(
+                f"word id {int(self.word.max())} >= vocab_size "
+                f"{self.vocab_size}")
+        if self.vocab is not None and len(self.vocab) != self.vocab_size:
+            raise ValueError(
+                f"vocab sidecar has {len(self.vocab)} entries, expected "
+                f"vocab_size={self.vocab_size}")
 
     def doc_words(self) -> List[np.ndarray]:
         """Per-document word-id arrays, in stream order within each doc —
-        the query format the fold-in/serving path consumes."""
-        out: List[List[int]] = [[] for _ in range(self.num_docs)]
-        for d, w in zip(self.doc, self.word):
-            out[d].append(int(w))
-        return [np.asarray(ws, np.int32) for ws in out]
+        the query format the fold-in/serving path consumes.
+
+        Vectorized: one stable argsort groups the stream by document while
+        preserving within-document token order, and ``np.split`` cuts the
+        grouped stream at the document-length prefix sums.
+        """
+        order = np.argsort(self.doc, kind="stable")
+        grouped = np.ascontiguousarray(self.word[order], dtype=np.int32)
+        lengths = np.bincount(self.doc, minlength=self.num_docs)
+        return np.split(grouped, np.cumsum(lengths[:-1]))
 
 
 def from_documents(docs_as_word_lists: Sequence[Sequence[int]],
@@ -148,11 +172,22 @@ def save_corpus(corpus: Corpus, path: str) -> None:
 
 def load_corpus(path: str) -> Corpus:
     stem = npz_stem(path)
-    data = np.load(stem + ".npz")
-    vocab = None
+    # context manager: np.load on an .npz keeps the zip handle open for
+    # lazy member reads — without it every load leaks a file descriptor
+    # (fatal for the streaming trainer, which opens thousands of shards)
+    with np.load(stem + ".npz") as data:
+        try:
+            corpus = Corpus(np.asarray(data["doc"], np.int32),
+                            np.asarray(data["word"], np.int32),
+                            int(data["num_docs"]), int(data["vocab_size"]))
+        except KeyError as e:
+            raise ValueError(
+                f"{stem}.npz is not a corpus archive: missing {e}") from e
     vpath = stem + ".vocab.json"
     if os.path.exists(vpath):
         with open(vpath) as f:
-            vocab = json.load(f)
-    return Corpus(data["doc"], data["word"], int(data["num_docs"]),
-                  int(data["vocab_size"]), vocab)
+            corpus.vocab = json.load(f)
+    # fail at the I/O boundary, not deep inside the engine: a truncated or
+    # mismatched archive must not be silently accepted
+    corpus.validate()
+    return corpus

@@ -1,0 +1,373 @@
+"""Sharded on-disk corpus format + streaming iterator (DESIGN.md §13).
+
+The in-memory :class:`~repro.data.corpus.Corpus` holds the whole token
+stream; the paper's regime (billions of tokens, 200B model variables on
+low-end nodes) needs the opposite invariant — *training memory bounded by
+the resident model block and one in-flight document shard*.  This module
+is the data half of that: a corpus is a directory of document-contiguous
+``.npz`` shards plus a ``meta.json`` manifest, written incrementally (the
+writer never holds more than one shard) and read lazily (the iterator
+yields one shard at a time).
+
+On-disk layout::
+
+    corpus_dir/
+      meta.json            manifest: counts, shard table, format tag
+      vocab.json           optional id -> string sidecar
+      shard_00000.npz      {"doc": [n] int32 global ids, "word": [n] int32}
+      shard_00001.npz      ...
+
+Shards partition documents into CONTIGUOUS id ranges in stream order, so
+the concatenation of shards is exactly the flat doc-major token stream —
+which is what lets the out-of-core trainer
+(`core/engine/streaming.py`) replay the in-memory engine's rng draws
+chunk-by-chunk and stay bit-identical to it (numpy ``Generator`` fills
+arrays sequentially from the bit stream, pinned by
+``tests/test_stream_resume.py``).
+
+The manifest records ``max_doc_len`` so ``--sampler auto`` and the sparse
+family's static lane capacities can be derived without touching a single
+shard.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+from repro.data.corpus import Corpus
+
+FORMAT_TAG = "sharded-corpus-v1"
+META_NAME = "meta.json"
+
+
+@dataclasses.dataclass
+class CorpusShard:
+    """One in-flight document shard: tokens of docs ``[doc_lo, doc_hi)``."""
+
+    index: int
+    doc: np.ndarray        # [n] int32 GLOBAL document id per token
+    word: np.ndarray       # [n] int32 word id per token
+    doc_lo: int
+    doc_hi: int
+
+    @property
+    def num_tokens(self) -> int:
+        return int(self.doc.shape[0])
+
+    @property
+    def num_docs(self) -> int:
+        return self.doc_hi - self.doc_lo
+
+
+class ShardedCorpusWriter:
+    """Incremental writer: feed documents one at a time, get a sharded
+    corpus directory out — peak memory is ONE shard's token buffer, so a
+    corpus of any size can be built from a generator or a parse stream.
+    """
+
+    def __init__(self, out_dir: str, vocab_size: int,
+                 docs_per_shard: int = 4096,
+                 vocab: Optional[List[str]] = None):
+        if docs_per_shard < 1:
+            raise ValueError(
+                f"docs_per_shard must be >= 1, got {docs_per_shard}")
+        self.out_dir = out_dir
+        self.vocab_size = int(vocab_size)
+        self.docs_per_shard = int(docs_per_shard)
+        os.makedirs(out_dir, exist_ok=True)
+        if vocab is not None:
+            if len(vocab) != vocab_size:
+                raise ValueError(
+                    f"vocab has {len(vocab)} entries, expected {vocab_size}")
+            with open(os.path.join(out_dir, "vocab.json"), "w") as f:
+                json.dump(vocab, f)
+        self._buf_doc: List[np.ndarray] = []
+        self._buf_word: List[np.ndarray] = []
+        self._buf_docs = 0
+        self._shards: List[dict] = []
+        self.num_docs = 0
+        self.num_tokens = 0
+        self.max_doc_len = 0
+        self._closed = False
+
+    def add_document(self, word_ids) -> int:
+        """Append one document (a sequence of word ids); returns its
+        global document id."""
+        if self._closed:
+            raise RuntimeError("writer already closed")
+        w = np.asarray(word_ids, np.int32)
+        if w.ndim != 1:
+            raise ValueError(f"expected 1-D word ids, got shape {w.shape}")
+        if w.size and (w.min() < 0 or w.max() >= self.vocab_size):
+            raise ValueError(
+                f"word id out of range [0, {self.vocab_size}) in document "
+                f"{self.num_docs}")
+        d = self.num_docs
+        self._buf_doc.append(np.full(w.shape[0], d, np.int32))
+        self._buf_word.append(w)
+        self.num_docs += 1
+        self.num_tokens += int(w.shape[0])
+        self.max_doc_len = max(self.max_doc_len, int(w.shape[0]))
+        self._buf_docs += 1
+        if self._buf_docs >= self.docs_per_shard:
+            self._flush()
+        return d
+
+    def _flush(self) -> None:
+        if not self._buf_docs:
+            return
+        doc = (np.concatenate(self._buf_doc) if self._buf_doc
+               else np.zeros(0, np.int32))
+        word = (np.concatenate(self._buf_word) if self._buf_word
+                else np.zeros(0, np.int32))
+        i = len(self._shards)
+        fname = f"shard_{i:05d}.npz"
+        np.savez_compressed(os.path.join(self.out_dir, fname),
+                            doc=doc, word=word)
+        self._shards.append({
+            "file": fname,
+            "doc_lo": self.num_docs - self._buf_docs,
+            "doc_hi": self.num_docs,
+            "num_tokens": int(word.shape[0]),
+        })
+        self._buf_doc, self._buf_word, self._buf_docs = [], [], 0
+
+    def close(self) -> str:
+        """Flush the tail shard and write the manifest; returns the
+        corpus directory (idempotent)."""
+        if not self._closed:
+            self._flush()
+            meta = {
+                "format": FORMAT_TAG,
+                "num_docs": self.num_docs,
+                "vocab_size": self.vocab_size,
+                "num_tokens": self.num_tokens,
+                "max_doc_len": self.max_doc_len,
+                "shards": self._shards,
+            }
+            with open(os.path.join(self.out_dir, META_NAME), "w") as f:
+                json.dump(meta, f, indent=1)
+            self._closed = True
+        return self.out_dir
+
+    def __enter__(self) -> "ShardedCorpusWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if exc[0] is None:
+            self.close()
+
+
+class ShardedCorpus:
+    """Lazy reader over a sharded corpus directory.
+
+    Construction reads only ``meta.json`` — O(1) in corpus size.  Token
+    data is touched one shard at a time via :meth:`load_shard` /
+    :meth:`iter_shards`; each load validates the shard against the
+    manifest, so corruption fails at the I/O boundary like
+    ``load_corpus``.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        mpath = os.path.join(path, META_NAME)
+        try:
+            with open(mpath) as f:
+                meta = json.load(f)
+        except OSError as e:
+            raise ValueError(
+                f"{path!r} is not a sharded corpus directory "
+                f"(missing {META_NAME})") from e
+        if meta.get("format") != FORMAT_TAG:
+            raise ValueError(
+                f"unknown sharded-corpus format {meta.get('format')!r} in "
+                f"{mpath}; expected {FORMAT_TAG!r}")
+        self.meta = meta
+        self.num_docs = int(meta["num_docs"])
+        self.vocab_size = int(meta["vocab_size"])
+        self.num_tokens = int(meta["num_tokens"])
+        self.max_doc_len = int(meta["max_doc_len"])
+        self.vocab: Optional[List[str]] = None
+        vpath = os.path.join(path, "vocab.json")
+        if os.path.exists(vpath):
+            with open(vpath) as f:
+                self.vocab = json.load(f)
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.meta["shards"])
+
+    def load_shard(self, i: int) -> CorpusShard:
+        entry = self.meta["shards"][i]
+        with np.load(os.path.join(self.path, entry["file"])) as data:
+            doc = np.asarray(data["doc"], np.int32)
+            word = np.asarray(data["word"], np.int32)
+        lo, hi = int(entry["doc_lo"]), int(entry["doc_hi"])
+        if doc.shape != word.shape or doc.shape[0] != entry["num_tokens"]:
+            raise ValueError(
+                f"shard {entry['file']}: token arrays disagree with "
+                f"manifest ({doc.shape[0]} vs {entry['num_tokens']})")
+        if doc.size and (doc.min() < lo or doc.max() >= hi):
+            raise ValueError(
+                f"shard {entry['file']}: doc ids outside [{lo}, {hi})")
+        if word.size and (word.min() < 0 or word.max() >= self.vocab_size):
+            raise ValueError(
+                f"shard {entry['file']}: word id outside "
+                f"[0, {self.vocab_size})")
+        return CorpusShard(i, doc, word, lo, hi)
+
+    def iter_shards(self) -> Iterator[CorpusShard]:
+        """The streaming iterator: one document shard in memory at a time,
+        in stream (document id) order."""
+        for i in range(self.num_shards):
+            yield self.load_shard(i)
+
+    def doc_lengths(self) -> np.ndarray:
+        """Per-document token counts — one streaming pass, O(num_docs)
+        memory (the engine layouts need these, never the token stream)."""
+        out = np.zeros(self.num_docs, np.int64)
+        for shard in self.iter_shards():
+            out += np.bincount(shard.doc, minlength=self.num_docs)
+        return out
+
+    def to_corpus(self) -> Corpus:
+        """Materialize as an in-memory :class:`Corpus` — for tests and
+        small corpora only; defeats the point at scale."""
+        docs = [np.zeros(0, np.int32)]
+        words = [np.zeros(0, np.int32)]
+        for shard in self.iter_shards():
+            docs.append(shard.doc)
+            words.append(shard.word)
+        corpus = Corpus(np.concatenate(docs), np.concatenate(words),
+                        self.num_docs, self.vocab_size, self.vocab)
+        corpus.validate()
+        return corpus
+
+
+def shard_corpus(corpus: Corpus, out_dir: str,
+                 num_shards: Optional[int] = None,
+                 docs_per_shard: Optional[int] = None) -> str:
+    """Write an in-memory corpus to the sharded on-disk format.
+
+    The token stream must be doc-major (``corpus.doc`` non-decreasing) —
+    the format stores contiguous document ranges in stream order.
+    """
+    if (num_shards is None) == (docs_per_shard is None):
+        raise ValueError("pass exactly one of num_shards / docs_per_shard")
+    corpus.validate()
+    if corpus.doc.size and (np.diff(corpus.doc) < 0).any():
+        raise ValueError(
+            "corpus token stream is not doc-major; sort by doc id first")
+    if num_shards is not None:
+        if not 1 <= num_shards <= max(corpus.num_docs, 1):
+            raise ValueError(
+                f"num_shards must be in [1, {corpus.num_docs}], "
+                f"got {num_shards}")
+        docs_per_shard = -(-corpus.num_docs // num_shards)
+    writer = ShardedCorpusWriter(out_dir, corpus.vocab_size,
+                                 docs_per_shard=docs_per_shard,
+                                 vocab=corpus.vocab)
+    # one pass over the stream via the (vectorized) per-doc split
+    bounds = np.searchsorted(corpus.doc,
+                             np.arange(corpus.num_docs + 1, dtype=np.int64))
+    for d in range(corpus.num_docs):
+        writer.add_document(corpus.word[bounds[d]:bounds[d + 1]])
+    return writer.close()
+
+
+# ---------------------------------------------------------------------------
+# Streaming synthetic generators (corpus never materialized in RAM)
+# ---------------------------------------------------------------------------
+
+def write_synthetic_stream(out_dir: str, num_docs: int, vocab_size: int,
+                           num_topics: int, doc_len: int, seed: int = 0,
+                           docs_per_shard: int = 4096,
+                           alpha: float = 0.1, beta: float = 0.01) -> str:
+    """LDA-generative corpus written shard-by-shard: one shared topic
+    matrix (the MODEL, O(K·V)), documents generated and flushed in
+    ``docs_per_shard`` chunks — the corpus itself never exists in RAM."""
+    rng = np.random.default_rng(seed)
+    phi = rng.dirichlet([beta * 10] * vocab_size, size=num_topics)
+    cdf = np.cumsum(phi, axis=1)
+    writer = ShardedCorpusWriter(out_dir, vocab_size,
+                                 docs_per_shard=docs_per_shard)
+    for _ in range(num_docs):
+        theta = rng.dirichlet([alpha] * num_topics)
+        length = max(int(rng.poisson(doc_len)), 2)
+        zs = rng.choice(num_topics, size=length, p=theta)
+        u = rng.random(length)
+        words = np.empty(length, np.int32)
+        for k in np.unique(zs):
+            m = zs == k
+            words[m] = np.searchsorted(cdf[k], u[m], side="right").clip(
+                max=vocab_size - 1)
+        writer.add_document(words)
+    return writer.close()
+
+
+def write_zipf_stream(out_dir: str, num_docs: int, vocab_size: int,
+                      doc_len: int, zipf_a: float = 1.1, seed: int = 0,
+                      docs_per_shard: int = 4096) -> str:
+    """Long-tail (bounded-Zipf) unigram corpus written shard-by-shard —
+    the big-K benchmark workload (Peacock's power-law regime) with O(V)
+    generator state, no topic matrix at all."""
+    rng = np.random.default_rng(seed)
+    freq = 1.0 / np.arange(1, vocab_size + 1, dtype=np.float64) ** zipf_a
+    cdf = np.cumsum(freq / freq.sum())
+    writer = ShardedCorpusWriter(out_dir, vocab_size,
+                                 docs_per_shard=docs_per_shard)
+    for _ in range(num_docs):
+        length = max(int(rng.poisson(doc_len)), 2)
+        words = np.searchsorted(
+            cdf, rng.random(length), side="right").clip(
+            max=vocab_size - 1).astype(np.int32)
+        writer.add_document(words)
+    return writer.close()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Shard a corpus to the on-disk streaming format")
+    ap.add_argument("--out", required=True, help="output corpus directory")
+    src = ap.add_mutually_exclusive_group()
+    src.add_argument("--from-npz", default="",
+                     help="shard an existing corpus .npz (load_corpus)")
+    src.add_argument("--zipf", type=float, default=0.0, metavar="A",
+                     help="generate a bounded-Zipf(A) long-tail stream "
+                          "instead of the LDA-generative corpus")
+    ap.add_argument("--docs", type=int, default=512)
+    ap.add_argument("--vocab", type=int, default=1024)
+    ap.add_argument("--topics", type=int, default=16)
+    ap.add_argument("--doc-len", type=int, default=48)
+    ap.add_argument("--shards", type=int, default=4,
+                    help="shard count when sharding an existing corpus; "
+                         "for generated streams, docs per shard is "
+                         "ceil(docs/shards)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.from_npz:
+        from repro.data.corpus import load_corpus
+        out = shard_corpus(load_corpus(args.from_npz), args.out,
+                           num_shards=args.shards)
+    elif args.zipf > 0:
+        out = write_zipf_stream(args.out, args.docs, args.vocab,
+                                args.doc_len, zipf_a=args.zipf,
+                                seed=args.seed,
+                                docs_per_shard=-(-args.docs // args.shards))
+    else:
+        out = write_synthetic_stream(
+            args.out, args.docs, args.vocab, args.topics, args.doc_len,
+            seed=args.seed, docs_per_shard=-(-args.docs // args.shards))
+    sc = ShardedCorpus(out)
+    print(f"sharded corpus: {out}  docs={sc.num_docs:,} "
+          f"tokens={sc.num_tokens:,} V={sc.vocab_size:,} "
+          f"shards={sc.num_shards} max_doc_len={sc.max_doc_len}")
+
+
+if __name__ == "__main__":
+    main()

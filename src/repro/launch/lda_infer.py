@@ -4,6 +4,11 @@
     PYTHONPATH=src python -m repro.launch.lda_infer \
         --snapshot /tmp/snap.npz --queries 16 --query-len 32 --sampler mh
 
+    # serve a SHARDED snapshot (lda_train --snapshot-dir) out-of-core:
+    # only the [U, K] rows the batch's distinct words hit are loaded
+    PYTHONPATH=src python -m repro.launch.lda_infer \
+        --snapshot-dir /tmp/snapdir --queries 16 --query-len 32
+
     # self-contained demo: train a tiny model, hold docs out, serve them
     PYTHONPATH=src python -m repro.launch.lda_infer \
         --docs 200 --vocab 500 --topics 20 --train-iters 10 --queries 16
@@ -12,7 +17,7 @@ Loads (or trains) a model, stands up a :class:`TopicInferenceServer`,
 infers ``θ̂`` for a batch of unseen documents, and reports the batch
 latency plus the doc-completion perplexity of the queries.  Exits
 non-zero if the perplexity is not finite — the CI smoke contract
-(`scripts/ci.sh` pass 5).
+(`scripts/ci.sh` passes 5 and 7).
 """
 from __future__ import annotations
 
@@ -20,10 +25,12 @@ import argparse
 import json
 import sys
 import time
+import types
 
 import numpy as np
 
-from repro.core.infer import load_snapshot
+from repro.core.infer import (load_sharded_snapshot_meta, load_snapshot,
+                              load_snapshot_rows)
 from repro.data.corpus import load_corpus, split_corpus
 from repro.launch.samplers import (infer_sampler_choices,
                                    resolve_sampler_choice)
@@ -53,6 +60,11 @@ def main() -> None:
                     help="frozen snapshot (.npz from lda_train "
                          "--snapshot-out); empty = self-train a tiny "
                          "model and query its held-out docs")
+    ap.add_argument("--snapshot-dir", default="",
+                    help="sharded snapshot directory (lda_train "
+                         "--snapshot-dir): loads only the count rows the "
+                         "query batch touches — the full [V, K] model "
+                         "never enters memory (DESIGN.md §13)")
     ap.add_argument("--query-corpus", default="",
                     help="saved corpus whose docs become the queries "
                          "(with --snapshot)")
@@ -84,7 +96,27 @@ def main() -> None:
     args = ap.parse_args()
     args.sampler = resolve_sampler_choice(args.sampler, force=args.force)
 
-    if args.snapshot:
+    if args.snapshot and args.snapshot_dir:
+        ap.error("--snapshot and --snapshot-dir are mutually exclusive")
+    if args.snapshot_dir:
+        meta = load_sharded_snapshot_meta(args.snapshot_dir)
+        # queries live in the TRUE vocab id space; the row-restricted
+        # view remaps them after the batch's word set is known
+        queries = _queries_from_args(
+            args, types.SimpleNamespace(vocab_size=meta["vocab_size"]))
+        lens = [len(d) for d in queries]
+        flat = np.concatenate([np.asarray(d, np.int32) for d in queries])
+        snap, remapped = load_snapshot_rows(args.snapshot_dir, flat)
+        queries = np.split(remapped, np.cumsum(lens)[:-1])
+        print(f"sharded snapshot: V={meta['vocab_size']:,} "
+              f"K={meta['num_topics']} ({meta['num_blocks']} block "
+              f"files); batch touches {snap.vocab_size:,} distinct "
+              f"words -> resident rows [{snap.vocab_size}, "
+              f"{snap.num_topics}] "
+              f"({snap.ckt.nbytes / 2**20:.2f} MiB of "
+              f"{meta['vocab_size'] * meta['num_topics'] * 4 / 2**20:.1f}"
+              f" MiB full model)")
+    elif args.snapshot:
         snap = load_snapshot(args.snapshot)
         print(f"snapshot: V={snap.vocab_size} K={snap.num_topics} "
               f"({snap.ck.sum():,} training tokens)")
@@ -123,9 +155,10 @@ def main() -> None:
         print(f"  query {i}: {desc}")
 
     ppl = server.perplexity(queries)
+    true_v = snap.true_vocab_size or snap.vocab_size
     print(f"doc-completion perplexity: {ppl['perplexity']:,.2f} over "
           f"{ppl['tokens_scored']} scored tokens "
-          f"(V = {snap.vocab_size} is the uninformative ceiling)")
+          f"(V = {true_v} is the uninformative ceiling)")
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"perplexity": ppl, "warm_batch_s": warm_s,

@@ -6,11 +6,23 @@
 Selects the model-parallel engine by default; ``--data-parallel D`` turns
 it into the hybrid 2D (data × model) grid of DESIGN.md §8; ``--engine dp``
 runs the Yahoo!LDA-style data-parallel baseline for comparison.
+
+Out-of-core training (DESIGN.md §13): ``--corpus-dir`` points at a
+sharded on-disk corpus (`python -m repro.data.stream`) and switches to
+the streaming engine — memory bounded by one resident ``[Vb, K]`` block,
+never the corpus or the full model.  ``--workdir`` holds the run's
+persistent state; ``--checkpoint-every N`` snapshots it every N
+iterations and ``--resume`` continues a killed run bit-exactly (the same
+two flags also checkpoint/resume the in-memory mp engine, via
+``ModelParallelLDA.save_checkpoint``/``resume``).  ``--snapshot-dir``
+exports the final model as a sharded serving snapshot (one block file at
+a time) that ``lda_infer --snapshot-dir`` serves row-restricted.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import numpy as np
@@ -36,8 +48,9 @@ def main() -> None:
                     help="per-block sampler from the engine registry: "
                          "exact scan, word-frozen batched/pallas, O(1) "
                          "alias-table MH, or the hybrid sparse family "
-                         "(DESIGN.md §9, §12); 'auto' picks the Pallas "
-                         "form on TPU and the jnp twin elsewhere")
+                         "(DESIGN.md §9, §12); 'auto' picks the family "
+                         "from the measured (K, doc-len) regime map and "
+                         "the Pallas form of it on TPU")
     ap.add_argument("--force", action="store_true",
                     help="run an explicitly requested *_pallas sampler "
                          "in interpret mode off-TPU instead of refusing")
@@ -48,6 +61,21 @@ def main() -> None:
                          "per iteration (MH default), 'round' = rebuild "
                          "every round (the A/B baseline); 'auto' defers "
                          "to the engine default (mp engine, MH samplers)")
+    ap.add_argument("--corpus-dir", default="",
+                    help="sharded on-disk corpus directory (data/stream) "
+                         "— switches to the out-of-core streaming engine "
+                         "(requires --workdir)")
+    ap.add_argument("--workdir", default="",
+                    help="persistent run directory: the streaming "
+                         "engine's state store, and the mp engine's "
+                         "checkpoint home (engine_ckpt.npz)")
+    ap.add_argument("--checkpoint-every", type=int, default=0, metavar="N",
+                    help="checkpoint every N iterations into --workdir "
+                         "(bit-exact resume via --resume)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue a killed run from the --workdir "
+                         "checkpoint; draw-for-draw identical to a run "
+                         "that never stopped")
     ap.add_argument("--docs", type=int, default=500)
     ap.add_argument("--vocab", type=int, default=2000)
     ap.add_argument("--topics", type=int, default=50)
@@ -65,6 +93,10 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--out", default="")
+    ap.add_argument("--eval-every", type=int, default=1, metavar="N",
+                    help="evaluate log likelihood every N iterations "
+                         "(0 = never; evaluation gathers the full model, "
+                         "so big streaming runs want 0)")
     ap.add_argument("--eval-holdout", type=int, default=0, metavar="N",
                     help="hold N docs out of training and report their "
                          "doc-completion perplexity each iteration "
@@ -79,36 +111,101 @@ def main() -> None:
     ap.add_argument("--snapshot-out", default="",
                     help="write the final frozen serving snapshot "
                          "(counts .npz consumed by lda_infer)")
+    ap.add_argument("--snapshot-dir", default="",
+                    help="export the final model as a SHARDED serving "
+                         "snapshot directory, one block file at a time "
+                         "(streaming engine; lda_infer --snapshot-dir)")
     args = ap.parse_args()
-    args.sampler = resolve_sampler_choice(args.sampler, force=args.force)
+
+    streaming = bool(args.corpus_dir) or (
+        args.resume and args.workdir
+        and os.path.exists(os.path.join(args.workdir, "run.json")))
+    if streaming and not args.workdir:
+        ap.error("--corpus-dir needs --workdir (the run's state store)")
+    if streaming and args.engine != "mp":
+        ap.error("--corpus-dir streams through the model-parallel "
+                 "engine; --engine dp is in-memory only")
+    if streaming and args.eval_holdout:
+        ap.error("--eval-holdout needs the in-memory corpus; hold the "
+                 "docs out when sharding the corpus instead")
+    if (args.checkpoint_every or args.resume) and not args.workdir:
+        ap.error("--checkpoint-every/--resume need --workdir")
+    if args.checkpoint_every and args.engine == "dp":
+        ap.error("--checkpoint-every supports the mp engines only")
     args.holdout_sampler = resolve_sampler_choice(args.holdout_sampler,
                                                   force=args.force)
 
-    corpus, phi, _ = synthetic_corpus(args.docs, args.vocab, args.topics,
-                                      args.doc_len, seed=args.seed)
+    lifetime = (None if args.table_lifetime == "auto"
+                else args.table_lifetime)
+    phi = None
     holdout_docs = None
-    if args.eval_holdout:
-        corpus, held = split_corpus(corpus, args.eval_holdout)
-        holdout_docs = held.doc_words()
-        print(f"holdout: {held.num_docs} docs / {held.num_tokens:,} tokens "
-              f"(doc-completion, {args.holdout_sweeps} fold-in sweeps, "
-              f"sampler={args.holdout_sampler})")
-    print(f"corpus: {corpus.num_tokens:,} tokens, V={args.vocab}, "
-          f"K={args.topics}, model vars={args.vocab * args.topics:,}")
-    if args.engine == "mp":
-        lifetime = (None if args.table_lifetime == "auto"
-                    else args.table_lifetime)
-        lda = ModelParallelLDA(corpus, args.topics, args.workers,
-                               alpha=args.alpha, beta=args.beta,
-                               seed=args.seed, sampler_mode=args.sampler,
+    mp_ckpt = (os.path.join(args.workdir, "engine_ckpt.npz")
+               if args.workdir else "")
+
+    if streaming:
+        from repro.core.engine.streaming import StreamingLDA
+        from repro.data.stream import ShardedCorpus
+        if args.resume:
+            lda = StreamingLDA.resume(args.workdir)
+            print(f"resumed streaming run at iteration "
+                  f"{lda.iteration_count} (sampler={lda.sampler_mode})")
+        else:
+            corpus = ShardedCorpus(args.corpus_dir)
+            # the corpus exists now, so 'auto' can consult the measured
+            # regime map (manifest carries max_doc_len — no shard reads)
+            sampler = resolve_sampler_choice(
+                args.sampler, force=args.force, num_topics=args.topics,
+                max_doc_len=corpus.max_doc_len)
+            print(f"corpus: {corpus.num_tokens:,} tokens (sharded, "
+                  f"{corpus.num_shards} shards), V={corpus.vocab_size:,}, "
+                  f"K={args.topics}, sampler={sampler}")
+            lda = StreamingLDA(corpus, args.workdir, args.topics,
+                               args.workers, alpha=args.alpha,
+                               beta=args.beta, seed=args.seed,
+                               sampler_mode=sampler,
                                blocks_per_worker=args.blocks_per_worker,
                                data_parallel=args.data_parallel,
                                table_lifetime=lifetime)
-        print(f"table lifetime: {lda.table_lifetime}")
+        rep = lda.memory_report()
+        print(f"resident block: {rep['resident_block_shape']} "
+              f"({rep['resident_block_bytes'] / 2**20:.1f} MiB of "
+              f"{rep['total_model_bytes'] / 2**20:.1f} MiB total model)")
+        num_tokens = lda.num_tokens
     else:
-        lda = DataParallelLDA(corpus, args.topics, args.workers,
-                              alpha=args.alpha, beta=args.beta,
-                              seed=args.seed)
+        corpus, phi, _ = synthetic_corpus(args.docs, args.vocab,
+                                          args.topics, args.doc_len,
+                                          seed=args.seed)
+        if args.eval_holdout:
+            corpus, held = split_corpus(corpus, args.eval_holdout)
+            holdout_docs = held.doc_words()
+            print(f"holdout: {held.num_docs} docs / "
+                  f"{held.num_tokens:,} tokens (doc-completion, "
+                  f"{args.holdout_sweeps} fold-in sweeps, "
+                  f"sampler={args.holdout_sampler})")
+        args.sampler = resolve_sampler_choice(
+            args.sampler, force=args.force, num_topics=args.topics,
+            max_doc_len=int(corpus.doc_lengths().max(initial=1)))
+        print(f"corpus: {corpus.num_tokens:,} tokens, V={args.vocab}, "
+              f"K={args.topics}, model vars={args.vocab * args.topics:,}, "
+              f"sampler={args.sampler}")
+        if args.engine == "mp":
+            if args.resume:
+                lda = ModelParallelLDA.resume(corpus, mp_ckpt)
+                print(f"resumed mp run at iteration {lda.iteration_count}")
+            else:
+                lda = ModelParallelLDA(
+                    corpus, args.topics, args.workers, alpha=args.alpha,
+                    beta=args.beta, seed=args.seed,
+                    sampler_mode=args.sampler,
+                    blocks_per_worker=args.blocks_per_worker,
+                    data_parallel=args.data_parallel,
+                    table_lifetime=lifetime)
+            print(f"table lifetime: {lda.table_lifetime}")
+        else:
+            lda = DataParallelLDA(corpus, args.topics, args.workers,
+                                  alpha=args.alpha, beta=args.beta,
+                                  seed=args.seed)
+        num_tokens = corpus.num_tokens
 
     def take_snapshot():
         if hasattr(lda, "snapshot"):
@@ -118,21 +215,31 @@ def main() -> None:
                                          np.asarray(state.ck),
                                          args.alpha, args.beta)
 
+    def checkpoint():
+        if streaming:
+            lda.save_checkpoint()
+        else:
+            lda.save_checkpoint(mp_ckpt)
+
     history = []
     t0 = time.time()
-    for it in range(1, args.iters + 1):
+    for it in range(lda.iteration_count + 1, args.iters + 1):
         t_it = time.perf_counter()
         lda.step()
         iter_s = time.perf_counter() - t_it   # sampling only, no eval
-        ll = lda.log_likelihood()
-        rec = {"iteration": it, "log_likelihood": ll,
-               "iter_s": round(iter_s, 4),
-               "tokens_per_s": round(corpus.num_tokens / iter_s, 1),
+        rec = {"iteration": it, "iter_s": round(iter_s, 4),
+               "tokens_per_s": round(num_tokens / iter_s, 1),
                "elapsed_s": round(time.time() - t0, 2)}
-        if args.engine == "mp":
-            rec["delta_error"] = lda.delta_error()
-        else:
-            rec["staleness_error"] = lda.model_error()
+        lstr = ""
+        if args.eval_every and it % args.eval_every == 0:
+            ll = lda.log_likelihood()
+            rec["log_likelihood"] = ll
+            lstr = f"LL {ll:,.0f}  "
+        if not streaming:
+            if args.engine == "mp":
+                rec["delta_error"] = lda.delta_error()
+            else:
+                rec["staleness_error"] = lda.model_error()
         hstr = ""
         if holdout_docs is not None:
             ppl = doc_completion_perplexity(
@@ -142,9 +249,13 @@ def main() -> None:
             rec["holdout_perplexity"] = ppl["perplexity"]
             hstr = f"ppl {ppl['perplexity']:,.1f}  "
         history.append(rec)
+        if args.checkpoint_every and it % args.checkpoint_every == 0:
+            checkpoint()
+            rec["checkpointed"] = True
         if it % max(args.iters // 10, 1) == 0 or it == 1:
-            extra = (f"Δ={rec.get('delta_error', rec.get('staleness_error')):.5f}")
-            print(f"iter {it:4d}  LL {ll:,.0f}  {hstr}{extra}  "
+            err = rec.get("delta_error", rec.get("staleness_error"))
+            extra = f"Δ={err:.5f}" if err is not None else ""
+            print(f"iter {it:4d}  {lstr}{hstr}{extra}  "
                   f"{rec['iter_s']:.3f}s/iter "
                   f"{rec['tokens_per_s']:,.0f} tok/s  "
                   f"[{rec['elapsed_s']}s]", flush=True)
@@ -154,8 +265,11 @@ def main() -> None:
         import statistics
         med = statistics.median(r["tokens_per_s"] for r in history[1:])
         print(f"median throughput: {med:,.0f} tokens/s")
-    score = topic_recovery_score(np.asarray(lda.gather_counts().ckt), phi)
-    print(f"topic recovery score: {score:.3f}")
+    score = None
+    if phi is not None:
+        score = topic_recovery_score(np.asarray(lda.gather_counts().ckt),
+                                     phi)
+        print(f"topic recovery score: {score:.3f}")
     if args.ckpt:
         state = lda.gather_counts()
         save_checkpoint(args.ckpt, {"ckt": state.ckt, "cdk": state.cdk,
@@ -164,6 +278,12 @@ def main() -> None:
     if args.snapshot_out:
         take_snapshot().save(args.snapshot_out)
         print(f"saved serving snapshot to {args.snapshot_out}")
+    if args.snapshot_dir:
+        if not streaming:
+            ap.error("--snapshot-dir is the streaming engine's sharded "
+                     "export; use --snapshot-out for in-memory engines")
+        lda.save_snapshot_sharded(args.snapshot_dir)
+        print(f"saved sharded serving snapshot to {args.snapshot_dir}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"history": history, "recovery": score}, f, indent=1)

@@ -5,9 +5,18 @@ The launch drivers (`lda_train`, `lda_infer`) used to hard-code their
 every CLI.  Choices now come from the engine registry itself
 (`engine/rounds.py`), plus the pseudo-sampler ``auto``:
 
-* ``auto`` resolves per platform: the Pallas kernels on TPU, their jnp
-  twins elsewhere.  The pairs draw identically, so ``auto`` never
-  changes a chain — only which compiled form runs it.
+* ``auto`` picks the sampler FAMILY from the measured regime map
+  (``benchmarks/bench_sparse.py`` full mode, the PR-6 K × doc-len
+  sweep): nearest cell in (log₂ K, log₂ max-doc-len) space decides
+  between ``scan``, ``mh``, and ``sparse`` — the long-tail observation
+  that sparse wins 6/9 cells, MH only the short-K/long-doc corner, and
+  exact scan the mid-K dense cells.  Callers pass the workload's
+  ``num_topics``/``max_doc_len``; without them, ``auto`` falls back to
+  the MH family (the old behaviour).
+* ``auto`` then resolves the chosen family per platform: the Pallas
+  kernel form on TPU, the jnp twin elsewhere.  The pairs draw
+  identically, so the platform leg never changes a chain — only which
+  compiled form runs it.
 * Off TPU, an EXPLICITLY requested ``*_pallas`` sampler runs the kernel
   in interpret mode — correct (the bit-identity tests rely on it) but
   slow at real workload sizes (the repo-root BENCH digest shows
@@ -15,6 +24,35 @@ every CLI.  Choices now come from the engine registry itself
   the drivers refuse it unless ``--force`` is given.
 """
 from __future__ import annotations
+
+import math
+
+# Measured winners of the K × max-doc-len sweep
+# (benchmarks/results/bench_sparse.json, mode="full": Vb=64, 8k tokens,
+# Zipf 1.1).  Keys are the swept (K, doc_len) grid points; lookups snap
+# to the nearest cell in log2 space, since both axes are scale
+# parameters.
+REGIME_MAP = {
+    (256, 16): "sparse", (256, 48): "sparse", (256, 256): "mh",
+    (4096, 16): "scan", (4096, 48): "sparse", (4096, 256): "scan",
+    (16384, 16): "sparse", (16384, 48): "sparse", (16384, 256): "sparse",
+}
+
+# jnp form -> Pallas kernel form of the same chain (draw-identical
+# pairs).  "scan" is the exact kernel and has no frozen-count Pallas
+# twin, so it runs as-is everywhere.
+_PALLAS_TWIN = {"mh": "mh_pallas", "sparse": "sparse_pallas"}
+
+
+def regime_sampler(num_topics: int, max_doc_len: int) -> str:
+    """Sampler family for a workload: nearest :data:`REGIME_MAP` cell in
+    (log₂ K, log₂ max-doc-len) space; grid-exact at the measured points."""
+    lk = math.log2(max(int(num_topics), 1))
+    ll = math.log2(max(int(max_doc_len), 1))
+    cell = min(REGIME_MAP,
+               key=lambda c: ((math.log2(c[0]) - lk) ** 2
+                              + (math.log2(c[1]) - ll) ** 2, c))
+    return REGIME_MAP[cell]
 
 
 def train_sampler_choices() -> list:
@@ -36,18 +74,28 @@ def infer_sampler_choices() -> list:
 
 
 def resolve_sampler_choice(name: str, *, force: bool = False,
+                           num_topics: int | None = None,
+                           max_doc_len: int | None = None,
                            auto_tpu: str = "mh_pallas",
                            auto_default: str = "mh") -> str:
     """Resolve a CLI ``--sampler`` value to a registry sampler name.
 
-    ``auto`` picks the Pallas form on TPU and the jnp form elsewhere
-    (distribution-identical either way).  An explicit ``*_pallas`` off
-    TPU exits with guidance unless ``force`` — interpret mode is a
-    validation vehicle, not a serving path.
+    ``auto`` with the workload's ``num_topics``/``max_doc_len`` picks the
+    family from the measured :data:`REGIME_MAP` (so the drivers must
+    resolve AFTER the corpus exists), then the Pallas form of that family
+    on TPU and the jnp form elsewhere (draw-identical either way).
+    Without workload parameters it falls back to ``auto_tpu`` /
+    ``auto_default`` — the pre-regime-map behaviour.  An explicit
+    ``*_pallas`` off TPU exits with guidance unless ``force`` —
+    interpret mode is a validation vehicle, not a serving path.
     """
     import jax
     on_tpu = jax.default_backend() == "tpu"
     if name == "auto":
+        if num_topics is not None and max_doc_len is not None:
+            family = regime_sampler(num_topics, max_doc_len)
+            return (_PALLAS_TWIN.get(family, family) if on_tpu
+                    else family)
         return auto_tpu if on_tpu else auto_default
     if name.endswith("_pallas") and not on_tpu and not force:
         raise SystemExit(

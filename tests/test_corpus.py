@@ -109,3 +109,79 @@ def test_doc_words_roundtrip():
     docs = [[0, 2, 1], [1], [2, 2]]
     corpus = from_documents(docs, vocab_size=3)
     assert [list(w) for w in corpus.doc_words()] == docs
+
+
+def _doc_words_loop(corpus):
+    """The original O(N)-Python-loop implementation, kept as the
+    regression reference for the vectorized ``Corpus.doc_words``."""
+    out = [[] for _ in range(corpus.num_docs)]
+    for d, w in zip(corpus.doc, corpus.word):
+        out[d].append(int(w))
+    return [np.asarray(ws, np.int32) for ws in out]
+
+
+def test_doc_words_vectorized_bit_equals_loop():
+    """argsort+split must reproduce the loop version exactly — including
+    within-document stream order, empty documents, and non-doc-major
+    streams (bigram_corpus interleaves before its final sort)."""
+    rng = np.random.default_rng(11)
+    num_docs, vocab = 37, 19
+    # doc ids shuffled (NOT doc-major) with some docs absent entirely
+    doc = rng.integers(0, num_docs, size=400).astype(np.int32)
+    doc[doc == 5] = 6                     # doc 5 is empty
+    word = rng.integers(0, vocab, size=400).astype(np.int32)
+    corpus = Corpus(doc, word, num_docs, vocab)
+    fast = corpus.doc_words()
+    slow = _doc_words_loop(corpus)
+    assert len(fast) == len(slow) == num_docs
+    for f, s in zip(fast, slow):
+        assert f.dtype == np.int32
+        np.testing.assert_array_equal(f, s)
+    assert fast[5].shape == (0,)
+
+
+def test_doc_words_empty_corpus():
+    corpus = Corpus(np.zeros(0, np.int32), np.zeros(0, np.int32), 3, 4)
+    words = corpus.doc_words()
+    assert len(words) == 3 and all(w.shape == (0,) for w in words)
+
+
+def test_load_corpus_validates(tmp_path):
+    """A corrupt archive must fail at load time, not deep inside the
+    engine: here the stored vocab_size lies about the token stream."""
+    corpus = from_documents([[0, 1], [2, 1]], vocab_size=3)
+    path = str(tmp_path / "bad")
+    np.savez_compressed(path + ".npz", doc=corpus.doc, word=corpus.word,
+                        num_docs=corpus.num_docs, vocab_size=2)  # < max id
+    with pytest.raises(ValueError, match="vocab_size"):
+        load_corpus(path)
+
+
+def test_load_corpus_rejects_non_corpus_archive(tmp_path):
+    path = str(tmp_path / "notacorpus")
+    np.savez_compressed(path + ".npz", foo=np.arange(3))
+    with pytest.raises(ValueError, match="not a corpus archive"):
+        load_corpus(path)
+
+
+def test_load_corpus_closes_file_handle(tmp_path):
+    """load_corpus must not leak the npz zip handle (the streaming
+    trainer opens thousands of shard files per run)."""
+    import gc
+
+    corpus = from_documents([[0, 1], [1, 2]], vocab_size=3)
+    path = str(tmp_path / "handle")
+    save_corpus(corpus, path)
+    before = _open_fd_count()
+    for _ in range(8):
+        load_corpus(path)
+    gc.collect()
+    assert _open_fd_count() <= before
+
+
+def _open_fd_count() -> int:
+    import os
+    try:
+        return len(os.listdir("/proc/self/fd"))
+    except OSError:                        # non-Linux: best effort
+        return 0
