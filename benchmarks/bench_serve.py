@@ -1,0 +1,149 @@
+"""Open-loop serving benchmark: traffic replay through the scheduler
+(DESIGN.md §14).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+
+Where `bench_infer.py` measures the fold-in engine closed-loop (batch
+after batch, back to back), this benchmark measures the SCHEDULER the
+way production traffic hits it: a seeded Poisson arrival process with
+heavy-tailed doc lengths and a hot-query fraction, replayed open-loop
+under wall time.  Two phases per sampler:
+
+* **saturation** — every request arrives at t=0 (offered load ≫
+  capacity, queue sized to hold the burst): served queries/s is the
+  scheduler's ceiling, the number capacity planning divides traffic by.
+* **latency** — the same trace shape offered at ~60% of the measured
+  saturation rate, with one snapshot HOT-SWAP at the midpoint: p50/p99
+  response latency (queueing included — the open-loop property), cache
+  hit rate, and the zero-dropped / finite-p99 assertions the CI smoke
+  also enforces.
+
+Results land in ``benchmarks/results/bench_serve.json`` and — full mode
+only — fold into the repo-root ``BENCH_e2e.json`` trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.bench_e2e import aggregate_root
+from benchmarks.common import emit_csv_row, save_result
+from repro.core.engine.api import ModelParallelLDA
+from repro.data.synthetic import synthetic_corpus
+from repro.serve.scheduler import ServingScheduler, WallClock
+from repro.serve.traffic import poisson_trace, replay_open_loop
+
+FULL = dict(docs=128, vocab=256, topics=16, k=256, doc_len=48,
+            train_iters=3, sweeps=5, samplers=("scan", "mh"),
+            requests=256, max_len=64, hot_fraction=0.25, hot_pool=8,
+            replicas=2, max_batch=16, max_queue=4096)
+SMOKE = dict(docs=24, vocab=64, topics=8, k=16, doc_len=16,
+             train_iters=1, sweeps=2, samplers=("scan",),
+             requests=32, max_len=16, hot_fraction=0.25, hot_pool=4,
+             replicas=2, max_batch=8, max_queue=1024)
+
+
+def _train_snapshots(cfg, seed: int):
+    """Two snapshots of the same run at different iterations — the
+    'training advanced, serve the new model' pair the hot-swap replays."""
+    corpus, _, _ = synthetic_corpus(cfg["docs"], cfg["vocab"],
+                                    cfg["topics"], cfg["doc_len"],
+                                    seed=seed)
+    lda = ModelParallelLDA(corpus, cfg["k"], num_workers=2, seed=seed,
+                           sampler_mode="batched", track_error=False)
+    lda.run(max(cfg["train_iters"] - 1, 1))
+    snap_a = lda.snapshot()
+    lda.run(1)
+    return snap_a, lda.snapshot()
+
+
+def _scheduler(cfg, snap, sampler, seed):
+    return ServingScheduler(snap, sampler=sampler, num_sweeps=cfg["sweeps"],
+                            seed=seed, num_replicas=cfg["replicas"],
+                            max_batch=cfg["max_batch"],
+                            max_queue=cfg["max_queue"],
+                            cache_capacity=256, clock=WallClock())
+
+
+def run(smoke: bool = False, seed: int = 0) -> dict:
+    cfg = SMOKE if smoke else FULL
+    snap_a, snap_b = _train_snapshots(cfg, seed)
+    out = {
+        "mode": "smoke" if smoke else "full",
+        "workload": {"vocab": cfg["vocab"], "k": cfg["k"],
+                     "requests": cfg["requests"],
+                     "fold_in_sweeps": cfg["sweeps"],
+                     "max_doc_len": cfg["max_len"],
+                     "hot_fraction": cfg["hot_fraction"],
+                     "replicas": cfg["replicas"],
+                     "max_batch": cfg["max_batch"]},
+        "samplers": {},
+    }
+    for sampler in cfg["samplers"]:
+        # saturation: the whole trace arrives at once (rate -> inf);
+        # served/s against a never-empty queue is the throughput ceiling
+        sat_trace = poisson_trace(cfg["requests"], 1e9, cfg["vocab"],
+                                  seed=seed + 1, max_len=cfg["max_len"],
+                                  hot_fraction=cfg["hot_fraction"],
+                                  hot_pool=cfg["hot_pool"])
+        sched = _scheduler(cfg, snap_a, sampler, seed)
+        # compile every reachable bucket OUTSIDE the timed loops — the
+        # jit cache is shape-keyed, so this also covers the post-swap
+        # snapshot; without it p99 measures XLA compiles, not serving
+        buckets = sched.warm(cfg["max_len"])
+        sat = replay_open_loop(sched, sat_trace)
+        assert sat["dropped"] == 0
+        sat_qps = sat["served_qps"]
+
+        # latency: same trace shape at ~60% of saturation, one mid-replay
+        # hot-swap; p50/p99 include queueing (open loop)
+        rate = max(0.6 * sat_qps, 1.0)
+        lat_trace = poisson_trace(cfg["requests"], rate, cfg["vocab"],
+                                  seed=seed + 2, max_len=cfg["max_len"],
+                                  hot_fraction=cfg["hot_fraction"],
+                                  hot_pool=cfg["hot_pool"])
+        sched = _scheduler(cfg, snap_a, sampler, seed)
+        lat = replay_open_loop(sched, lat_trace,
+                               swap_after=cfg["requests"] // 2,
+                               swap_snapshot=snap_b)
+        assert lat["dropped"] == 0, lat
+        assert np.isfinite(lat["p99_ms"]), lat
+        assert len(lat["epochs"]) == 2      # both snapshots really served
+        rec = {"warmed_buckets": buckets,
+               "saturation_qps": sat_qps,
+               "saturation": {k: sat[k] for k in
+                              ("served_qps", "elapsed_s", "batches")},
+               "latency": {k: lat[k] for k in
+                           ("offered_qps", "served_qps", "p50_ms",
+                            "p99_ms", "dropped", "swap_epoch", "epochs",
+                            "cache", "batches")}}
+        out["samplers"][sampler] = rec
+        emit_csv_row(f"serve_{sampler}_k{cfg['k']}", lat["p50_ms"] * 1e3,
+                     f"sat_qps={sat_qps:.1f},p99_ms={lat['p99_ms']:.2f},"
+                     f"cache_hits={lat['cache']['hits']}")
+    save_result("bench_serve_smoke" if smoke else "bench_serve", out)
+    if not smoke:
+        aggregate_root()      # fold into the repo-root BENCH trajectory
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI workload; not recorded in the root "
+                         "BENCH trajectory")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    res = run(smoke=args.smoke)
+    for sampler, rec in res["samplers"].items():
+        lat = rec["latency"]
+        print(f"# {sampler}: saturation {rec['saturation_qps']:,.1f} q/s; "
+              f"at {lat['offered_qps']:,.1f} q/s offered: "
+              f"p50 {lat['p50_ms']:.2f} ms  p99 {lat['p99_ms']:.2f} ms  "
+              f"cache {lat['cache']['hits']}/{lat['cache']['hits'] + lat['cache']['misses']} hit  "
+              f"epochs {lat['epochs']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -88,3 +88,26 @@ python -m repro.launch.lda_train --workdir "$STREAM_DIR/run" --resume \
 python -m repro.launch.lda_infer --snapshot-dir "$STREAM_DIR/snap" \
     --queries 8 --query-len 16 --sweeps 3 --sampler scan
 rm -rf "$STREAM_DIR"
+
+# Pass 8: serving-scheduler traffic-replay smoke (DESIGN.md §14).  Shard
+# a corpus, train the streaming engine twice to two SHARDED snapshots
+# (earlier + later iterations of one run), then replay a seeded
+# open-loop Poisson trace through lda_serve with a mid-replay hot-swap
+# between them — exits non-zero if any admitted request is dropped, p99
+# is non-finite, or the post-swap epoch never serves.  Both snapshot
+# directories are row-restricted with the SAME word set, so the swap
+# stays a pointer flip.  Then the scheduler benchmark's smoke workload
+# (saturation + latency phases, .npz snapshots, warm-bucket precompile).
+SERVE_DIR="$(mktemp -d)"
+python -m repro.data.stream --out "$SERVE_DIR/corpus" --zipf 1.1 \
+    --docs 64 --vocab 128 --doc-len 24 --shards 4 --seed 11
+python -m repro.launch.lda_train --corpus-dir "$SERVE_DIR/corpus" \
+    --workdir "$SERVE_DIR/run" --topics 8 --workers 2 --iters 2 \
+    --checkpoint-every 2 --snapshot-dir "$SERVE_DIR/snapA"
+python -m repro.launch.lda_train --workdir "$SERVE_DIR/run" --resume \
+    --iters 4 --checkpoint-every 2 --snapshot-dir "$SERVE_DIR/snapB"
+python -m repro.launch.lda_serve --snapshot-dir "$SERVE_DIR/snapA" \
+    --swap-snapshot-dir "$SERVE_DIR/snapB" --swap-after 12 \
+    --requests 32 --rate 400 --max-len 16 --sweeps 3 --seed 0
+rm -rf "$SERVE_DIR"
+python -m benchmarks.bench_serve --smoke

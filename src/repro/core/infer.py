@@ -81,6 +81,8 @@ class ModelSnapshot:
         dataclasses.field(default=None, repr=False, compare=False)
     _sparse_state: Optional[tuple] = \
         dataclasses.field(default=None, repr=False, compare=False)
+    _fingerprint: Optional[str] = \
+        dataclasses.field(default=None, repr=False, compare=False)
 
     @classmethod
     def from_counts(cls, ckt, ck=None, alpha=0.1, beta=0.01,
@@ -141,6 +143,31 @@ class ModelSnapshot:
                 axis=1, dtype=np.float32)
             self._sparse_state = (xcs, np.ascontiguousarray(xcs[:, -1]))
         return self._sparse_state
+
+    def fingerprint(self) -> str:
+        """Content identity of the frozen model (hex digest over counts +
+        priors), computed lazily and once per snapshot.
+
+        Two snapshots with the same fingerprint serve bitwise-identical
+        responses — every derived quantity (``φ̂ᵀ``, alias tables, sparse
+        state) is a deterministic function of exactly these bytes.  The
+        serving scheduler (DESIGN.md §14) stamps it on every response
+        alongside the swap epoch: the epoch says WHEN a model was
+        installed, the fingerprint says WHAT was installed, so a swap to
+        a bit-identical snapshot is observable as a new epoch with an
+        unchanged fingerprint."""
+        if self._fingerprint is None:
+            import hashlib
+            h = hashlib.sha256()
+            h.update(np.asarray(
+                [self.ckt.shape[0], self.ckt.shape[1],
+                 self.true_vocab_size or 0], np.int64).tobytes())
+            h.update(np.ascontiguousarray(self.ckt).tobytes())
+            h.update(np.ascontiguousarray(self.ck).tobytes())
+            h.update(np.ascontiguousarray(self.alpha).tobytes())
+            h.update(np.float64(self.beta).tobytes())
+            self._fingerprint = h.hexdigest()[:16]
+        return self._fingerprint
 
     def ensure_tables(self) -> np.ndarray:
         """Build (once) and return the packed per-word alias tables."""

@@ -89,6 +89,50 @@ class TopicInferenceServer:
         self.docs_served += len(docs)
         return res.theta[:len(docs)]
 
+    def infer_with_draws(self, docs: Sequence[Sequence[int]],
+                         z0_rows: Sequence[np.ndarray],
+                         u_rows: Sequence[np.ndarray]) -> np.ndarray:
+        """Batched query with EXTERNAL per-doc randomness — the serving
+        scheduler's seed contract (DESIGN.md §14).
+
+        Row ``i`` of the packed batch takes its initial assignments from
+        ``z0_rows[i]`` ``[len_i]`` and its uniforms from ``u_rows[i]``
+        ``[num_sweeps, len_i]``; pad slots are filled with inert zeros.
+        Because every slot that can influence doc ``i`` is supplied by
+        the caller, a doc's mixture is a pure function of (snapshot,
+        tokens, its own draws) — independent of batch composition,
+        bucket shape, and every other doc (the pad-invariance property,
+        proven bitwise in tests/test_infer.py).  This is what lets the
+        scheduler cache responses, compare them across swap epochs, and
+        dispatch to any replica without changing a single bit.
+        """
+        if not len(docs):
+            return np.zeros((0, self.snapshot.num_topics), np.float64)
+        if len(z0_rows) != len(docs) or len(u_rows) != len(docs):
+            raise ValueError(
+                f"need one z0/u row per doc: {len(docs)} docs vs "
+                f"{len(z0_rows)}/{len(u_rows)} rows")
+        qb, tb = self.bucket_shape(docs)
+        word, mask = pack_queries(docs, t_pad=tb, q_pad=qb)
+        z0 = np.zeros((qb, tb), np.int32)
+        u = np.zeros((self.num_sweeps, qb, tb), np.float32)
+        for i, d in enumerate(docs):
+            n = len(d)
+            z_r = np.asarray(z0_rows[i], np.int32)
+            u_r = np.asarray(u_rows[i], np.float32)
+            if z_r.shape != (n,) or u_r.shape != (self.num_sweeps, n):
+                raise ValueError(
+                    f"doc {i}: draws must be z0 [{n}] / u "
+                    f"[{self.num_sweeps}, {n}], got {z_r.shape} / "
+                    f"{u_r.shape}")
+            z0[i, :n] = z_r
+            u[:, i, :n] = u_r
+        res = fold_in(self.snapshot, word, mask, num_sweeps=self.num_sweeps,
+                      sampler=self.sampler, z0=z0, u=u)
+        self.bucket_calls[(qb, tb)] = self.bucket_calls.get((qb, tb), 0) + 1
+        self.docs_served += len(docs)
+        return res.theta[:len(docs)]
+
     def infer_one(self, words: Sequence[int]) -> np.ndarray:
         """Single-doc convenience: word ids -> ``θ̂`` [K]."""
         return self.infer([words])[0]

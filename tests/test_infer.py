@@ -256,3 +256,82 @@ def test_server_scan_matches_direct_fold_in(snap, tiny_corpus):
     res = fold_in(snap, word, mask, num_sweeps=4, sampler="scan",
                   rng=np.random.default_rng(42))
     np.testing.assert_allclose(theta, res.theta[:2])
+
+# ---------------------------------------------------------------------------
+# Server edge cases (PR 8 backfill) + the scheduler's draw-injection API
+# ---------------------------------------------------------------------------
+
+def test_server_empty_doc_in_batch_gets_prior_mixture(snap, tiny_corpus):
+    """A zero-length doc is all padding: its mixture is the normalized
+    prior (no evidence), and it must not perturb its batchmates."""
+    corpus, _, _ = tiny_corpus
+    rng = np.random.default_rng(9)
+    doc = rng.integers(0, corpus.vocab_size, size=7)
+    server = TopicInferenceServer(snap, sampler="scan", num_sweeps=3,
+                                  seed=0)
+    theta = server.infer([doc, np.zeros(0, np.int32)])
+    assert theta.shape == (2, K)
+    np.testing.assert_allclose(theta[1], snap.alpha / snap.alpha.sum(),
+                               rtol=1e-12)
+    np.testing.assert_allclose(theta.sum(axis=1), 1.0, rtol=1e-12)
+
+
+def test_server_batch_of_one(snap, tiny_corpus):
+    corpus, _, _ = tiny_corpus
+    rng = np.random.default_rng(10)
+    doc = rng.integers(0, corpus.vocab_size, size=5)
+    server = TopicInferenceServer(snap, sampler="scan", seed=3)
+    theta = server.infer([doc])
+    assert theta.shape == (1, K)
+    assert server.bucket_calls == {(1, 8): 1}
+
+
+def test_server_doc_longer_than_min_bucket(snap, tiny_corpus):
+    """A doc past every warmed bucket pads into the next power of two —
+    a fresh compile, never an error or a truncation."""
+    corpus, _, _ = tiny_corpus
+    rng = np.random.default_rng(11)
+    doc = rng.integers(0, corpus.vocab_size, size=100)
+    server = TopicInferenceServer(snap, sampler="scan", seed=4)
+    assert server.bucket_shape([doc]) == (1, 128)
+    theta = server.infer([doc])
+    assert theta.shape == (1, K)
+    assert np.isfinite(theta).all()
+    assert server.bucket_calls == {(1, 128): 1}
+
+
+@pytest.mark.parametrize("sampler", ["scan", "mh", "sparse"])
+def test_infer_with_draws_bucket_invariance(snap, tiny_corpus, sampler):
+    """The scheduler's foundation: with per-doc draws supplied, a doc's
+    mixture is bitwise the same served alone in a (1, 8) bucket or
+    packed with strangers into a (4, 32) bucket — for every sampler
+    family the scheduler can bind."""
+    corpus, _, _ = tiny_corpus
+    rng = np.random.default_rng(12)
+    sweeps = 3
+    docs = [rng.integers(0, corpus.vocab_size, size=n).astype(np.int32)
+            for n in (6, 8, 17)]
+    z0s = [rng.integers(0, K, size=len(d)).astype(np.int32) for d in docs]
+    us = [rng.random((sweeps, len(d)), dtype=np.float32) for d in docs]
+    server = TopicInferenceServer(snap, sampler=sampler, num_sweeps=sweeps,
+                                  seed=0)
+    batched = server.infer_with_draws(docs, z0s, us)
+    for i, d in enumerate(docs):
+        alone = server.infer_with_draws([d], [z0s[i]], [us[i]])
+        np.testing.assert_array_equal(alone[0], batched[i])
+
+
+def test_infer_with_draws_validation(snap, tiny_corpus):
+    corpus, _, _ = tiny_corpus
+    rng = np.random.default_rng(13)
+    doc = rng.integers(0, corpus.vocab_size, size=5).astype(np.int32)
+    server = TopicInferenceServer(snap, sampler="scan", num_sweeps=2)
+    assert server.infer_with_draws([], [], []).shape == (0, K)
+    z0 = rng.integers(0, K, size=5).astype(np.int32)
+    u = rng.random((2, 5), dtype=np.float32)
+    with pytest.raises(ValueError, match="one z0/u row per doc"):
+        server.infer_with_draws([doc], [z0, z0], [u, u])
+    with pytest.raises(ValueError, match="draws must be"):
+        server.infer_with_draws([doc], [z0[:3]], [u])
+    with pytest.raises(ValueError, match="draws must be"):
+        server.infer_with_draws([doc], [z0], [u[:1]])
