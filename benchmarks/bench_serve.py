@@ -17,6 +17,12 @@ under wall time.  Two phases per sampler:
   response latency (queueing included — the open-loop property), cache
   hit rate, and the zero-dropped / finite-p99 assertions the CI smoke
   also enforces.
+* **degraded** — the latency trace replayed with replica 0 scripted to
+  fail EVERY dispatch (DESIGN.md §15): the surviving replicas absorb the
+  load through the retry + circuit-breaker path, every admitted query is
+  still answered (dropped == 0 — retries are bitwise-invisible, so the
+  answers are the healthy ones), and the fault counters (retries,
+  breaker opens, failures) land in the results.
 
 Results land in ``benchmarks/results/bench_serve.json`` and — full mode
 only — fold into the repo-root ``BENCH_e2e.json`` trajectory.
@@ -30,6 +36,7 @@ import numpy as np
 from benchmarks.bench_e2e import aggregate_root
 from benchmarks.common import emit_csv_row, save_result
 from repro.core.engine.api import ModelParallelLDA
+from repro.core.faults import FaultPlan
 from repro.data.synthetic import synthetic_corpus
 from repro.serve.scheduler import ServingScheduler, WallClock
 from repro.serve.traffic import poisson_trace, replay_open_loop
@@ -58,12 +65,12 @@ def _train_snapshots(cfg, seed: int):
     return snap_a, lda.snapshot()
 
 
-def _scheduler(cfg, snap, sampler, seed):
+def _scheduler(cfg, snap, sampler, seed, **kw):
     return ServingScheduler(snap, sampler=sampler, num_sweeps=cfg["sweeps"],
                             seed=seed, num_replicas=cfg["replicas"],
                             max_batch=cfg["max_batch"],
                             max_queue=cfg["max_queue"],
-                            cache_capacity=256, clock=WallClock())
+                            cache_capacity=256, clock=WallClock(), **kw)
 
 
 def run(smoke: bool = False, seed: int = 0) -> dict:
@@ -110,6 +117,20 @@ def run(smoke: bool = False, seed: int = 0) -> dict:
         assert lat["dropped"] == 0, lat
         assert np.isfinite(lat["p99_ms"]), lat
         assert len(lat["epochs"]) == 2      # both snapshots really served
+        # degraded: same offered rate with replica 0 failing every
+        # dispatch — measures the price of riding through an outage
+        deg_trace = poisson_trace(cfg["requests"], rate, cfg["vocab"],
+                                  seed=seed + 2, max_len=cfg["max_len"],
+                                  hot_fraction=cfg["hot_fraction"],
+                                  hot_pool=cfg["hot_pool"])
+        sched = _scheduler(cfg, snap_a, sampler, seed,
+                           breaker_cooldown=0.05,
+                           fault_plan=FaultPlan.replica_fail(0, nth=0))
+        sched.warm(cfg["max_len"])
+        deg = replay_open_loop(sched, deg_trace)
+        assert deg["dropped"] == 0, deg
+        assert deg["faults"]["replica_failures"] > 0, deg
+
         rec = {"warmed_buckets": buckets,
                "saturation_qps": sat_qps,
                "saturation": {k: sat[k] for k in
@@ -117,7 +138,10 @@ def run(smoke: bool = False, seed: int = 0) -> dict:
                "latency": {k: lat[k] for k in
                            ("offered_qps", "served_qps", "p50_ms",
                             "p99_ms", "dropped", "swap_epoch", "epochs",
-                            "cache", "batches")}}
+                            "cache", "batches")},
+               "degraded": {k: deg[k] for k in
+                            ("served_qps", "p50_ms", "p99_ms", "dropped",
+                             "faults")}}
         out["samplers"][sampler] = rec
         emit_csv_row(f"serve_{sampler}_k{cfg['k']}", lat["p50_ms"] * 1e3,
                      f"sat_qps={sat_qps:.1f},p99_ms={lat['p99_ms']:.2f},"
@@ -143,6 +167,10 @@ def main() -> None:
               f"p50 {lat['p50_ms']:.2f} ms  p99 {lat['p99_ms']:.2f} ms  "
               f"cache {lat['cache']['hits']}/{lat['cache']['hits'] + lat['cache']['misses']} hit  "
               f"epochs {lat['epochs']}")
+        deg = rec["degraded"]
+        print(f"# {sampler} degraded (replica 0 down): "
+              f"p50 {deg['p50_ms']:.2f} ms  p99 {deg['p99_ms']:.2f} ms  "
+              f"dropped {deg['dropped']}  faults {deg['faults']}")
 
 
 if __name__ == "__main__":

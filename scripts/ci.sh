@@ -111,3 +111,50 @@ python -m repro.launch.lda_serve --snapshot-dir "$SERVE_DIR/snapA" \
     --requests 32 --rate 400 --max-len 16 --sweeps 3 --seed 0
 rm -rf "$SERVE_DIR"
 python -m benchmarks.bench_serve --smoke
+
+# Pass 9: fault-injection + crash-recovery smoke (DESIGN.md §15).  A
+# reference streaming run trains uninterrupted to 4 iterations; a second
+# run gets a scripted crash (REPRO_FAULT_PLAN kills it at the start of
+# iteration 3, the in-process model of SIGKILL) under
+# `lda_train --supervise`, which quarantines debris and auto-resumes
+# from the last good checkpoint.  The two workdirs must then be
+# BITWISE equal: counts, every assignment, and the rng bit-generator
+# state — recovery is invisible, not approximate.  Then the scheduler
+# rides through a dead replica: lda_serve with replica 0 scripted to
+# fail every dispatch must answer 100% of admitted queries (it exits
+# non-zero on any drop) and prints the breaker/fault counters.
+FT_DIR="$(mktemp -d)"
+python -m repro.data.stream --out "$FT_DIR/corpus" --zipf 1.1 \
+    --docs 64 --vocab 128 --doc-len 24 --shards 4 --seed 11
+python -m repro.launch.lda_train --corpus-dir "$FT_DIR/corpus" \
+    --workdir "$FT_DIR/run_ref" --topics 8 --workers 2 --iters 4 \
+    --checkpoint-every 1 --sampler scan
+REPRO_FAULT_PLAN='{"format":"fault-plan-v1","seed":0,"specs":[{"kind":"crash","point":"step","match":"iter:2,","nth":1,"arg":0.0}]}' \
+    python -m repro.launch.lda_train --corpus-dir "$FT_DIR/corpus" \
+    --workdir "$FT_DIR/run_crash" --topics 8 --workers 2 --iters 4 \
+    --checkpoint-every 1 --sampler scan --supervise --max-restarts 2
+python - "$FT_DIR/run_ref" "$FT_DIR/run_crash" << 'PYEOF'
+import sys
+import numpy as np
+from repro.core.engine.streaming import StreamingLDA
+ref = StreamingLDA.resume(sys.argv[1])
+rec = StreamingLDA.resume(sys.argv[2])
+assert ref.iteration_count == rec.iteration_count == 4, \
+    (ref.iteration_count, rec.iteration_count)
+sa, sb = ref.gather_counts(), rec.gather_counts()
+for name in ("cdk", "ckt", "ck"):
+    np.testing.assert_array_equal(np.asarray(getattr(sa, name)),
+                                  np.asarray(getattr(sb, name)),
+                                  err_msg=f"{name} diverged")
+np.testing.assert_array_equal(ref.assignments(), rec.assignments(),
+                              err_msg="assignments diverged")
+assert ref._rng.bit_generator.state == rec._rng.bit_generator.state, \
+    "rng state diverged"
+print("bitwise: crashed+supervised chain == uninterrupted chain")
+PYEOF
+python -m repro.launch.lda_train --workdir "$FT_DIR/run_crash" --resume \
+    --iters 4 --snapshot-dir "$FT_DIR/snap"
+python -m repro.launch.lda_serve --snapshot-dir "$FT_DIR/snap" \
+    --replicas 2 --inject-replica-fail 0 --breaker-cooldown 0.05 \
+    --requests 32 --rate 400 --max-len 16 --sweeps 3 --seed 0
+rm -rf "$FT_DIR"

@@ -275,6 +275,8 @@ class ModelParallelLDA:
 
     def step(self) -> None:
         """Run one iteration (= S·M rounds, every token sampled once)."""
+        from repro.core import faults
+        faults.fire("step", f"iter:{self.iteration_count},engine:mp")
         u = self._uniforms()
         if self.backend == "vmap":
             self.state, errs = iteration_vmap(
@@ -349,21 +351,29 @@ class ModelParallelLDA:
             "vocab_size": self.corpus.vocab_size,
             "num_docs": self.corpus.num_docs,
         }
+        from repro.core import faults
+        from repro.data import integrity
         rng_state = self._rng.bit_generator.state
         stem = npz_stem(path)
         os.makedirs(os.path.dirname(stem) or ".", exist_ok=True)
-        tmp = stem + ".tmp.npz"
-        np.savez(tmp,
-                 cdk=np.asarray(s.cdk), ckt=np.asarray(s.ckt),
-                 block_id=np.asarray(s.block_id),
-                 ck_synced=np.asarray(s.ck_synced),
-                 ck_local=np.asarray(s.ck_local), z=np.asarray(s.z),
-                 config=np.frombuffer(
-                     json.dumps(cfg).encode(), np.uint8),
-                 rng_state=np.frombuffer(
-                     json.dumps(rng_state).encode(), np.uint8))
-        os.replace(tmp, stem + ".npz")
-        return stem + ".npz"
+        final = stem + ".npz"
+        faults.fire("mp_ckpt.begin", final)
+        # atomic + crc32-sidecar publish (DESIGN.md §15): integrity.save_npz
+        # writes a temp file, fsyncs, os.replace-s, then stamps <path>.sum
+        # — its npz.tmp_written fire point plus mp_ckpt.begin/promoted here
+        # bracket every instant the kill-during-checkpoint tests target
+        integrity.save_npz(
+            final,
+            cdk=np.asarray(s.cdk), ckt=np.asarray(s.ckt),
+            block_id=np.asarray(s.block_id),
+            ck_synced=np.asarray(s.ck_synced),
+            ck_local=np.asarray(s.ck_local), z=np.asarray(s.z),
+            config=np.frombuffer(
+                json.dumps(cfg).encode(), np.uint8),
+            rng_state=np.frombuffer(
+                json.dumps(rng_state).encode(), np.uint8))
+        faults.fire("mp_ckpt.promoted", final)
+        return final
 
     @classmethod
     def resume(cls, corpus: Corpus, path: str, backend: str = "vmap",
@@ -377,19 +387,23 @@ class ModelParallelLDA:
         to one that never stopped: the static layout is a pure function
         of ``(corpus, M, S, D)``, the chain state is restored bitwise,
         and the rng continues from the saved bit-generator state."""
+        from repro.data import integrity
         from repro.data.corpus import npz_stem
         stem = npz_stem(path)
-        with np.load(stem + ".npz") as data:
-            try:
-                cfg = json.loads(bytes(data["config"]).decode())
-                rng_state = json.loads(bytes(data["rng_state"]).decode())
-                arrays = {k: np.asarray(data[k]) for k in
-                          ("cdk", "ckt", "block_id", "ck_synced",
-                           "ck_local", "z")}
-            except KeyError as e:
-                raise ValueError(
-                    f"{stem}.npz is not an engine checkpoint: "
-                    f"missing {e}") from e
+        # validated load: a bit-flipped or torn checkpoint raises the
+        # integrity taxonomy here instead of np.load's zip errors (or
+        # silently-decoded garbage) poisoning the resumed chain
+        data = integrity.load_npz(stem + ".npz")
+        try:
+            cfg = json.loads(bytes(data["config"]).decode())
+            rng_state = json.loads(bytes(data["rng_state"]).decode())
+            arrays = {k: np.asarray(data[k]) for k in
+                      ("cdk", "ckt", "block_id", "ck_synced",
+                       "ck_local", "z")}
+        except KeyError as e:
+            raise ValueError(
+                f"{stem}.npz is not an engine checkpoint: "
+                f"missing {e}") from e
         if cfg.get("format") != cls.CKPT_FORMAT:
             raise ValueError(
                 f"unknown checkpoint format {cfg.get('format')!r} in "

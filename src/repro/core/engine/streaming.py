@@ -51,8 +51,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import schedule as sched
+from repro.core import faults, schedule as sched
 from repro.core.invindex import build_inverted_index
+from repro.data import integrity
 from repro.data.stream import ShardedCorpus
 
 RUN_JSON = "run.json"
@@ -60,7 +61,18 @@ PROGRESS_JSON = "progress.json"
 
 
 def _save_npy(path: str, arr: np.ndarray) -> None:
-    np.save(path, arr)
+    # atomic publish + crc32 sidecar: a kill at any instant leaves the
+    # previous complete array or the new one, and a later bit flip is
+    # caught at load (DESIGN.md §15)
+    integrity.save_npy(path, arr)
+
+
+def _load_npy(path: str) -> np.ndarray:
+    return integrity.load_npy(path)
+
+
+def _load_npz(path: str) -> dict:
+    return integrity.load_npz(path)
 
 
 def _rng_state_jsonable(state: dict) -> dict:
@@ -219,7 +231,7 @@ class StreamingLDA:
                 m = (shard.doc % r_) == g
                 docs_g.append(shard.doc[m])
                 words_g.append(shard.word[m])
-                z0c = np.load(
+                z0c = _load_npy(
                     self._p("static", f"z0_shard{shard.index:05d}.npy"))
                 z_g.append(z0c[m])
                 tid_g.append(np.nonzero(m)[0].astype(np.int64)
@@ -248,22 +260,25 @@ class StreamingLDA:
                 zlay[msk] = z_row[idx.token_id[b][msk]]
                 glob_tid = np.zeros(self.capacity, np.int64)
                 glob_tid[msk] = tid_row[idx.token_id[b][msk]]
-                np.savez(self._lay_path(g, b), doc=idx.doc[b],
-                         woff=idx.word_off[b], mask=msk, tid=glob_tid)
+                integrity.save_npz(self._lay_path(g, b), doc=idx.doc[b],
+                                   woff=idx.word_off[b], mask=msk,
+                                   tid=glob_tid)
                 _save_npy(self._z_path(g, b), zlay)
                 # scatter this (row, block) group's initial counts into the
                 # block store — one block in memory at a time
                 bp = self._block_path(b)
-                blk_arr = (np.load(bp) if os.path.exists(bp) else
+                blk_arr = (_load_npy(bp) if os.path.exists(bp) else
                            np.zeros((part.block_size, k), np.int32))
                 np.add.at(blk_arr, (idx.word_off[b][msk], zlay[msk]), 1)
                 _save_npy(bp, blk_arr)
         for shard_entry in range(corpus.num_shards):
-            os.remove(self._p("static", f"z0_shard{shard_entry:05d}.npy"))
+            z0p = self._p("static", f"z0_shard{shard_entry:05d}.npy")
+            os.remove(z0p)
+            os.remove(integrity.sidecar_path(z0p))
 
         ck = np.zeros(k, np.int64)
         for b in range(b_):
-            ck += np.load(self._block_path(b)).sum(axis=0, dtype=np.int64)
+            ck += _load_npy(self._block_path(b)).sum(axis=0, dtype=np.int64)
         _save_npy(self._p("state", "ck.npy"), ck)
         self.iteration_count = 0
         self._write_run_json()
@@ -289,15 +304,15 @@ class StreamingLDA:
             "max_doc_len": self.max_doc_len,
             "capacity": self.capacity,
         }
-        with open(self._p(RUN_JSON), "w") as f:
-            json.dump(cfg, f, indent=1)
+        integrity.atomic_write_json(self._p(RUN_JSON), cfg, indent=1,
+                                    checksum=True)
 
     def _write_progress(self) -> None:
         prog = {"iteration_count": self.iteration_count,
                 "rng_state": _rng_state_jsonable(
                     self._rng.bit_generator.state)}
-        with open(self._p("state", PROGRESS_JSON), "w") as f:
-            json.dump(prog, f)
+        integrity.atomic_write_json(self._p("state", PROGRESS_JSON), prog,
+                                    checksum=True)
 
     # -- checkpoint / resume ----------------------------------------------
     def save_checkpoint(self) -> str:
@@ -307,13 +322,19 @@ class StreamingLDA:
         replicas agree — so the snapshot is sampler- and
         backend-agnostic."""
         tmp, final = self._p("ckpt.tmp"), self._p("ckpt")
+        faults.fire("ckpt.begin", final)
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         shutil.copytree(self._p("state"), tmp)
+        faults.fire("ckpt.tmp_copied", tmp)
         old = self._p("ckpt.old")
         if os.path.exists(final):
+            if os.path.exists(old):     # debris from a kill after promote
+                shutil.rmtree(old)
             os.rename(final, old)
+            faults.fire("ckpt.old_moved", old)
         os.rename(tmp, final)
+        faults.fire("ckpt.promoted", final)
         if os.path.exists(old):
             shutil.rmtree(old)
         return final
@@ -339,6 +360,10 @@ class StreamingLDA:
                 raise ValueError(
                     f"no checkpoint under {workdir!r}; save_checkpoint() "
                     "must run before a kill to resume from")
+        # validate every stamped artifact before trusting the checkpoint:
+        # a bit-flipped block/row/progress file raises the integrity
+        # taxonomy here instead of poisoning the resumed chain
+        integrity.validate_tree(ckpt)
         alpha = cfg["alpha"]
         # constructed manually: the corpus-derived fields come from
         # run.json, not from a corpus scan
@@ -388,6 +413,7 @@ class StreamingLDA:
         SPMD engine, with at most one block (plus its packed table) and
         one row/block token group in memory at a time."""
         import jax.numpy as jnp
+        faults.fire("step", f"iter:{self.iteration_count},engine:streaming")
         m_, s_, d_ = (self.num_workers, self.blocks_per_worker,
                       self.data_parallel)
         k, cap = self.num_topics, self.capacity
@@ -401,14 +427,15 @@ class StreamingLDA:
             # tables are built lazily at each block's first residency
             for g in range(self.num_shards):
                 dtab = np.asarray(build_doc_tables(
-                    jnp.asarray(np.load(self._cdk_path(g))), alpha_j))
+                    jnp.asarray(_load_npy(self._cdk_path(g))), alpha_j))
                 _save_npy(self._p("tables", f"doc_g{g:04d}.npy"), dtab)
             for f in os.listdir(self._p("tables")):
                 if f.startswith("word_"):
                     os.remove(self._p("tables", f))
 
-        ck = np.load(self._p("state", "ck.npy"))
+        ck = _load_npy(self._p("state", "ck.npy"))
         for r in range(self.num_rounds):
+            faults.fire("round", f"iter:{self.iteration_count},round:{r},")
             ck_frozen = ck.astype(np.int32)
             delta = np.zeros(k, np.int64)
             # engine-identical uniforms: random((B, R, cap)) consumed
@@ -422,7 +449,7 @@ class StreamingLDA:
             # regrouping cannot change any draw
             for m in range(m_):
                 blk_id = sched.block_for(m, r, m_, s_)
-                blk_frozen = np.load(self._block_path(blk_id))
+                blk_frozen = _load_npy(self._block_path(blk_id))
                 blk_delta = np.zeros_like(blk_frozen)
                 tables = None
                 if travel:
@@ -433,12 +460,12 @@ class StreamingLDA:
                             jnp.asarray(blk_frozen), beta_j))
                         _save_npy(wpath, wtab)
                     else:
-                        wtab = np.load(wpath)
+                        wtab = _load_npy(wpath)
                 for d in range(d_):
                     g = d * m_ + m
-                    lay = np.load(self._lay_path(g, blk_id))
-                    z = np.load(self._z_path(g, blk_id))
-                    cdk = np.load(self._cdk_path(g))
+                    lay = _load_npz(self._lay_path(g, blk_id))
+                    z = _load_npy(self._z_path(g, blk_id))
+                    cdk = _load_npy(self._cdk_path(g))
                     args = (jnp.asarray(cdk), jnp.asarray(blk_frozen),
                             jnp.asarray(ck_frozen),
                             jnp.asarray(lay["doc"]),
@@ -446,7 +473,7 @@ class StreamingLDA:
                             jnp.asarray(lay["mask"]),
                             jnp.asarray(u_r[g]), alpha_j, beta_j, vbeta_j)
                     if travel:
-                        dtab = np.load(
+                        dtab = _load_npy(
                             self._p("tables", f"doc_g{g:04d}.npy"))
                         args += (jnp.asarray(wtab), jnp.asarray(dtab))
                     out = self._sampler_fn(*args)
@@ -495,13 +522,14 @@ class StreamingLDA:
         vb, k = self.partition.block_size, self.num_topics
         ckt = np.zeros((self.partition.padded_vocab, k), np.int32)
         for b in range(self.num_blocks):
-            ckt[b * vb:(b + 1) * vb] = np.load(self._block_path(b))
+            ckt[b * vb:(b + 1) * vb] = _load_npy(self._block_path(b))
         ckt = ckt[:self.vocab_size]
         cdk = np.zeros((self.num_docs, k), np.int32)
         for g in range(self.num_shards):
-            docs = np.load(self._p("static", "rows", f"row{g:04d}_docs.npy"))
+            docs = _load_npy(
+                self._p("static", "rows", f"row{g:04d}_docs.npy"))
             real = docs >= 0
-            cdk[docs[real]] = np.load(self._cdk_path(g))[:real.sum()]
+            cdk[docs[real]] = _load_npy(self._cdk_path(g))[:real.sum()]
         ck = ckt.sum(axis=0).astype(np.int32)
         return CountState(jnp.asarray(cdk), jnp.asarray(ckt),
                           jnp.asarray(ck))
@@ -511,9 +539,9 @@ class StreamingLDA:
         z = np.zeros(self.num_tokens, np.int32)
         for g in range(self.num_shards):
             for b in range(self.num_blocks):
-                lay = np.load(self._lay_path(g, b))
+                lay = _load_npz(self._lay_path(g, b))
                 msk = lay["mask"]
-                z[lay["tid"][msk]] = np.load(self._z_path(g, b))[msk]
+                z[lay["tid"][msk]] = _load_npy(self._z_path(g, b))[msk]
         return z
 
     def log_likelihood(self) -> float:
@@ -539,10 +567,12 @@ class StreamingLDA:
         os.makedirs(out_dir, exist_ok=True)
         ck = np.zeros(self.num_topics, np.int64)
         for b in range(self.num_blocks):
-            blk = np.load(self._block_path(b))
-            np.save(os.path.join(out_dir, f"block_{b:05d}.npy"), blk)
+            blk = _load_npy(self._block_path(b))
+            integrity.save_npy(
+                os.path.join(out_dir, f"block_{b:05d}.npy"), blk)
             ck += blk.sum(axis=0, dtype=np.int64)
-        np.save(os.path.join(out_dir, "ck.npy"), ck.astype(np.int64))
+        integrity.save_npy(os.path.join(out_dir, "ck.npy"),
+                           ck.astype(np.int64))
         meta = {
             "format": "sharded-snapshot-v1",
             "vocab_size": self.vocab_size,
@@ -554,6 +584,8 @@ class StreamingLDA:
             "beta": self.beta,
             "iteration": self.iteration_count,
         }
-        with open(os.path.join(out_dir, "meta.json"), "w") as f:
-            json.dump(meta, f, indent=1)
+        # meta.json is published LAST and atomically: its presence is the
+        # completeness signal the serve-side watcher keys on (§15)
+        integrity.atomic_write_json(os.path.join(out_dir, "meta.json"),
+                                    meta, indent=1, checksum=True)
         return out_dir

@@ -1,0 +1,261 @@
+"""Deterministic fault injection (DESIGN.md §15).
+
+A :class:`FaultPlan` is a seedable, JSON-serializable list of
+:class:`FaultSpec`s; production code is instrumented with named *fire
+points* (``faults.fire("step", "iter:3")``, ``faults.fire("write",
+path)``, ...) that are free no-ops when no plan is active and raise /
+delay / corrupt exactly as scripted when one is.  Because the plan is
+data, the same failure sequence replays bit-for-bit across runs,
+processes (via the ``REPRO_FAULT_PLAN`` env var), and CI — which is
+what lets the recovery tests assert BITWISE equality between a crashed-
+and-resumed chain and an uninterrupted one.
+
+Fault kinds:
+
+* ``crash``        — raise :class:`InjectedCrash` at the fire point.
+  ``InjectedCrash`` subclasses ``BaseException`` (like
+  ``KeyboardInterrupt``) so no broad ``except Exception`` in the stack
+  can accidentally swallow the "kill" — the process dies at exactly the
+  scripted instruction, the closest in-process model of SIGKILL.
+* ``io_error``     — raise :class:`InjectedIOError` (an ``OSError``),
+  modelling a transient read/write failure that normal error handling
+  IS allowed to see.
+* ``bit_flip``     — XOR one byte of the artifact named by the fire
+  point's detail (deterministic offset from the plan seed), then let
+  the operation proceed: the integrity layer must catch it.
+* ``replica_fail`` — raise :class:`InjectedReplicaError` inside a
+  replica's dispatch, driving the scheduler's retry + circuit-breaker
+  path.
+* ``replica_slow`` — report a delay (seconds) for the scheduler to add
+  under its injected Clock; latency-only, no error.
+
+Matching: a spec names a ``point`` and an optional ``match`` substring
+of the detail; ``nth`` fires on the nth matching occurrence (1-based),
+``nth=0`` on every one.  Counters live on the plan instance, so
+re-activating a fresh plan resets history.
+
+Scope: this is a TEST/CI harness for deterministic failure replay in
+this repo's own recovery machinery — not a general-purpose wrench.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+ENV_VAR = "REPRO_FAULT_PLAN"
+PLAN_FORMAT = "fault-plan-v1"
+
+
+class InjectedCrash(BaseException):
+    """Scripted process kill.  Deliberately NOT an ``Exception``: broad
+    handlers must not be able to swallow it, because the tests that
+    inject it are modelling a crash, and a crash does not run
+    ``except`` blocks."""
+
+    def __init__(self, point: str, detail: str, spec_index: int):
+        self.point, self.detail, self.spec_index = point, detail, spec_index
+        super().__init__(f"injected crash at {point}({detail}) "
+                         f"[spec {spec_index}]")
+
+
+class InjectedIOError(OSError):
+    """Scripted transient I/O failure (IS an OSError on purpose)."""
+
+
+class InjectedReplicaError(RuntimeError):
+    """Scripted replica failure raised inside scheduler dispatch."""
+
+
+KINDS = ("crash", "io_error", "bit_flip", "replica_fail", "replica_slow")
+
+
+@dataclass
+class FaultSpec:
+    """One scripted fault.
+
+    kind   : one of KINDS.
+    point  : fire-point name to match (e.g. "step", "write", "replica").
+    match  : substring the fire detail must contain ("" matches all).
+    nth    : 1-based matching occurrence to fire on; 0 = every match.
+    arg    : kind-specific payload — replica_slow: delay seconds;
+             bit_flip: byte offset (-1 = seeded-random offset).
+    """
+    kind: str
+    point: str
+    match: str = ""
+    nth: int = 1
+    arg: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+@dataclass
+class FaultPlan:
+    specs: List[FaultSpec] = field(default_factory=list)
+    seed: int = 0
+    # per-spec match counters and fired flags (not serialized: state)
+    _counts: Dict[int, int] = field(default_factory=dict, repr=False)
+    fired: List[str] = field(default_factory=list, repr=False)
+
+    # -- construction helpers ------------------------------------------------
+    @classmethod
+    def crash_at_step(cls, n: int, seed: int = 0) -> "FaultPlan":
+        """Kill at the start of training step ``n`` (0-based iteration
+        count, matching the engines' ``fire("step", f"iter:{n}")``)."""
+        return cls([FaultSpec("crash", "step", f"iter:{n},")], seed=seed)
+
+    @classmethod
+    def crash_at_point(cls, point: str, match: str = "", nth: int = 1,
+                       seed: int = 0) -> "FaultPlan":
+        return cls([FaultSpec("crash", point, match, nth)], seed=seed)
+
+    @classmethod
+    def io_error_on_read(cls, match: str = "", nth: int = 1,
+                         seed: int = 0) -> "FaultPlan":
+        return cls([FaultSpec("io_error", "read", match, nth)], seed=seed)
+
+    @classmethod
+    def replica_fail(cls, rid: int, nth: int = 0, seed: int = 0) -> "FaultPlan":
+        """Replica ``rid`` raises on every dispatch (nth=0) or the nth."""
+        return cls([FaultSpec("replica_fail", "replica", f"replica:{rid},",
+                              nth)], seed=seed)
+
+    @classmethod
+    def replica_slow(cls, rid: int, delay: float, nth: int = 0,
+                     seed: int = 0) -> "FaultPlan":
+        return cls([FaultSpec("replica_slow", "replica", f"replica:{rid},",
+                              nth, delay)], seed=seed)
+
+    # -- serialization -------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "format": PLAN_FORMAT, "seed": self.seed,
+            "specs": [{"kind": s.kind, "point": s.point, "match": s.match,
+                       "nth": s.nth, "arg": s.arg} for s in self.specs],
+        })
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        obj = json.loads(text)
+        if obj.get("format") != PLAN_FORMAT:
+            raise ValueError(f"not a {PLAN_FORMAT} document")
+        return cls([FaultSpec(**s) for s in obj["specs"]],
+                   seed=int(obj.get("seed", 0)))
+
+    # -- matching ------------------------------------------------------------
+    def _matching(self, point: str, detail: str):
+        """Yield (index, spec) for specs due to fire NOW, advancing the
+        per-spec occurrence counters."""
+        for i, s in enumerate(self.specs):
+            if s.point != point or s.match not in detail:
+                continue
+            self._counts[i] = self._counts.get(i, 0) + 1
+            if s.nth == 0 or self._counts[i] == s.nth:
+                self.fired.append(f"{s.kind}@{point}({detail})")
+                yield i, s
+
+    def fire(self, point: str, detail: str = "") -> None:
+        """Raise / corrupt per any spec matching this fire point."""
+        for i, s in self._matching(point, detail):
+            if s.kind == "crash":
+                raise InjectedCrash(point, detail, i)
+            if s.kind == "io_error":
+                raise InjectedIOError(
+                    f"injected I/O error at {point}({detail}) [spec {i}]")
+            if s.kind == "replica_fail":
+                raise InjectedReplicaError(
+                    f"injected replica failure at {point}({detail}) "
+                    f"[spec {i}]")
+            if s.kind == "bit_flip":
+                from repro.data import integrity
+                offset = None if s.arg < 0 else int(s.arg)
+                if os.path.exists(detail):
+                    integrity.flip_byte(detail, offset=offset,
+                                        seed=self.seed + i)
+            # replica_slow contributes no exception here; see delay()
+
+    def delay(self, point: str, detail: str = "") -> float:
+        """Total scripted slowdown (seconds) for this fire point.  Kept
+        separate from fire() so call sites that cannot raise (pure
+        latency modelling) query it without risking an exception."""
+        total = 0.0
+        for i, s in enumerate(self.specs):
+            if s.kind != "replica_slow" or s.point != point \
+                    or s.match not in detail:
+                continue
+            key = ("delay", i)
+            self._counts[key] = self._counts.get(key, 0) + 1  # type: ignore
+            if s.nth == 0 or self._counts[key] == s.nth:  # type: ignore
+                total += float(s.arg)
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Module-global activation (plus env-var pickup for child processes)
+# ---------------------------------------------------------------------------
+
+_active: Optional[FaultPlan] = None
+_env_checked = False
+
+
+def activate(plan: Optional[FaultPlan]) -> None:
+    global _active, _env_checked
+    _active = plan
+    _env_checked = True  # explicit activation overrides env pickup
+
+
+def deactivate() -> None:
+    activate(None)
+
+
+def active() -> Optional[FaultPlan]:
+    """The active plan, if any.  On first query, picks up
+    ``REPRO_FAULT_PLAN`` from the environment so a supervisor (or CI)
+    can inject into a child process it execs."""
+    global _active, _env_checked
+    if not _env_checked:
+        _env_checked = True
+        text = os.environ.get(ENV_VAR)
+        if text:
+            _active = FaultPlan.from_json(text)
+    return _active
+
+
+def fire(point: str, detail: str = "") -> None:
+    plan = active()
+    if plan is not None:
+        plan.fire(point, detail)
+
+
+def delay(point: str, detail: str = "") -> float:
+    plan = active()
+    return plan.delay(point, detail) if plan is not None else 0.0
+
+
+class injected:
+    """Context manager scoping a plan to a ``with`` block.  Deactivates
+    in ``finally`` — mandatory, since :class:`InjectedCrash` is a
+    BaseException and would otherwise leave the plan armed for the next
+    test."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+
+    def __enter__(self) -> FaultPlan:
+        activate(self.plan)
+        return self.plan
+
+    def __exit__(self, *exc) -> bool:
+        deactivate()
+        return False
+
+
+__all__ = [
+    "ENV_VAR", "PLAN_FORMAT", "KINDS", "InjectedCrash", "InjectedIOError",
+    "InjectedReplicaError", "FaultSpec", "FaultPlan", "activate",
+    "deactivate", "active", "fire", "delay", "injected",
+]

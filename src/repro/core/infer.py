@@ -185,19 +185,24 @@ class ModelSnapshot:
         trainer's (DESIGN.md §10)."""
         import os
 
+        from repro.data import integrity
         from repro.data.corpus import npz_stem
         stem = npz_stem(path)
         os.makedirs(os.path.dirname(stem) or ".", exist_ok=True)
-        np.savez_compressed(stem + ".npz", ckt=self.ckt, ck=self.ck,
-                            alpha=self.alpha, beta=np.float64(self.beta))
+        # atomic publish + crc32 sidecar (DESIGN.md §15): the serving
+        # watcher and hot-swap validation key on this stamp
+        integrity.save_npz(stem + ".npz", compressed=True,
+                           ckt=self.ckt, ck=self.ck,
+                           alpha=self.alpha, beta=np.float64(self.beta))
 
 
 def load_snapshot(path: str) -> ModelSnapshot:
+    from repro.data import integrity
     from repro.data.corpus import npz_stem
-    with np.load(npz_stem(path) + ".npz") as data:
-        return ModelSnapshot.from_counts(data["ckt"], data["ck"],
-                                         data["alpha"],
-                                         float(data["beta"]))
+    data = integrity.load_npz(npz_stem(path) + ".npz")
+    return ModelSnapshot.from_counts(data["ckt"], data["ck"],
+                                     data["alpha"],
+                                     float(data["beta"]))
 
 
 # ---------------------------------------------------------------------------
@@ -242,6 +247,8 @@ def load_snapshot_rows(snap_dir: str, word: np.ndarray):
     never ``[V, K]``.
     """
     import os
+
+    from repro.data import integrity
     meta = load_sharded_snapshot_meta(snap_dir)
     word = np.asarray(word, np.int32)
     v, k = int(meta["vocab_size"]), int(meta["num_topics"])
@@ -254,9 +261,11 @@ def load_snapshot_rows(snap_dir: str, word: np.ndarray):
     rows = np.zeros((max(uniq.shape[0], 1), k), np.int32)
     for b in np.unique(uniq // vb):
         sel = (uniq // vb) == b
-        blk = np.load(os.path.join(snap_dir, f"block_{int(b):05d}.npy"))
+        blk = integrity.load_npy(
+            os.path.join(snap_dir, f"block_{int(b):05d}.npy"))
         rows[:uniq.shape[0]][sel] = blk[uniq[sel] - b * vb]
-    ck = np.load(os.path.join(snap_dir, "ck.npy")).astype(np.int32)
+    ck = integrity.load_npy(
+        os.path.join(snap_dir, "ck.npy")).astype(np.int32)
     alpha = meta["alpha"]
     alpha = (np.full(k, alpha, np.float32) if np.isscalar(alpha)
              else np.asarray(alpha, np.float32))

@@ -1,0 +1,381 @@
+"""Artifact integrity layer: checksummed sidecars, atomic writes, and
+validate-on-load with a structured error taxonomy (DESIGN.md §15).
+
+The paper's regime — multi-day runs on "a low-end cluster with very
+limited computational resources" — is exactly where disks tear writes
+and bit-rot corrupts artifacts.  Every on-disk artifact this repo
+produces (corpus shards, streaming workdir state files, engine
+checkpoints, serving snapshots) flows through this module, which
+enforces two invariants:
+
+* **writes are atomic** — data lands in a temp file, is fsynced, and is
+  published with a single ``os.replace``; a kill at ANY instant leaves
+  either the old artifact or the new one, never a torn file under the
+  final name.
+* **reads are validated** — each artifact carries a sidecar
+  (``<name>.sum``, JSON: algorithm, digest, byte size) stamped at write
+  time; loads verify it and raise a STRUCTURED error instead of the
+  silent ``np.load`` failures (truncated-zip tracebacks, or worse,
+  garbage arrays) a torn or bit-flipped file produces today.
+
+Error taxonomy (all subclass :class:`IntegrityError`):
+
+* :class:`MissingArtifactError` — the artifact (or a required sidecar)
+  does not exist.
+* :class:`CorruptArtifactError` — content does not match its stamp
+  (bit flip, overwrite, unreadable container).
+* :class:`TornWriteError` — the artifact is SHORTER than its stamp: the
+  signature of a write killed mid-flight.  Subclasses
+  ``CorruptArtifactError`` so callers that only care about "bad" catch
+  one type.
+
+The default digest is ``crc32`` (zlib, ~GB/s — cheap enough to stamp on
+every per-round state write of the streaming engine); ``sha256`` is
+available for long-lived artifacts (checkpoints, snapshots) where
+adversarial-grade integrity is worth the extra pass.
+
+Fault-injection hooks: every read/write funnels through
+`core/faults.py` fire points (``"read"``, ``"write"``, ``"wrote"``), so
+a deterministic :class:`~repro.core.faults.FaultPlan` can kill, error,
+or bit-flip any specific artifact operation — the machinery the
+crash-recovery tests and CI pass 9 drive.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import zlib
+from typing import Iterable, List, Optional
+
+import numpy as np
+
+SIDECAR_SUFFIX = ".sum"
+SIDECAR_FORMAT = "integrity-sidecar-v1"
+DEFAULT_ALGO = "crc32"
+
+
+# ---------------------------------------------------------------------------
+# Error taxonomy
+# ---------------------------------------------------------------------------
+
+class IntegrityError(Exception):
+    """Base of the artifact-integrity taxonomy; carries the path."""
+
+    def __init__(self, path: str, message: str):
+        self.path = path
+        super().__init__(f"{message} [{path}]")
+
+
+class MissingArtifactError(IntegrityError):
+    """Artifact (or a required sidecar) absent from disk."""
+
+
+class CorruptArtifactError(IntegrityError):
+    """Artifact bytes disagree with their integrity stamp, or the
+    container is unreadable (bad magic, truncated zip, ...)."""
+
+
+class TornWriteError(CorruptArtifactError):
+    """Artifact shorter than its stamp — a write killed mid-flight.
+    Distinguished from generic corruption because the RESPONSE differs:
+    a torn file under a temp name is expected debris a supervisor
+    quarantines; a torn file under a FINAL name means some writer
+    bypassed the atomic-publish protocol."""
+
+
+# ---------------------------------------------------------------------------
+# Digests and sidecars
+# ---------------------------------------------------------------------------
+
+def _digest_bytes(data: bytes, algo: str) -> str:
+    if algo == "crc32":
+        return f"{zlib.crc32(data) & 0xFFFFFFFF:08x}"
+    if algo == "sha256":
+        return hashlib.sha256(data).hexdigest()
+    raise ValueError(f"unknown digest algorithm {algo!r}")
+
+
+def file_digest(path: str, algo: str = DEFAULT_ALGO) -> str:
+    """Streaming digest of a file (one 1-MiB-chunk pass)."""
+    if algo == "crc32":
+        crc = 0
+        with open(path, "rb") as f:
+            while chunk := f.read(1 << 20):
+                crc = zlib.crc32(chunk, crc)
+        return f"{crc & 0xFFFFFFFF:08x}"
+    if algo == "sha256":
+        h = hashlib.sha256()
+        with open(path, "rb") as f:
+            while chunk := f.read(1 << 20):
+                h.update(chunk)
+        return h.hexdigest()
+    raise ValueError(f"unknown digest algorithm {algo!r}")
+
+
+def sidecar_path(path: str) -> str:
+    return path + SIDECAR_SUFFIX
+
+
+def write_sidecar(path: str, algo: str = DEFAULT_ALGO,
+                  digest: Optional[str] = None,
+                  size: Optional[int] = None) -> str:
+    """Stamp ``<path>.sum`` for an existing artifact.  The sidecar write
+    is itself atomic, and ordered AFTER the artifact's publish — so a
+    kill between the two leaves (new artifact, old/absent sidecar),
+    which validation reports as corruption and a supervisor quarantines:
+    fail-loud, never fail-wrong."""
+    if digest is None:
+        digest = file_digest(path, algo)
+    if size is None:
+        size = os.path.getsize(path)
+    meta = {"format": SIDECAR_FORMAT, "algo": algo, "digest": digest,
+            "size": int(size)}
+    sc = sidecar_path(path)
+    _atomic_write_bytes(sc, json.dumps(meta).encode())
+    return sc
+
+
+def validate_file(path: str, require_sidecar: bool = False) -> bool:
+    """Check one artifact against its sidecar.
+
+    Returns True when validated, False when no sidecar exists (and
+    ``require_sidecar`` is off — unstamped artifacts are legal, they
+    just get no protection).  Raises the taxonomy otherwise:
+    ``MissingArtifactError`` (file or required sidecar absent),
+    ``TornWriteError`` (shorter than stamped), ``CorruptArtifactError``
+    (size or digest mismatch, unreadable sidecar).
+    """
+    from repro.core import faults
+    faults.fire("read", path)
+    if not os.path.exists(path):
+        raise MissingArtifactError(path, "artifact missing")
+    sc = sidecar_path(path)
+    if not os.path.exists(sc):
+        if require_sidecar:
+            raise MissingArtifactError(sc, "required integrity sidecar "
+                                           "missing")
+        return False
+    try:
+        with open(sc) as f:
+            meta = json.load(f)
+        algo, want, size = meta["algo"], meta["digest"], int(meta["size"])
+    except (OSError, ValueError, KeyError) as e:
+        raise CorruptArtifactError(sc, f"unreadable sidecar ({e})") from e
+    actual = os.path.getsize(path)
+    if actual < size:
+        raise TornWriteError(
+            path, f"torn write: {actual} bytes on disk, {size} stamped")
+    if actual != size:
+        raise CorruptArtifactError(
+            path, f"size mismatch: {actual} bytes on disk, {size} stamped")
+    got = file_digest(path, algo)
+    if got != want:
+        raise CorruptArtifactError(
+            path, f"{algo} mismatch: {got} on disk, {want} stamped")
+    return True
+
+
+def validate_tree(root: str, require_sidecar: bool = False) -> int:
+    """Validate every sidecar-stamped artifact under ``root`` (and,
+    with ``require_sidecar``, demand that every non-sidecar file IS
+    stamped).  Returns the number of artifacts validated; raises the
+    taxonomy on the first bad one.  This is what checkpoint restore and
+    snapshot hot-swap run before trusting a directory."""
+    if not os.path.isdir(root):
+        raise MissingArtifactError(root, "artifact directory missing")
+    n = 0
+    for dirpath, _, files in sorted(os.walk(root)):
+        for fname in sorted(files):
+            if fname.endswith(SIDECAR_SUFFIX):
+                continue
+            path = os.path.join(dirpath, fname)
+            if validate_file(path, require_sidecar=require_sidecar):
+                n += 1
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Atomic writes
+# ---------------------------------------------------------------------------
+
+def _fsync_dir(path: str) -> None:
+    """Best-effort directory fsync so the rename itself is durable."""
+    try:
+        fd = os.open(os.path.dirname(path) or ".", os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _atomic_write_bytes(path: str, data: bytes) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_dir(path)
+
+
+def atomic_write_json(path: str, obj, indent: Optional[int] = None,
+                      checksum: bool = False) -> str:
+    """Publish a JSON artifact atomically (write temp, fsync, rename).
+
+    A kill mid-write can never leave a torn file under ``path`` — the
+    failure mode today's bare ``open(...).write`` has for
+    ``progress.json`` / ``run.json`` / corpus manifests.  Fault points:
+    ``json.tmp_written`` fires between the temp write and the rename,
+    which is exactly where the regression test injects its kill."""
+    from repro.core import faults
+    faults.fire("write", path)
+    data = json.dumps(obj, indent=indent).encode()
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    faults.fire("json.tmp_written", path)
+    os.replace(tmp, path)
+    _fsync_dir(path)
+    if checksum:
+        write_sidecar(path, digest=_digest_bytes(data, DEFAULT_ALGO),
+                      size=len(data))
+    faults.fire("wrote", path)
+    return path
+
+
+def save_npy(path: str, arr: np.ndarray, checksum: bool = True) -> str:
+    """Atomic, checksummed replacement for ``np.save``: serialize to a
+    temp file, fsync, publish with ``os.replace``, then stamp the
+    sidecar.  The artifact under ``path`` is therefore always either
+    the previous complete array or the new complete array."""
+    from repro.core import faults
+    faults.fire("write", path)
+    buf = io.BytesIO()
+    np.save(buf, np.ascontiguousarray(arr))
+    data = buf.getvalue()
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    faults.fire("npy.tmp_written", path)
+    os.replace(tmp, path)
+    _fsync_dir(path)
+    if checksum:
+        write_sidecar(path, digest=_digest_bytes(data, DEFAULT_ALGO),
+                      size=len(data))
+    faults.fire("wrote", path)
+    return path
+
+
+def save_npz(path: str, compressed: bool = False, checksum: bool = True,
+             **arrays) -> str:
+    """Atomic, checksummed replacement for ``np.savez(path, **arrays)``."""
+    from repro.core import faults
+    faults.fire("write", path)
+    buf = io.BytesIO()
+    (np.savez_compressed if compressed else np.savez)(buf, **arrays)
+    data = buf.getvalue()
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    faults.fire("npz.tmp_written", path)
+    os.replace(tmp, path)
+    _fsync_dir(path)
+    if checksum:
+        write_sidecar(path, digest=_digest_bytes(data, DEFAULT_ALGO),
+                      size=len(data))
+    faults.fire("wrote", path)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Validated loads
+# ---------------------------------------------------------------------------
+
+def load_npy(path: str, require_sidecar: bool = False) -> np.ndarray:
+    """``np.load`` with validate-on-load: sidecar check first (the
+    taxonomy replaces silent failures), then a parse whose own errors —
+    truncated header, bad magic — are wrapped as corruption, because by
+    then the bytes matched their stamp or were never stamped."""
+    validate_file(path, require_sidecar=require_sidecar)
+    try:
+        return np.load(path)
+    except Exception as e:  # np.load raises a zoo of types on bad bytes
+        raise CorruptArtifactError(
+            path, f"unreadable npy ({type(e).__name__}: {e})") from e
+
+
+def load_npz(path: str, require_sidecar: bool = False) -> dict:
+    """Validated eager ``np.load`` of an ``.npz``: returns a plain dict
+    of arrays (the lazy zip handle is closed before returning, so a
+    later corruption of the file cannot surface mid-iteration)."""
+    validate_file(path, require_sidecar=require_sidecar)
+    try:
+        with np.load(path) as data:
+            return {k: np.asarray(data[k]) for k in data.files}
+    except IntegrityError:
+        raise
+    except Exception as e:
+        raise CorruptArtifactError(
+            path, f"unreadable npz ({type(e).__name__}: {e})") from e
+
+
+# ---------------------------------------------------------------------------
+# Test / injection utilities
+# ---------------------------------------------------------------------------
+
+def flip_byte(path: str, offset: Optional[int] = None, seed: int = 0) -> int:
+    """Deterministically corrupt one byte of an artifact (XOR 0xFF at
+    ``offset``, or a seeded position).  The fault-injection harness and
+    the acceptance tests use this to prove bit flips are REJECTED with
+    a structured error, never loaded silently.  Returns the offset."""
+    size = os.path.getsize(path)
+    if size == 0:
+        raise ValueError(f"cannot flip a byte of empty file {path!r}")
+    if offset is None:
+        offset = int(np.random.default_rng(seed).integers(0, size))
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        b = f.read(1)
+        f.seek(offset)
+        f.write(bytes([b[0] ^ 0xFF]))
+    return offset
+
+
+def truncate_file(path: str, keep_bytes: int) -> None:
+    """Simulate a torn write: keep only the first ``keep_bytes``."""
+    with open(path, "r+b") as f:
+        f.truncate(keep_bytes)
+
+
+def list_unstamped(root: str) -> List[str]:
+    """Files under ``root`` without a sidecar (debugging aid)."""
+    out = []
+    for dirpath, _, files in sorted(os.walk(root)):
+        names = set(files)
+        for fname in sorted(files):
+            if fname.endswith(SIDECAR_SUFFIX):
+                continue
+            if fname + SIDECAR_SUFFIX not in names:
+                out.append(os.path.join(dirpath, fname))
+    return out
+
+
+__all__ = [
+    "IntegrityError", "MissingArtifactError", "CorruptArtifactError",
+    "TornWriteError", "DEFAULT_ALGO", "SIDECAR_SUFFIX", "file_digest",
+    "sidecar_path", "write_sidecar", "validate_file", "validate_tree",
+    "atomic_write_json", "save_npy", "save_npz", "load_npy", "load_npz",
+    "flip_byte", "truncate_file", "list_unstamped",
+]

@@ -39,6 +39,7 @@ from typing import Iterator, List, Optional
 
 import numpy as np
 
+from repro.data import integrity
 from repro.data.corpus import Corpus
 
 FORMAT_TAG = "sharded-corpus-v1"
@@ -127,8 +128,8 @@ class ShardedCorpusWriter:
                 else np.zeros(0, np.int32))
         i = len(self._shards)
         fname = f"shard_{i:05d}.npz"
-        np.savez_compressed(os.path.join(self.out_dir, fname),
-                            doc=doc, word=word)
+        integrity.save_npz(os.path.join(self.out_dir, fname),
+                           compressed=True, doc=doc, word=word)
         self._shards.append({
             "file": fname,
             "doc_lo": self.num_docs - self._buf_docs,
@@ -150,8 +151,11 @@ class ShardedCorpusWriter:
                 "max_doc_len": self.max_doc_len,
                 "shards": self._shards,
             }
-            with open(os.path.join(self.out_dir, META_NAME), "w") as f:
-                json.dump(meta, f, indent=1)
+            # atomic + checksummed: a kill mid-close can never leave a
+            # torn manifest shadowing a complete shard set (§15)
+            integrity.atomic_write_json(
+                os.path.join(self.out_dir, META_NAME), meta, indent=1,
+                checksum=True)
             self._closed = True
         return self.out_dir
 
@@ -204,9 +208,11 @@ class ShardedCorpus:
 
     def load_shard(self, i: int) -> CorpusShard:
         entry = self.meta["shards"][i]
-        with np.load(os.path.join(self.path, entry["file"])) as data:
-            doc = np.asarray(data["doc"], np.int32)
-            word = np.asarray(data["word"], np.int32)
+        # validate-on-load: a bit-flipped or torn shard raises the
+        # integrity taxonomy instead of decoding into garbage token ids
+        data = integrity.load_npz(os.path.join(self.path, entry["file"]))
+        doc = np.asarray(data["doc"], np.int32)
+        word = np.asarray(data["word"], np.int32)
         lo, hi = int(entry["doc_lo"]), int(entry["doc_hi"])
         if doc.shape != word.shape or doc.shape[0] != entry["num_tokens"]:
             raise ValueError(

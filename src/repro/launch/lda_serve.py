@@ -37,8 +37,10 @@ import sys
 
 import numpy as np
 
+from repro.core import faults
 from repro.core.infer import (load_sharded_snapshot_meta, load_snapshot,
                               load_snapshot_rows)
+from repro.data import integrity
 from repro.launch.samplers import (infer_sampler_choices,
                                    resolve_sampler_choice)
 from repro.serve.scheduler import ServingScheduler, WallClock
@@ -59,39 +61,74 @@ def _load_sharded_pair(args, trace):
     swap = None
     if args.swap_snapshot_dir:
         swap, _ = load_snapshot_rows(args.swap_snapshot_dir, flat)
-    return snap, swap
+    return snap, swap, flat
 
 
-def _make_watcher(args, sched):
-    """Poll ``--watch`` for a ``.npz`` newer than the one being served;
+def _make_watcher(args, sched, flat=None):
+    """Poll ``--watch`` for a snapshot newer than the one being served;
     load + hot-swap when one appears.  Throttled by the scheduler's own
-    clock, so the poll cadence needs no extra timer."""
-    state = {"mtime": (os.path.getmtime(args.snapshot)
-                       if args.snapshot and os.path.exists(args.snapshot)
-                       else 0.0),
-             "path": os.path.abspath(args.snapshot or ""),
+    clock, so the poll cadence needs no extra timer.
+
+    Tolerant of the trainer mid-export (§15): a candidate that fails
+    integrity validation — torn ``.npz``, sharded directory whose
+    ``meta.json`` hasn't landed yet (it is written LAST, atomically), a
+    block file without a matching checksum — is SKIPPED this poll and
+    retried on the next, without touching the serving loop or the poll
+    watermark.  Only a fully-validated candidate is swapped in.
+
+    ``flat`` is the trace's flat word array when serving row-restricted
+    sharded snapshots (the candidate must be restricted with the SAME
+    words so the remap matches the in-flight trace)."""
+    base = args.snapshot or getattr(args, "snapshot_dir", "")
+    state = {"mtime": (os.path.getmtime(base)
+                       if base and os.path.exists(base) else 0.0),
+             "path": os.path.abspath(base or ""),
              "last_poll": float("-inf")}
+    sharded = bool(getattr(args, "snapshot_dir", ""))
+
+    def candidates():
+        """(path, mtime) of every plausible candidate under --watch:
+        ``.npz`` files, or (sharded mode) subdirectories stamped by
+        their ``meta.json`` publish time."""
+        try:
+            entries = list(os.scandir(args.watch))
+        except OSError:
+            return
+        for e in entries:
+            if sharded:
+                meta = os.path.join(e.path, "meta.json")
+                if e.is_dir() and os.path.exists(meta):
+                    yield e.path, os.path.getmtime(meta)
+            elif e.name.endswith(".npz"):
+                yield e.path, e.stat().st_mtime
+
+    def load_validated(path):
+        if sharded:
+            integrity.validate_tree(path)
+            snap, _ = load_snapshot_rows(
+                path, flat if flat is not None else np.zeros(0, np.int32))
+            return snap
+        return load_snapshot(path)
 
     def on_tick(sched_, now):
         if now - state["last_poll"] < args.watch_interval:
             return
         state["last_poll"] = now
         newest, newest_m = None, state["mtime"]
-        try:
-            entries = os.scandir(args.watch)
-        except OSError:
+        for path, m in candidates():
+            if m > newest_m and os.path.abspath(path) != state["path"]:
+                newest, newest_m = path, m
+        if newest is None:
             return
-        for e in entries:
-            if not e.name.endswith(".npz"):
-                continue
-            m = e.stat().st_mtime
-            if m > newest_m and os.path.abspath(e.path) != state["path"]:
-                newest, newest_m = e.path, m
-        if newest is not None:
-            epoch = sched_.swap_snapshot(load_snapshot(newest))
-            state["mtime"], state["path"] = newest_m, \
-                os.path.abspath(newest)
-            print(f"  [watch] swapped to {newest} (epoch {epoch})")
+        try:
+            epoch = sched_.swap_snapshot(load_validated(newest))
+        except (integrity.IntegrityError, ValueError, OSError) as e:
+            # partial or corrupt export: keep serving the old epoch and
+            # leave the watermark alone so the next poll retries
+            print(f"  [watch] skipped {newest}: {type(e).__name__}: {e}")
+            return
+        state["mtime"], state["path"] = newest_m, os.path.abspath(newest)
+        print(f"  [watch] swapped to {newest} (epoch {epoch})")
 
     return on_tick
 
@@ -112,8 +149,10 @@ def main() -> None:
                     help="hot-swap immediately before the Nth submission "
                          "(default: midpoint when a swap target is given)")
     ap.add_argument("--watch", default="",
-                    help="directory to poll for newer .npz snapshots; "
-                         "each new file is hot-swapped in live")
+                    help="directory to poll for newer snapshots (.npz, "
+                         "or sharded directories with --snapshot-dir); "
+                         "each validated new one is hot-swapped in live — "
+                         "partial/corrupt exports are skipped and retried")
     ap.add_argument("--watch-interval", type=float, default=0.2,
                     help="seconds between --watch polls")
     ap.add_argument("--sampler", choices=infer_sampler_choices(),
@@ -136,6 +175,22 @@ def main() -> None:
     ap.add_argument("--batch-delay", type=float, default=0.0,
                     help="hold a partial batch at most this long (s)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--breaker-threshold", type=int, default=3,
+                    help="consecutive replica failures that open its "
+                         "circuit breaker (DESIGN.md §15)")
+    ap.add_argument("--breaker-cooldown", type=float, default=0.25,
+                    help="seconds an open breaker waits before a "
+                         "half-open probe")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="per-request retry budget across replicas")
+    ap.add_argument("--request-deadline", type=float, default=None,
+                    help="reject (structured) any admitted request "
+                         "queued longer than this many seconds")
+    ap.add_argument("--inject-replica-fail", type=int, default=-1,
+                    metavar="R",
+                    help="fault injection: replica R raises on every "
+                         "dispatch — the degraded-mode smoke (breaker "
+                         "opens, retries answer on the others)")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
 
@@ -147,8 +202,9 @@ def main() -> None:
     if args.swap_snapshot_dir and not args.snapshot_dir:
         ap.error("--swap-snapshot-dir needs --snapshot-dir (the row "
                  "restriction must share one word set)")
-    if args.watch and not args.snapshot:
-        ap.error("--watch reloads .npz snapshots; use it with --snapshot")
+    if args.watch and not (args.snapshot or args.snapshot_dir):
+        ap.error("--watch needs --snapshot (.npz mode) or "
+                 "--snapshot-dir (sharded mode)")
 
     if args.snapshot_dir:
         vocab = load_sharded_snapshot_meta(args.snapshot_dir)["vocab_size"]
@@ -158,9 +214,9 @@ def main() -> None:
     trace = poisson_trace(args.requests, args.rate, vocab, seed=args.seed,
                           max_len=args.max_len,
                           hot_fraction=args.hot_fraction)
-    swap_snap = None
+    swap_snap, flat = None, None
     if args.snapshot_dir:
-        snap, swap_snap = _load_sharded_pair(args, trace)
+        snap, swap_snap, flat = _load_sharded_pair(args, trace)
     elif args.swap_snapshot:
         swap_snap = load_snapshot(args.swap_snapshot)
     swap_after = None
@@ -175,14 +231,27 @@ def main() -> None:
           f"fp={snap.fingerprint()} sampler={args.sampler} "
           f"replicas={args.replicas} max_batch={args.max_batch}")
 
+    plan = None
+    if args.inject_replica_fail >= 0:
+        if args.inject_replica_fail >= args.replicas:
+            ap.error(f"--inject-replica-fail {args.inject_replica_fail} "
+                     f"is out of range for --replicas {args.replicas}")
+        plan = faults.FaultPlan.replica_fail(args.inject_replica_fail,
+                                             nth=0, seed=args.seed)
+        print(f"fault injection: replica {args.inject_replica_fail} "
+              "fails every dispatch")
     sched = ServingScheduler(
         snap, sampler=args.sampler, num_sweeps=args.sweeps, seed=args.seed,
         num_replicas=args.replicas, max_queue=args.max_queue,
         max_batch=args.max_batch, max_batch_delay=args.batch_delay,
-        clock=WallClock())
+        breaker_threshold=args.breaker_threshold,
+        breaker_cooldown=args.breaker_cooldown,
+        max_retries=args.max_retries,
+        request_deadline=args.request_deadline,
+        fault_plan=plan, clock=WallClock())
     buckets = sched.warm(args.max_len)   # compile outside the replay
     print(f"warmed {buckets} (batch, token) buckets")
-    on_tick = _make_watcher(args, sched) if args.watch else None
+    on_tick = _make_watcher(args, sched, flat=flat) if args.watch else None
     summary = replay_open_loop(sched, trace, swap_after=swap_after,
                                swap_snapshot=swap_snap, on_tick=on_tick)
 
@@ -195,6 +264,12 @@ def main() -> None:
           f"rejections {summary['rejections'] or 'none'}")
     print(f"epochs served: {summary['epochs']} over "
           f"{sched.swaps} swap(s); dropped {summary['dropped']}")
+    st = sched.stats()
+    print(f"faults: {st['faults']}")
+    print("breakers: " + "  ".join(
+        f"replica {i}: {h['state']} ({h['successes']} ok / "
+        f"{h['failures']} fail, {h['opens']} open(s))"
+        for i, h in enumerate(st["replicas"])))
     if args.out:
         with open(args.out, "w") as f:
             json.dump({k: v for k, v in summary.items()}, f, indent=1,

@@ -115,7 +115,28 @@ def main() -> None:
                     help="export the final model as a SHARDED serving "
                          "snapshot directory, one block file at a time "
                          "(streaming engine; lda_infer --snapshot-dir)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run training under the crash-recovery "
+                         "supervisor (DESIGN.md §15): on a crash, "
+                         "quarantine corrupt/partial checkpoints into "
+                         "workdir/quarantine/ and restart from the last "
+                         "good one with bounded seeded backoff — the "
+                         "recovered chain is bitwise the uninterrupted "
+                         "one")
+    ap.add_argument("--max-restarts", type=int, default=3, metavar="N",
+                    help="restart budget under --supervise")
     args = ap.parse_args()
+
+    if args.supervise:
+        import sys
+
+        from repro.launch.supervise import supervise_cli
+        if not args.workdir:
+            ap.error("--supervise needs --workdir (the checkpoint home "
+                     "the supervisor quarantines and resumes from)")
+        sys.exit(supervise_cli(sys.argv[1:], args.workdir,
+                               max_restarts=args.max_restarts,
+                               seed=args.seed))
 
     streaming = bool(args.corpus_dir) or (
         args.resume and args.workdir

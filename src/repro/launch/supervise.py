@@ -1,0 +1,297 @@
+"""Crash-recovery supervisor (DESIGN.md §15).
+
+Runs a training attempt (an in-process callable for tests, a re-exec'd
+``lda_train`` child for the CLI), and on a crash:
+
+1. **quarantines** any partial or corrupt checkpoint debris (``ckpt.tmp``
+   trees, ``*.tmp`` files, checkpoints whose integrity sidecars no
+   longer validate) into ``<workdir>/quarantine/`` — never deleted, so
+   a post-mortem can inspect exactly what the crash left behind;
+2. decides whether the workdir is **resumable** (a validated checkpoint
+   survives) or must **start fresh** (crash before the first
+   checkpoint: everything is quarantined so the child re-initializes);
+3. **restarts** with bounded exponential backoff whose jitter is drawn
+   from a seeded rng — the whole restart schedule is deterministic,
+   like everything else in this repo;
+4. gives up with :class:`RestartBudgetExceeded` after ``max_restarts``
+   restarts.
+
+Why recovery is bitwise-invisible: a checkpoint is the complete chain
+state (counts + rng bit-generator state) taken at an iteration
+boundary, and both engines' ``resume`` paths restore it bit-for-bit —
+so "crash, quarantine, resume from last good checkpoint" lands on the
+SAME chain as a run that never crashed.  Even the fresh-start case is
+deterministic: the chain is a pure function of (corpus, config, seed).
+``tests/test_faults.py`` pins the end-to-end property: a run killed by
+injected crashes at several step offsets, auto-restarted by this
+supervisor, ends bitwise equal (all count arrays + rng state) to an
+uninterrupted run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core import faults
+from repro.data import integrity
+
+QUARANTINE_DIR = "quarantine"
+MP_CKPT = "engine_ckpt.npz"
+
+
+class RestartBudgetExceeded(RuntimeError):
+    """The child kept failing past ``max_restarts`` restarts."""
+
+
+@dataclass
+class SupervisorReport:
+    attempts: int = 0
+    restarts: int = 0
+    exit_code: Optional[int] = None
+    resumed: List[bool] = field(default_factory=list)
+    backoffs: List[float] = field(default_factory=list)
+    quarantined: List[str] = field(default_factory=list)
+    crashes: List[str] = field(default_factory=list)
+
+
+def checkpoint_kind(workdir: str) -> Optional[str]:
+    """Which engine owns this workdir: 'streaming' (run.json state
+    store), 'mp' (single engine_ckpt.npz), or None (nothing yet)."""
+    if os.path.exists(os.path.join(workdir, "run.json")):
+        return "streaming"
+    if os.path.exists(os.path.join(workdir, MP_CKPT)) or \
+            os.path.exists(os.path.join(workdir, MP_CKPT + ".tmp")):
+        return "mp"
+    return None
+
+
+def _quarantine(workdir: str, path: str, report: List[str]) -> None:
+    qroot = os.path.join(workdir, QUARANTINE_DIR)
+    os.makedirs(qroot, exist_ok=True)
+    dest = os.path.join(qroot,
+                        f"{len(os.listdir(qroot)):03d}_"
+                        f"{os.path.basename(path)}")
+    os.rename(path, dest)
+    report.append(dest)
+
+
+def _valid_streaming_ckpt(ckpt: str) -> bool:
+    """A streaming checkpoint dir is good iff every stamped artifact
+    validates AND the progress record (iteration + rng state) is there."""
+    if not os.path.isdir(ckpt) or \
+            not os.path.exists(os.path.join(ckpt, "progress.json")):
+        return False
+    try:
+        integrity.validate_tree(ckpt)
+        with open(os.path.join(ckpt, "progress.json")) as f:
+            json.load(f)
+        return True
+    except (integrity.IntegrityError, ValueError, OSError):
+        return False
+
+
+def _valid_mp_ckpt(path: str) -> bool:
+    if not os.path.exists(path):
+        return False
+    try:
+        integrity.load_npz(path)
+        return True
+    except integrity.IntegrityError:
+        return False
+
+
+def prepare_restart(workdir: str) -> dict:
+    """Quarantine crash debris and report whether the workdir holds a
+    validated checkpoint to resume from.
+
+    Idempotent: on a clean workdir it quarantines nothing.  When NO
+    valid checkpoint survives, every remaining artifact is quarantined
+    too, so the next attempt re-initializes from scratch instead of
+    tripping over a half-built state store.
+    """
+    quarantined: List[str] = []
+    if not os.path.isdir(workdir):
+        return {"kind": None, "resumable": False, "quarantined": quarantined}
+    kind = checkpoint_kind(workdir)
+    resumable = False
+
+    if kind == "streaming":
+        tmp = os.path.join(workdir, "ckpt.tmp")
+        if os.path.exists(tmp):            # killed mid-copy: always debris
+            _quarantine(workdir, tmp, quarantined)
+        ckpt = os.path.join(workdir, "ckpt")
+        old = os.path.join(workdir, "ckpt.old")
+        if os.path.isdir(ckpt) and not _valid_streaming_ckpt(ckpt):
+            _quarantine(workdir, ckpt, quarantined)
+        if os.path.isdir(ckpt) and os.path.isdir(old):
+            # killed after promote but before the old tree was removed
+            _quarantine(workdir, old, quarantined)
+        if not os.path.isdir(ckpt) and os.path.isdir(old):
+            # killed between the two renames of the atomic swap: the
+            # previous checkpoint is still complete under ckpt.old
+            if _valid_streaming_ckpt(old):
+                os.rename(old, ckpt)
+            else:
+                _quarantine(workdir, old, quarantined)
+        try:
+            integrity.validate_file(os.path.join(workdir, "run.json"))
+            run_ok = True
+        except integrity.IntegrityError:
+            run_ok = False
+        resumable = run_ok and _valid_streaming_ckpt(ckpt)
+    elif kind == "mp":
+        mp = os.path.join(workdir, MP_CKPT)
+        for leftover in (mp + ".tmp",):
+            if os.path.exists(leftover):
+                _quarantine(workdir, leftover, quarantined)
+        if os.path.exists(mp) and not _valid_mp_ckpt(mp):
+            _quarantine(workdir, mp, quarantined)
+            sc = integrity.sidecar_path(mp)
+            if os.path.exists(sc):
+                _quarantine(workdir, sc, quarantined)
+        resumable = _valid_mp_ckpt(mp)
+
+    if kind is not None and not resumable:
+        # no checkpoint survived: clear the way for a fresh, fully
+        # deterministic re-initialization (chain = f(corpus, cfg, seed))
+        for name in sorted(os.listdir(workdir)):
+            if name == QUARANTINE_DIR:
+                continue
+            _quarantine(workdir, os.path.join(workdir, name), quarantined)
+    return {"kind": kind, "resumable": resumable, "quarantined": quarantined}
+
+
+class Supervisor:
+    """Restart loop around a training attempt.
+
+    ``run_child(attempt, resumable) -> int`` runs one attempt and
+    returns its exit code; raising (anything up to and including
+    :class:`~repro.core.faults.InjectedCrash`) counts as a crash.
+    ``max_restarts`` bounds RESTARTS, so at most ``max_restarts + 1``
+    attempts run.  Backoff before restart ``i`` is
+    ``min(cap, base * 2**i) * jitter`` with jitter drawn uniformly from
+    [0.5, 1.5) by ``default_rng([seed, i])`` — deterministic per
+    (seed, restart), independent of wall clock.
+    """
+
+    def __init__(self, run_child: Callable[[int, bool], int], workdir: str,
+                 max_restarts: int = 3, backoff_base: float = 0.05,
+                 backoff_cap: float = 2.0, seed: int = 0,
+                 sleep: Callable[[float], None] = time.sleep,
+                 log: Callable[[str], None] = print):
+        self.run_child = run_child
+        self.workdir = workdir
+        self.max_restarts = int(max_restarts)
+        self.backoff_base = float(backoff_base)
+        self.backoff_cap = float(backoff_cap)
+        self.seed = int(seed)
+        self.sleep = sleep
+        self.log = log
+
+    def backoff(self, restart: int) -> float:
+        base = min(self.backoff_cap, self.backoff_base * 2 ** restart)
+        jitter = 0.5 + np.random.default_rng(
+            [self.seed, restart]).random()
+        return base * jitter
+
+    def run(self) -> SupervisorReport:
+        report = SupervisorReport()
+        for attempt in range(self.max_restarts + 1):
+            info = prepare_restart(self.workdir)
+            report.quarantined.extend(info["quarantined"])
+            report.resumed.append(info["resumable"])
+            report.attempts += 1
+            try:
+                rc = self.run_child(attempt, info["resumable"])
+            except (Exception, faults.InjectedCrash) as e:
+                report.crashes.append(f"{type(e).__name__}: {e}")
+                rc = -1
+            if rc == 0:
+                report.exit_code = 0
+                return report
+            why = (report.crashes[-1] if rc == -1 and report.crashes
+                   else f"exit {rc}")
+            self.log(f"[supervisor] attempt {attempt} failed ({why})")
+            if attempt == self.max_restarts:
+                break
+            delay = self.backoff(attempt)
+            report.backoffs.append(delay)
+            report.restarts += 1
+            self.log(f"[supervisor] restarting in {delay:.3f}s "
+                     f"(restart {attempt + 1}/{self.max_restarts})")
+            self.sleep(delay)
+        raise RestartBudgetExceeded(
+            f"child failed {report.attempts} times "
+            f"(max_restarts={self.max_restarts}); last: "
+            f"{report.crashes[-1] if report.crashes else 'nonzero exit'}")
+
+
+# ---------------------------------------------------------------------------
+# CLI integration (lda_train --supervise)
+# ---------------------------------------------------------------------------
+
+_STRIP_FLAGS = {"--supervise"}
+_STRIP_VALUED = {"--max-restarts", "--restart-backoff"}
+
+
+def strip_supervise_args(argv: List[str]) -> List[str]:
+    out, skip = [], False
+    for a in argv:
+        if skip:
+            skip = False
+            continue
+        if a in _STRIP_FLAGS:
+            continue
+        if a in _STRIP_VALUED:
+            skip = True
+            continue
+        if any(a.startswith(f + "=") for f in _STRIP_VALUED):
+            continue
+        out.append(a)
+    return out
+
+
+def supervise_cli(argv: List[str], workdir: str, max_restarts: int,
+                  backoff_base: float = 0.05, seed: int = 0) -> int:
+    """Supervise ``lda_train`` as a subprocess: re-exec this module's
+    CLI with the supervise flags stripped, toggling ``--resume`` per
+    attempt based on what the quarantine pass finds.  The
+    ``REPRO_FAULT_PLAN`` env var reaches attempt 0 only — restarted
+    attempts must not re-trigger the very fault being recovered from
+    (a real crash does not follow the process to its replacement)."""
+    base = strip_supervise_args(argv)
+
+    def run_child(attempt: int, resumable: bool) -> int:
+        child = [a for a in base if a != "--resume"]
+        if resumable:
+            child.append("--resume")
+        env = os.environ.copy()
+        if attempt > 0:
+            env.pop(faults.ENV_VAR, None)
+        cmd = [sys.executable, "-m", "repro.launch.lda_train"] + child
+        print(f"[supervisor] attempt {attempt}: "
+              f"{'resume' if resumable else 'fresh start'}", flush=True)
+        return subprocess.call(cmd, env=env)
+
+    sup = Supervisor(run_child, workdir, max_restarts=max_restarts,
+                     backoff_base=backoff_base, seed=seed)
+    report = sup.run()
+    print(f"[supervisor] done: {report.attempts} attempt(s), "
+          f"{report.restarts} restart(s), "
+          f"{len(report.quarantined)} artifact(s) quarantined", flush=True)
+    return 0
+
+
+__all__ = [
+    "RestartBudgetExceeded", "SupervisorReport", "Supervisor",
+    "checkpoint_kind", "prepare_restart", "strip_supervise_args",
+    "supervise_cli", "QUARANTINE_DIR", "MP_CKPT",
+]

@@ -22,6 +22,13 @@ is :class:`ServingScheduler`:
 * **multi-replica dispatch** — batches round-robin across ``N`` server
   replicas sharing one snapshot (frozen-model serving is embarrassingly
   data-parallel, §11), so replicas are a pure throughput knob.
+* **replica resilience** (DESIGN.md §15) — per-replica consecutive-
+  failure circuit breakers (closed → open → half-open probe), bounded
+  retry-on-alternate-replica that stays bitwise-invisible (draws are
+  keyed on content, not on which replica ran), per-request deadline
+  expiry and all-breakers-open load shedding as structured rejections,
+  and fingerprint-gated hot-swap that refuses a corrupt candidate while
+  the old epoch keeps serving.
 * **zero-downtime hot-swap** — :meth:`~ServingScheduler.swap_snapshot`
   installs the next training snapshot as a pointer flip: requests
   admitted before the swap complete on the snapshot they were admitted
@@ -58,7 +65,9 @@ from typing import Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import faults
 from repro.core.infer import DEFAULT_FOLD_IN_SWEEPS, ModelSnapshot
+from repro.data.integrity import CorruptArtifactError
 from repro.serve.topic_infer import TopicInferenceServer, bucket_size
 
 
@@ -223,6 +232,52 @@ REJECT_QUEUE_FULL = "queue_full"
 REJECT_EMPTY = "empty"
 REJECT_TOO_LONG = "too_long"
 REJECT_BAD_WORD = "bad_word_id"
+REJECT_SHED = "shed"                       # all replica breakers open
+REJECT_DEADLINE = "deadline_expired"       # waited past request_deadline
+REJECT_REPLICA = "replica_failure"         # retry budget exhausted
+
+BREAKER_CLOSED = "closed"
+BREAKER_OPEN = "open"
+BREAKER_HALF_OPEN = "half_open"
+
+
+@dataclasses.dataclass
+class ReplicaHealth:
+    """Per-replica circuit breaker (DESIGN.md §15).  CLOSED routes
+    traffic normally; ``breaker_threshold`` CONSECUTIVE failures open
+    it; an OPEN breaker takes no traffic until ``breaker_cooldown`` has
+    passed, then transitions to HALF_OPEN and admits one probe batch —
+    success closes it, failure re-opens (and restarts the cooldown).
+    Health is keyed on the replica SLOT, not the snapshot epoch: a sick
+    process stays sick across hot-swaps."""
+    state: str = BREAKER_CLOSED
+    consecutive_failures: int = 0
+    failures: int = 0
+    successes: int = 0
+    opens: int = 0
+    opened_at: float = 0.0
+
+    def record_failure(self, now: float, threshold: int) -> None:
+        self.failures += 1
+        self.consecutive_failures += 1
+        if self.state == BREAKER_HALF_OPEN or \
+                (self.state == BREAKER_CLOSED
+                 and self.consecutive_failures >= threshold):
+            self.state = BREAKER_OPEN
+            self.opened_at = now
+            self.opens += 1
+
+    def record_success(self) -> None:
+        self.successes += 1
+        self.consecutive_failures = 0
+        self.state = BREAKER_CLOSED
+
+    def available(self, now: float, cooldown: float) -> bool:
+        """Lazy open -> half_open transition: state machines driven by
+        the injected clock have no timers, only reads."""
+        if self.state == BREAKER_OPEN and now - self.opened_at >= cooldown:
+            self.state = BREAKER_HALF_OPEN
+        return self.state != BREAKER_OPEN
 
 
 @dataclasses.dataclass
@@ -234,6 +289,7 @@ class _Pending:
     digest: bytes
     epoch: int
     t_arrival: float
+    retries: int = 0
 
 
 @dataclasses.dataclass
@@ -279,7 +335,11 @@ class ServingScheduler:
                  max_batch: int = 8, max_batch_delay: float = 0.0,
                  max_doc_tokens: Optional[int] = None,
                  cache_capacity: int = 256, clock: Optional[Clock] = None,
-                 min_batch_bucket: int = 1, min_token_bucket: int = 8):
+                 min_batch_bucket: int = 1, min_token_bucket: int = 8,
+                 breaker_threshold: int = 3, breaker_cooldown: float = 1.0,
+                 max_retries: int = 2,
+                 request_deadline: Optional[float] = None,
+                 fault_plan: Optional[faults.FaultPlan] = None):
         if num_replicas < 1:
             raise ValueError(f"num_replicas must be >= 1, got {num_replicas}")
         if max_batch < 1:
@@ -296,6 +356,11 @@ class ServingScheduler:
         self.max_doc_tokens = max_doc_tokens
         self.min_batch_bucket = int(min_batch_bucket)
         self.min_token_bucket = int(min_token_bucket)
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown = float(breaker_cooldown)
+        self.max_retries = int(max_retries)
+        self.request_deadline = request_deadline
+        self.fault_plan = fault_plan
         self.clock = clock if clock is not None else WallClock()
         self.cache = QueryCache(cache_capacity)
 
@@ -316,6 +381,13 @@ class ServingScheduler:
         self.cache_hits = 0
         self.swaps = 0
         self.rejections: Dict[str, int] = {}
+        # resilience state (DESIGN.md §15): health is per replica SLOT
+        self.health = [ReplicaHealth() for _ in range(self.num_replicas)]
+        self.retries = 0                   # re-dispatch attempts
+        self.replica_failures = 0          # failed dispatch attempts
+        self.shed = 0                      # admissions refused: all open
+        self.deadline_expired = 0
+        self.failed_admitted = 0           # admitted -> structured reject
 
     # -- model installation / hot-swap ------------------------------------
     def _install(self, snapshot: ModelSnapshot) -> None:
@@ -353,7 +425,8 @@ class ServingScheduler:
             qb <<= 1
         return n
 
-    def swap_snapshot(self, snapshot: ModelSnapshot) -> int:
+    def swap_snapshot(self, snapshot: ModelSnapshot,
+                      expect_fingerprint: Optional[str] = None) -> int:
         """Install the next training snapshot with zero downtime.
 
         A pointer flip: the new epoch's replicas are created, new
@@ -362,7 +435,20 @@ class ServingScheduler:
         them at admission — the old epoch's servers are released only
         once its last queued request drains.  The cache is cleared: its
         entries answer for the previous fingerprint.  Returns the new
-        epoch."""
+        epoch.
+
+        ``expect_fingerprint`` is the swap's integrity gate (§15): when
+        the caller knows what it exported (trainer-published manifest),
+        a candidate whose content fingerprint disagrees — torn copy, bit
+        rot, wrong file — is REFUSED with :class:`CorruptArtifactError`
+        before any state changes, and the old epoch keeps serving."""
+        if expect_fingerprint is not None:
+            got = snapshot.fingerprint()
+            if got != expect_fingerprint:
+                raise CorruptArtifactError(
+                    "<candidate snapshot>",
+                    f"snapshot fingerprint {got} != expected "
+                    f"{expect_fingerprint}; refusing hot-swap")
         self.epoch += 1
         self._install(snapshot)
         self.cache.clear()
@@ -436,6 +522,12 @@ class ServingScheduler:
             return rid
         if len(self._queue) >= self.max_queue:
             return self._reject(rid, REJECT_QUEUE_FULL, now)
+        if not self._available_replicas(now):
+            # load shedding: every breaker is open, so an admission now
+            # could only rot in the queue — refuse it loudly instead.
+            # (After the cache check on purpose: hits cost no replica.)
+            self.shed += 1
+            return self._reject(rid, REJECT_SHED, now)
         self.admitted += 1
         self._queue.append(_Pending(rid, canon, digest, self.epoch, now))
         return rid
@@ -453,8 +545,11 @@ class ServingScheduler:
         ``flush`` forces it.  With ``max_batch_delay == 0`` every tick
         serves everything queued — pure continuous batching."""
         out: List[Response] = []
+        self._expire_deadlines(self.clock.now())
         while self._queue:
             now = self.clock.now()
+            if not self._available_replicas(now):
+                break                     # every breaker open: hold FIFO
             head = self._queue[0]
             group = 1
             while (group < len(self._queue) and group < self.max_batch
@@ -465,33 +560,125 @@ class ServingScheduler:
                     or now - head.t_arrival >= self.max_batch_delay):
                 break
             batch = [self._queue.popleft() for _ in range(group)]
-            out.extend(self._run_batch(batch, now))
+            responses, ok = self._run_batch(batch, now)
+            out.extend(responses)
+            if not ok:
+                # total dispatch failure: survivors are back at the queue
+                # head; stop this tick so one tick can't spin forever on
+                # a batch no replica will take
+                break
         self._release_drained_epochs()
         return out
+
+    # -- resilience --------------------------------------------------------
+    def _available_replicas(self, now: float) -> List[int]:
+        return [i for i, h in enumerate(self.health)
+                if h.available(now, self.breaker_cooldown)]
+
+    def _expire_deadlines(self, now: float) -> None:
+        if self.request_deadline is None:
+            return
+        keep: Deque[_Pending] = deque()
+        for p in self._queue:
+            if now - p.t_arrival >= self.request_deadline:
+                self.deadline_expired += 1
+                self._reject_admitted(p, REJECT_DEADLINE, now)
+            else:
+                keep.append(p)
+        self._queue = keep
+
+    def _reject_admitted(self, p: _Pending, reason: str,
+                         now: float) -> None:
+        """Structured post-admission rejection: the request got a queue
+        slot but the system could not serve it (deadline passed, retry
+        budget exhausted).  Counted separately from admission-time
+        rejects so ``dropped()`` still means 'vanished without ANY
+        outcome'."""
+        self.rejections[reason] = self.rejections.get(reason, 0) + 1
+        self.failed_admitted += 1
+        self.results[p.req_id] = Response(
+            p.req_id, "rejected", reason=reason, epoch=p.epoch,
+            t_arrival=p.t_arrival, t_dispatch=now, t_finish=now)
+
+    def _fire_replica(self, replica: int, epoch: int) -> None:
+        """Fault-injection hook around one dispatch attempt: scripted
+        replica failures raise here; scripted slowness is charged to the
+        injected clock (latency, not error)."""
+        detail = f"replica:{replica},epoch:{epoch}"
+        plan = self.fault_plan if self.fault_plan is not None \
+            else faults.active()
+        if plan is None:
+            return
+        dt = plan.delay("replica", detail)
+        if dt > 0:
+            self.clock.sleep(dt)
+        plan.fire("replica", detail)
 
     def drain(self) -> List[Response]:
         """Force-dispatch everything queued (end of a replay)."""
         return self.tick(flush=True)
 
     def _run_batch(self, batch: List[_Pending],
-                   t_dispatch: float) -> List[Response]:
+                   t_dispatch: float) -> "tuple[List[Response], bool]":
+        """Dispatch one batch, retrying on alternate replicas on failure.
+
+        Returns ``(responses, ok)``.  Retries are bitwise-invisible: the
+        draws are keyed on (seed, fingerprint, digest) — never on which
+        replica ran — so the answer from attempt 3 on replica 2 is the
+        answer attempt 1 would have produced (pinned by
+        ``tests/test_scheduler_resilience.py``).  When every available
+        replica fails, each request's retry budget is charged: survivors
+        requeue at the FRONT (FIFO order preserved), exhausted ones get
+        a structured ``replica_failure`` rejection."""
         epoch = batch[0].epoch
         assert all(p.epoch == epoch for p in batch)   # one snapshot/batch
         servers = self._servers[epoch]
-        replica = self._rr % len(servers)
-        self._rr += 1
-        server = servers[replica]
         fp = self._fp[epoch]
         docs = [p.canon for p in batch]
         draws = [request_draws(self.seed, fp, p.digest, p.canon.size,
-                               server.snapshot.num_topics, self.num_sweeps)
+                               servers[0].snapshot.num_topics,
+                               self.num_sweeps)
                  for p in batch]
-        theta = server.infer_with_draws(docs, [d[0] for d in draws],
-                                        [d[1] for d in draws])
+        avail = self._available_replicas(t_dispatch)
+        start = self._rr % max(len(avail), 1)
+        self._rr += 1
+        candidates = avail[start:] + avail[:start]
+        theta = None
+        replica = -1
+        for attempt, rid in enumerate(candidates):
+            if attempt > 0:
+                self.retries += 1
+            now = self.clock.now()
+            try:
+                self._fire_replica(rid, epoch)
+                theta = servers[rid].infer_with_draws(
+                    docs, [d[0] for d in draws], [d[1] for d in draws])
+            except Exception:
+                self.replica_failures += 1
+                self.health[rid].record_failure(now,
+                                                self.breaker_threshold)
+                continue
+            self.health[rid].record_success()
+            replica = rid
+            break
+        if theta is None:
+            # every available replica refused this batch: charge each
+            # request's retry budget and requeue the survivors in order
+            now = self.clock.now()
+            survivors = []
+            for p in batch:
+                p.retries += 1
+                if p.retries > self.max_retries:
+                    self._reject_admitted(p, REJECT_REPLICA, now)
+                else:
+                    survivors.append(p)
+            self._queue.extendleft(reversed(survivors))
+            return [], False
         t_finish = self.clock.now()
         self.batch_log.append({
             "epoch": epoch, "size": len(batch), "replica": replica,
-            "bucket": server.bucket_shape(docs), "t_dispatch": t_dispatch})
+            "bucket": servers[replica].bucket_shape(docs),
+            "t_dispatch": t_dispatch})
         responses = []
         for i, p in enumerate(batch):
             resp = Response(p.req_id, "ok", theta=theta[i], epoch=epoch,
@@ -503,16 +690,20 @@ class ServingScheduler:
             self.served += 1
             if epoch == self.epoch:      # never cache for a dead epoch
                 self.cache.put(p.digest, p.canon, theta[i])
-        return responses
+        return responses, True
 
     # -- observability -----------------------------------------------------
     def ok_responses(self) -> List[Response]:
         return [r for r in self.results.values() if r.status == "ok"]
 
     def dropped(self) -> int:
-        """Admitted requests without a response — MUST be zero once the
-        queue drains (the hot-swap acceptance criterion)."""
-        return self.admitted - len(self.ok_responses())
+        """Admitted requests that vanished with NO outcome — neither an
+        ok response nor a structured post-admission rejection.  MUST be
+        zero once the queue drains (the hot-swap acceptance criterion):
+        even under replica failures and deadline expiry, every admitted
+        request gets a definite answer."""
+        return (self.admitted - len(self.ok_responses())
+                - self.failed_admitted)
 
     def latency_summary(self) -> dict:
         lat = np.asarray([r.latency for r in self.ok_responses()])
@@ -539,11 +730,26 @@ class ServingScheduler:
                       "evictions": self.cache.evictions,
                       "collisions": self.cache.collisions,
                       "size": len(self.cache)},
+            "faults": {"retries": self.retries,
+                       "replica_failures": self.replica_failures,
+                       "breaker_opens": sum(h.opens for h in self.health),
+                       "shed": self.shed,
+                       "deadline_expired": self.deadline_expired,
+                       "failed_admitted": self.failed_admitted},
+            "replicas": [{"state": h.state,
+                          "failures": h.failures,
+                          "successes": h.successes,
+                          "opens": h.opens,
+                          "consecutive_failures": h.consecutive_failures}
+                         for h in self.health],
         }
 
 
 __all__ = ["Clock", "WallClock", "VirtualClock", "QueryCache", "Response",
-           "ServingScheduler", "bucket_size", "canonical_tokens",
-           "multiset_digest", "request_draws", "reference_theta",
+           "ReplicaHealth", "ServingScheduler", "bucket_size",
+           "canonical_tokens", "multiset_digest", "request_draws",
+           "reference_theta",
            "REJECT_QUEUE_FULL", "REJECT_EMPTY", "REJECT_TOO_LONG",
-           "REJECT_BAD_WORD"]
+           "REJECT_BAD_WORD", "REJECT_SHED", "REJECT_DEADLINE",
+           "REJECT_REPLICA",
+           "BREAKER_CLOSED", "BREAKER_OPEN", "BREAKER_HALF_OPEN"]

@@ -124,5 +124,6 @@ def replay_open_loop(sched: ServingScheduler,
         "epochs": epochs,
         **sched.latency_summary(),
         **{k: v for k, v in sched.stats().items()
-           if k in ("admitted", "rejections", "cache", "swaps", "batches")},
+           if k in ("admitted", "rejections", "cache", "swaps", "batches",
+                    "faults")},
     }

@@ -1,0 +1,426 @@
+"""Scheduler resilience (DESIGN.md §15): per-replica circuit breakers,
+bitwise-invisible retry-on-alternate-replica, deadline expiry, load
+shedding, fingerprint-gated hot-swap, and the tolerant snapshot watcher.
+
+The load-bearing property: replica failures are a ROUTING concern only.
+Draws are keyed on (seed, fingerprint, multiset digest) — never on
+which replica ran — so a response that survived two failed dispatch
+attempts is bitwise the response a healthy system would have produced,
+pinned here against ``reference_theta`` and against a fault-free
+scheduler run.  And every admitted request gets a definite outcome:
+``dropped() == 0`` even when every replica is down.
+"""
+import argparse
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import faults
+from repro.core.faults import FaultPlan, FaultSpec
+from repro.core.infer import ModelSnapshot, load_snapshot
+from repro.data import integrity
+from repro.serve.scheduler import (BREAKER_CLOSED, BREAKER_HALF_OPEN,
+                                   BREAKER_OPEN, REJECT_DEADLINE,
+                                   REJECT_REPLICA, REJECT_SHED,
+                                   CorruptArtifactError, ReplicaHealth,
+                                   ServingScheduler, VirtualClock,
+                                   reference_theta)
+from repro.serve.traffic import poisson_trace, replay_open_loop
+
+V, K = 64, 8
+SWEEPS = 3
+SEED = 1
+
+
+def _snapshot(seed: int) -> ModelSnapshot:
+    rng = np.random.default_rng(seed)
+    return ModelSnapshot.from_counts(
+        rng.integers(0, 30, size=(V, K)).astype(np.int32))
+
+
+@pytest.fixture(scope="module")
+def snap_a():
+    return _snapshot(10)
+
+
+@pytest.fixture(scope="module")
+def snap_b():
+    return _snapshot(20)
+
+
+def _sched(snap, **kw) -> ServingScheduler:
+    kw.setdefault("clock", VirtualClock())
+    kw.setdefault("sampler", "scan")
+    kw.setdefault("num_sweeps", SWEEPS)
+    kw.setdefault("seed", SEED)
+    return ServingScheduler(snap, **kw)
+
+
+def _docs(n, seed=0, lo=3, hi=14):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, V, size=int(rng.integers(lo, hi)))
+            .astype(np.int32) for _ in range(n)]
+
+
+def _ref(snap, tokens):
+    return reference_theta(snap, tokens, sampler="scan",
+                           num_sweeps=SWEEPS, seed=SEED)
+
+
+def _fail_replicas(*rids):
+    """A plan under which every dispatch to the given replicas fails."""
+    return FaultPlan([FaultSpec("replica_fail", "replica",
+                                f"replica:{r},", nth=0) for r in rids])
+
+
+# ---------------------------------------------------------------------------
+# ReplicaHealth state machine
+# ---------------------------------------------------------------------------
+
+class TestReplicaHealth:
+    def test_threshold_consecutive_failures_open(self):
+        h = ReplicaHealth()
+        h.record_failure(0.0, threshold=3)
+        h.record_failure(0.0, threshold=3)
+        assert h.state == BREAKER_CLOSED
+        h.record_failure(1.0, threshold=3)
+        assert h.state == BREAKER_OPEN and h.opens == 1
+        assert h.opened_at == 1.0
+
+    def test_success_resets_consecutive(self):
+        h = ReplicaHealth()
+        h.record_failure(0.0, 3)
+        h.record_failure(0.0, 3)
+        h.record_success()
+        h.record_failure(0.0, 3)
+        h.record_failure(0.0, 3)
+        assert h.state == BREAKER_CLOSED        # streak was broken
+        assert h.failures == 4 and h.successes == 1
+
+    def test_cooldown_half_open_then_close(self):
+        h = ReplicaHealth()
+        for _ in range(3):
+            h.record_failure(0.0, 3)
+        assert not h.available(0.5, cooldown=1.0)
+        assert h.available(1.0, cooldown=1.0)    # lazy open -> half_open
+        assert h.state == BREAKER_HALF_OPEN
+        h.record_success()
+        assert h.state == BREAKER_CLOSED
+
+    def test_half_open_failure_reopens_immediately(self):
+        h = ReplicaHealth()
+        for _ in range(3):
+            h.record_failure(0.0, 3)
+        h.available(2.0, cooldown=1.0)
+        assert h.state == BREAKER_HALF_OPEN
+        h.record_failure(2.0, 3)                 # probe failed
+        assert h.state == BREAKER_OPEN and h.opens == 2
+        assert h.opened_at == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Retry on alternate replica: bitwise-invisible
+# ---------------------------------------------------------------------------
+
+class TestRetryBitwise:
+    def test_failing_replica_answers_match_reference(self, snap_a):
+        sched = _sched(snap_a, num_replicas=2,
+                       fault_plan=_fail_replicas(0))
+        docs = _docs(6, seed=3)
+        rids = [sched.submit(d) for d in docs]
+        while sched.pending:
+            sched.tick()
+            sched.clock.sleep(0.01)
+        for rid, d in zip(rids, docs):
+            r = sched.results[rid]
+            assert r.status == "ok" and r.replica == 1
+            np.testing.assert_array_equal(r.theta, _ref(snap_a, d))
+        assert sched.dropped() == 0
+        st = sched.stats()["faults"]
+        assert st["replica_failures"] > 0
+
+    def test_faulty_run_equals_clean_run_bitwise(self, snap_a):
+        docs = _docs(8, seed=4)
+        clean = _sched(snap_a, num_replicas=2)
+        faulty = _sched(snap_a, num_replicas=2,
+                        fault_plan=_fail_replicas(0))
+        for s in (clean, faulty):
+            for d in docs:
+                s.submit(d)
+            while s.pending:
+                s.tick()
+                s.clock.sleep(0.01)
+        for rid in range(len(docs)):
+            np.testing.assert_array_equal(
+                clean.results[rid].theta, faulty.results[rid].theta,
+                err_msg=f"request {rid}: retry changed the answer")
+        assert faulty.retries >= 1               # the retries DID happen
+
+    def test_within_tick_retry_serves_same_tick(self, snap_a):
+        """A batch whose first candidate replica fails is answered by
+        the next one in the SAME tick — no requeue round-trip."""
+        sched = _sched(snap_a, num_replicas=2,
+                       fault_plan=_fail_replicas(0))
+        sched.submit(_docs(1, seed=5)[0])
+        out = sched.tick()
+        assert len(out) == 1 and out[0].status == "ok"
+        assert out[0].replica == 1
+        assert sched.retries == 1 and sched.replica_failures == 1
+
+
+# ---------------------------------------------------------------------------
+# Breaker routing in the scheduler
+# ---------------------------------------------------------------------------
+
+class TestBreakerRouting:
+    def test_breaker_opens_and_stops_charging_failures(self, snap_a):
+        sched = _sched(snap_a, num_replicas=2, breaker_threshold=3,
+                       breaker_cooldown=100.0, max_batch=1,
+                       fault_plan=_fail_replicas(0))
+        for d in _docs(8, seed=6):
+            sched.submit(d)
+        while sched.pending:
+            sched.tick()
+            sched.clock.sleep(0.01)
+        assert sched.health[0].state == BREAKER_OPEN
+        # once open, replica 0 left the candidate list: exactly
+        # `threshold` dispatches were wasted on it, not one per batch
+        assert sched.health[0].failures == 3
+        assert sched.health[0].opens == 1
+        assert all(r.replica == 1 for r in sched.ok_responses()
+                   if not r.cached)
+
+    def test_single_replica_recovers_via_half_open_probe(self, snap_a):
+        plan = FaultPlan([FaultSpec("replica_fail", "replica",
+                                    "replica:0,", nth=1)])  # first only
+        sched = _sched(snap_a, num_replicas=1, breaker_threshold=1,
+                       breaker_cooldown=1.0, fault_plan=plan)
+        doc = _docs(1, seed=7)[0]
+        rid = sched.submit(doc)
+        assert sched.tick() == []                # fails, breaker opens
+        assert sched.health[0].state == BREAKER_OPEN
+        assert sched.tick() == []                # still cooling down
+        sched.clock.sleep(1.5)
+        out = sched.tick()                       # half-open probe passes
+        assert len(out) == 1 and out[0].req_id == rid
+        np.testing.assert_array_equal(out[0].theta, _ref(snap_a, doc))
+        assert sched.health[0].state == BREAKER_CLOSED
+        assert sched.health[0].opens == 1
+
+    def test_failed_probe_reopens_then_recovers(self, snap_a):
+        # two specs, each nth=1: a raising spec aborts the matching scan,
+        # so the second spec's counter only advances on the NEXT fire —
+        # together they script exactly two consecutive failures
+        plan = FaultPlan([FaultSpec("replica_fail", "replica",
+                                    "replica:0,", nth=1) for _ in range(2)])
+        sched = _sched(snap_a, num_replicas=1, breaker_threshold=1,
+                       breaker_cooldown=1.0, max_retries=2,
+                       fault_plan=plan)
+        doc = _docs(1, seed=8)[0]
+        sched.submit(doc)
+        sched.tick()                             # fail #1 -> open
+        sched.clock.sleep(1.5)
+        sched.tick()                             # probe fails -> re-open
+        assert sched.health[0].opens == 2
+        sched.clock.sleep(1.5)
+        out = sched.tick()                       # third attempt succeeds
+        assert len(out) == 1 and out[0].status == "ok"
+        np.testing.assert_array_equal(out[0].theta, _ref(snap_a, doc))
+
+    def test_all_open_sheds_deadline_expires_dropped_zero(self, snap_a):
+        sched = _sched(snap_a, num_replicas=2, breaker_threshold=2,
+                       breaker_cooldown=1000.0, max_retries=5,
+                       request_deadline=10.0,
+                       fault_plan=_fail_replicas(0, 1))
+        doc = _docs(1, seed=9)[0]
+        rid = sched.submit(doc)
+        sched.tick()                             # both fail once
+        sched.tick()                             # both fail again -> open
+        assert all(h.state == BREAKER_OPEN for h in sched.health)
+        # admission now sheds instead of queueing into a dead system
+        rid2 = sched.submit(doc[:3])
+        assert sched.results[rid2].reason == REJECT_SHED
+        assert sched.stats()["faults"]["shed"] == 1
+        # the queued request ages out at its deadline with a structured
+        # rejection — admitted but never silently dropped
+        sched.clock.sleep(11.0)
+        sched.tick()
+        assert sched.results[rid].status == "rejected"
+        assert sched.results[rid].reason == REJECT_DEADLINE
+        assert sched.dropped() == 0
+
+    def test_retry_budget_exhaustion_rejects(self, snap_a):
+        sched = _sched(snap_a, num_replicas=1, breaker_threshold=10,
+                       max_retries=1, fault_plan=_fail_replicas(0))
+        rid = sched.submit(_docs(1, seed=10)[0])
+        sched.tick()                             # retries = 1 (<= budget)
+        sched.tick()                             # retries = 2 -> reject
+        r = sched.results[rid]
+        assert r.status == "rejected" and r.reason == REJECT_REPLICA
+        assert sched.dropped() == 0
+        assert sched.stats()["faults"]["failed_admitted"] == 1
+
+    def test_replica_slow_charges_latency_not_errors(self, snap_a):
+        sched = _sched(snap_a, num_replicas=1,
+                       fault_plan=FaultPlan.replica_slow(0, 0.5, nth=0))
+        doc = _docs(1, seed=11)[0]
+        rid = sched.submit(doc)
+        out = sched.tick()
+        assert len(out) == 1 and out[0].status == "ok"
+        assert sched.results[rid].latency >= 0.5  # virtual-clock charged
+        assert sched.replica_failures == 0
+        np.testing.assert_array_equal(out[0].theta, _ref(snap_a, doc))
+
+
+# ---------------------------------------------------------------------------
+# Open-loop replay under failures
+# ---------------------------------------------------------------------------
+
+class TestReplayUnderFailures:
+    def test_one_dead_replica_every_admission_answered(self, snap_a):
+        """The acceptance scenario: a replay with one always-failing
+        replica of two answers every admitted query, bitwise equal to
+        the reference fold-in, and the faults block lands in the
+        summary."""
+        sched = _sched(snap_a, num_replicas=2, breaker_cooldown=0.05,
+                       fault_plan=_fail_replicas(0))
+        trace = poisson_trace(40, 200.0, V, seed=2, hot_fraction=0.25)
+        summary = replay_open_loop(sched, trace)
+        assert summary["dropped"] == 0
+        assert summary["served"] == sched.admitted
+        assert summary["faults"]["replica_failures"] > 0
+        for r in sched.ok_responses():
+            canon = None
+            # recover the submitted tokens from the trace by req_id
+            canon = trace[r.req_id].tokens
+            np.testing.assert_array_equal(
+                r.theta, _ref(snap_a, canon),
+                err_msg=f"request {r.req_id} diverged from reference")
+
+    def test_all_replicas_dead_replay_terminates(self, snap_a):
+        """Total outage: the replay must still terminate (idle steps
+        advance the clock, cooldowns expire, retry budgets drain the
+        queue) with a structured outcome for every admission."""
+        sched = _sched(snap_a, num_replicas=2, breaker_threshold=2,
+                       breaker_cooldown=0.02, max_retries=1,
+                       request_deadline=0.5,
+                       fault_plan=_fail_replicas(0, 1))
+        trace = poisson_trace(10, 500.0, V, seed=3)
+        summary = replay_open_loop(sched, trace)
+        assert summary["dropped"] == 0
+        assert len(sched.ok_responses()) == 0
+        reasons = set(sched.stats()["rejections"])
+        assert reasons <= {REJECT_SHED, REJECT_DEADLINE, REJECT_REPLICA}
+        assert sum(sched.stats()["rejections"].values()) == len(trace)
+
+
+# ---------------------------------------------------------------------------
+# Fingerprint-gated hot-swap + stats plumbing
+# ---------------------------------------------------------------------------
+
+class TestValidatedSwap:
+    def test_fingerprint_mismatch_refused_old_keeps_serving(self, snap_a,
+                                                            snap_b):
+        sched = _sched(snap_a)
+        fp0 = sched.fingerprint
+        with pytest.raises(CorruptArtifactError):
+            sched.swap_snapshot(snap_b, expect_fingerprint="0" * 32)
+        assert sched.epoch == 0 and sched.fingerprint == fp0
+        doc = _docs(1, seed=12)[0]
+        sched.submit(doc)
+        out = sched.tick()
+        assert out[0].fingerprint == fp0         # old epoch still serves
+        np.testing.assert_array_equal(out[0].theta, _ref(snap_a, doc))
+
+    def test_matching_fingerprint_swaps(self, snap_a, snap_b):
+        sched = _sched(snap_a)
+        epoch = sched.swap_snapshot(
+            snap_b, expect_fingerprint=snap_b.fingerprint())
+        assert epoch == 1 and sched.fingerprint == snap_b.fingerprint()
+
+    def test_stats_exposes_fault_and_replica_blocks(self, snap_a):
+        st = _sched(snap_a, num_replicas=2).stats()
+        assert set(st["faults"]) == {"retries", "replica_failures",
+                                     "breaker_opens", "shed",
+                                     "deadline_expired", "failed_admitted"}
+        assert len(st["replicas"]) == 2
+        assert st["replicas"][0]["state"] == BREAKER_CLOSED
+
+
+# ---------------------------------------------------------------------------
+# Tolerant snapshot watcher (lda_serve --watch, §15)
+# ---------------------------------------------------------------------------
+
+def _watch_args(**kw):
+    kw.setdefault("snapshot", "")
+    kw.setdefault("watch", "")
+    kw.setdefault("watch_interval", 0.0)
+    return argparse.Namespace(**kw)
+
+
+class TestTolerantWatcher:
+    def test_corrupt_npz_skipped_then_swapped_after_repair(
+            self, tmp_path, snap_a, snap_b):
+        from repro.launch.lda_serve import _make_watcher
+        base = str(tmp_path / "base.npz")
+        snap_a.save(base)
+        watch = tmp_path / "live"
+        watch.mkdir()
+        cand = str(watch / "snap_0001.npz")
+        snap_b.save(cand)
+        integrity.flip_byte(cand, seed=3)        # torn/corrupt export
+        os.utime(base, (1.0, 1.0))
+        os.utime(cand, (2.0, 2.0))
+
+        sched = _sched(load_snapshot(base))
+        on_tick = _make_watcher(_watch_args(snapshot=base,
+                                            watch=str(watch)), sched)
+        on_tick(sched, 0.0)
+        assert sched.epoch == 0                  # skipped, old serving
+        integrity.flip_byte(cand, seed=3)        # XOR twice = repaired
+        on_tick(sched, 1.0)                      # watermark untouched:
+        assert sched.epoch == 1                  # same candidate retried
+        assert sched.fingerprint == snap_b.fingerprint()
+
+    def test_half_copied_npz_skipped(self, tmp_path, snap_a, snap_b):
+        from repro.launch.lda_serve import _make_watcher
+        base = str(tmp_path / "base.npz")
+        snap_a.save(base)
+        watch = tmp_path / "live"
+        watch.mkdir()
+        full = str(tmp_path / "full.npz")
+        snap_b.save(full)
+        cand = str(watch / "snap_0001.npz")
+        with open(full, "rb") as f, open(cand, "wb") as g:
+            g.write(f.read()[:os.path.getsize(full) // 2])  # cp mid-flight
+        os.utime(base, (1.0, 1.0))
+
+        sched = _sched(load_snapshot(base))
+        on_tick = _make_watcher(_watch_args(snapshot=base,
+                                            watch=str(watch)), sched)
+        on_tick(sched, 0.0)
+        assert sched.epoch == 0
+        shutil.copy(full, cand)                  # the cp finishes
+        shutil.copy(integrity.sidecar_path(full),
+                    integrity.sidecar_path(cand))
+        on_tick(sched, 1.0)
+        assert sched.epoch == 1
+
+    def test_sharded_dir_without_meta_is_not_a_candidate(self, tmp_path,
+                                                         snap_a):
+        from repro.launch.lda_serve import _make_watcher
+        watch = tmp_path / "live"
+        partial = watch / "snap_0001"
+        partial.mkdir(parents=True)
+        integrity.save_npy(str(partial / "block_00000.npy"),
+                           np.zeros((4, K), np.int32))
+        # meta.json is written LAST by save_snapshot_sharded — absent
+        # means mid-export, so the dir must not even be considered
+        sched = _sched(snap_a)
+        on_tick = _make_watcher(
+            _watch_args(snapshot_dir=str(tmp_path / "unused"),
+                        watch=str(watch)), sched)
+        on_tick(sched, 0.0)
+        assert sched.epoch == 0 and sched.swaps == 0
