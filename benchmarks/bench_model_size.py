@@ -179,16 +179,17 @@ def measured(seed=0):
 
 _BIG_STREAM_SCRIPT = r"""
 import json, os, resource, sys, tempfile, time
-workdir = sys.argv[1]
-vocab, topics, m, s = 8192, 65536, 2, 8
+workdir, store = sys.argv[1], sys.argv[2]
+vocab, topics, m, s, docs, doc_len = (int(x) for x in sys.argv[3:9])
 from repro.data.stream import ShardedCorpus, write_zipf_stream
 from repro.core.engine.streaming import StreamingLDA
-write_zipf_stream(os.path.join(workdir, "corpus"), num_docs=256,
-                  vocab_size=vocab, doc_len=32, zipf_a=1.1, seed=0,
+write_zipf_stream(os.path.join(workdir, "corpus"), num_docs=docs,
+                  vocab_size=vocab, doc_len=doc_len, zipf_a=1.1, seed=0,
                   docs_per_shard=64)
 sc = ShardedCorpus(os.path.join(workdir, "corpus"))
 lda = StreamingLDA(sc, os.path.join(workdir, "run"), topics, m,
-                   blocks_per_worker=s, sampler_mode="sparse", seed=0)
+                   blocks_per_worker=s, sampler_mode="sparse", seed=0,
+                   store=store)
 iters = []
 for _ in range(2):
     t0 = time.perf_counter()
@@ -201,27 +202,31 @@ peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
 print("BIGSTREAM " + json.dumps({
     "vocab": vocab, "topics": topics, "num_workers": m,
     "blocks_per_worker": s, "num_blocks": rep["num_blocks"],
-    "num_tokens": sc.num_tokens, "sampler": "sparse",
+    "num_tokens": sc.num_tokens, "sampler": "sparse", "store": store,
     "resident_block_bytes": rep["resident_block_bytes"],
     "total_model_bytes": rep["total_model_bytes"],
+    "resident_store_bytes": rep["resident_store_bytes"],
+    "total_store_bytes": rep["total_store_bytes"],
+    "store_occupancy": rep["store_occupancy"],
     "peak_rss_bytes": peak, "iter_seconds": iters,
     "log_likelihood": None}))
 """
 
 
-def big_model_stream():
-    """The K = 65536 point: train + checkpoint + sharded-snapshot export
-    entirely out of core, with the OS-measured peak RSS as the resident
-    ceiling.  Runs in a subprocess so ``ru_maxrss`` reflects this
-    workload alone, not whatever the benchmark driver touched before."""
+def _run_stream(store, vocab, topics, m, s, docs=256, doc_len=32,
+                timeout=3600):
+    """One out-of-core streaming run in a subprocess (so ``ru_maxrss``
+    reflects that workload alone) -> its measured row, or an error."""
     import tempfile
     with tempfile.TemporaryDirectory() as td:
         env = dict(os.environ)
         env["PYTHONPATH"] = os.path.abspath(
             os.path.join(os.path.dirname(__file__), "..", "src"))
         out = subprocess.run(
-            [sys.executable, "-c", _BIG_STREAM_SCRIPT, td], env=env,
-            capture_output=True, text=True, timeout=3600)
+            [sys.executable, "-c", _BIG_STREAM_SCRIPT, td, store,
+             str(vocab), str(topics), str(m), str(s), str(docs),
+             str(doc_len)],
+            env=env, capture_output=True, text=True, timeout=timeout)
         if out.returncode != 0:
             return {"error": out.stderr[-2000:]}
         line = [ln for ln in out.stdout.splitlines()
@@ -231,6 +236,8 @@ def big_model_stream():
     row["total_model_gib"] = round(row["total_model_bytes"] / 2 ** 30, 3)
     row["resident_block_mib"] = round(
         row["resident_block_bytes"] / 2 ** 20, 1)
+    row["resident_store_mib"] = round(
+        row["resident_store_bytes"] / 2 ** 20, 3)
     row["rss_fraction_of_model"] = round(
         row["peak_rss_bytes"] / row["total_model_bytes"], 3)
     # the whole point: the full dense model never became resident
@@ -238,12 +245,57 @@ def big_model_stream():
     return row
 
 
+def big_model_stream():
+    """(e) The K = 65536 point: train + checkpoint + sharded-snapshot
+    export entirely out of core, with the OS-measured peak RSS as the
+    resident ceiling (geometry unchanged since the point was first
+    recorded — the trajectory stays comparable)."""
+    return _run_stream("dense", 8192, 65536, 2, 8)
+
+
+def tail_store_stream():
+    """(f) The CountStore memory claim, measured (DESIGN.md §16).
+
+    Pair point: the K = 65536 streaming run again at S = 2 — resident
+    dense blocks of ``[4096, 65536]`` (1 GiB) plus the sparse prologue's
+    dense-shaped f32 buffers — under ``store="dense"`` vs
+    ``store="tail"``, same seed, same Zipf corpus, bitwise the same
+    chain; the ratio of measured ``ru_maxrss`` ceilings is the headline
+    (target >= 4x).  Beyond-dense point: V x K = 16384 x 262144 — a
+    16 GiB dense model whose S = 8 dense streaming run would hold
+    1 GiB resident blocks and several dense-shaped f32 prologue buffers,
+    past the paper's 8 GiB node budget — runs under the tail store with
+    a flat ceiling."""
+    pair = {}
+    for store in ("dense", "tail"):
+        pair[store] = _run_stream(store, 8192, 65536, 2, 2)
+    out = {"pair_k64k_s2": pair, "ratio_target": 4.0}
+    if all("error" not in r for r in pair.values()):
+        out["rss_ratio_dense_over_tail"] = round(
+            pair["dense"]["peak_rss_bytes"]
+            / pair["tail"]["peak_rss_bytes"], 2)
+        out["ratio_met"] = out["rss_ratio_dense_over_tail"] >= 4.0
+    vocab, topics = 16384, 262144
+    dense_total = vocab * topics * 4
+    beyond = _run_stream("tail", vocab, topics, 2, 8)
+    out["beyond_dense_k256k"] = beyond
+    out["beyond_dense_total_model_gib"] = round(dense_total / 2 ** 30, 2)
+    out["node_ram_gib"] = round(NODE_RAM / 2 ** 30, 1)
+    # why this point was previously out of reach: the DENSE total model
+    # alone is 2x the paper's low-end node, before any f32 working set
+    out["dense_model_exceeds_node_ram"] = dense_total > NODE_RAM
+    if "error" not in beyond:
+        out["tail_fits_node_ram"] = beyond["peak_rss_bytes"] < NODE_RAM
+    return out
+
+
 def run():
     out = {"feasibility_paper_scale": feasibility(),
            "measured_scaled_down": measured(),
            "blocks_per_worker_sweep": pipeline_sweep(),
            "hybrid_dms_sweep": hybrid_sweep(),
-           "big_model_stream_64k": big_model_stream()}
+           "big_model_stream_64k": big_model_stream(),
+           "tail_store_stream": tail_store_stream()}
     save_result("table1_model_size", out)
     big = out["feasibility_paper_scale"][-1]
     m = out["measured_scaled_down"][-1]
@@ -255,6 +307,18 @@ def run():
         f"k64k_model_gib={stream['total_model_gib']};"
         f"k64k_out_of_core={stream['out_of_core']}"
         if "error" not in stream else "k64k=ERROR")
+    ts = out["tail_store_stream"]
+    if "rss_ratio_dense_over_tail" in ts:
+        stream_note += (
+            f";tail_rss_ratio={ts['rss_ratio_dense_over_tail']}"
+            f";tail_ratio_met={ts['ratio_met']}")
+    else:
+        stream_note += ";tail_rss_ratio=ERROR"
+    beyond = ts.get("beyond_dense_k256k", {})
+    stream_note += (
+        f";k256k_tail_peak_rss_gib={beyond['peak_rss_gib']}"
+        f";k256k_dense_model_gib={ts['beyond_dense_total_model_gib']}"
+        if "error" not in beyond else ";k256k=ERROR")
     emit_csv_row("table1_model_size", m["mp"]["seconds"] * 1e6,
                  f"bigram10k_dp_dense_gib={big['dense_dp_per_worker_gib']};"
                  f"mp_dense_gib={big['dense_mp_per_worker_gib']};"

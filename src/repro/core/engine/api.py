@@ -84,7 +84,8 @@ class ModelParallelLDA:
                  data_axis: str = "data",
                  table_lifetime: Optional[str] = None,
                  track_error: bool = True,
-                 sampler_args: Optional[tuple] = None):
+                 sampler_args: Optional[tuple] = None,
+                 store: str = "dense"):
         corpus.validate()
         if blocks_per_worker < 1:
             raise ValueError(
@@ -120,6 +121,11 @@ class ModelParallelLDA:
         self.sampler_args = tuple(sampler_args)
         resolve_sampler(sampler_mode, self.sampler_args)  # fail fast
         self.sampler_mode = sampler_mode
+        from repro.core.engine import countstore
+        countstore.resolve_store(store)                   # fail fast
+        self.store_kind = store
+        self._store_wcap = int(dict(self.sampler_args).get(
+            "wcap", countstore.DEFAULT_TAIL_WCAP))
         if table_lifetime is None:
             # the amortized schedule is the default wherever it applies
             table_lifetime = ("iteration" if table_capable(sampler_mode)
@@ -251,7 +257,7 @@ class ModelParallelLDA:
         """
         k = self.num_topics
         vb = self.resident_block_rows
-        return {
+        rep = {
             "num_workers": self.num_workers,
             "blocks_per_worker": self.blocks_per_worker,
             "data_parallel": self.data_parallel,
@@ -265,7 +271,42 @@ class ModelParallelLDA:
             "replica_model_bytes": self.num_blocks * vb * k * 4,
             "distributed_model_bytes": self.data_parallel
             * self.num_blocks * vb * k * 4,
+            "store": self.store_kind,
         }
+        if self.store_kind != "dense":
+            # at-rest occupancy of the current chain under the selected
+            # store (what a checkpoint of this state occupies)
+            stores = engine_state.ckt_to_stores(
+                np.asarray(self.state.ckt), self.store_kind,
+                self._store_wcap)
+            agg = {"head_rows": 0, "tail_rows": 0, "overflow_rows": 0,
+                   "tail_nnz": 0}
+            total = 0
+            for st in stores:
+                occ = st.occupancy()
+                for key in agg:
+                    agg[key] += occ[key]
+                total += occ["nbytes_resident"]
+            rep["store_occupancy"] = agg
+            rep["total_store_bytes"] = total
+        return rep
+
+    def store_note(self) -> Optional[str]:
+        """Densification note for the CLI config echo (DESIGN.md §16), or
+        ``None`` for the dense default.  The in-memory engine's DEVICE
+        chain is always dense — jit/donation/ppermute need static shapes
+        — so a compressed store here governs the AT-REST artifacts
+        (checkpoints) and is decoded to the dense device state on resume;
+        the resident-memory win lives in the streaming engine."""
+        if self.store_kind == "dense":
+            return None
+        vb, k = self.resident_block_rows, self.num_topics
+        mib = self.num_blocks * vb * k * 4 / 2**20
+        return (f"store={self.store_kind!r}: in-memory engine computes "
+                f"on the dense device chain ({mib:.1f} MiB resident); "
+                f"{self.store_kind!r} encoding applies to checkpoints "
+                "at rest (use the streaming engine + sparse family for "
+                "a compressed resident block)")
 
     # -- stepping ----------------------------------------------------------
     def _uniforms(self) -> jax.Array:
@@ -315,6 +356,7 @@ class ModelParallelLDA:
 
     # -- checkpoint / resume -----------------------------------------------
     CKPT_FORMAT = "mp-lda-ckpt-v1"
+    CKPT_FORMAT_V2 = "mp-lda-ckpt-v2"
 
     def save_checkpoint(self, path: str) -> str:
         """Serialize the full chain state to one ``.npz``: the six
@@ -329,11 +371,21 @@ class ModelParallelLDA:
 
         The write is atomic (temp file + ``os.replace``), so a kill during
         checkpointing leaves either the old file or the new one, never a
-        torn state."""
+        torn state.
+
+        Format versioning (DESIGN.md §16): a dense-store engine writes
+        the bitwise-frozen v1 record (``ckt`` as one dense array); a
+        compressed store writes v2, where the slot queue is encoded as
+        per-slot ``store-v2`` CountStore records.  :meth:`resume` reads
+        both, and either decodes to the identical dense device state —
+        cross-store resume is bitwise."""
         from repro.data.corpus import npz_stem
         s = self.state
         cfg = {
-            "format": self.CKPT_FORMAT,
+            "format": (self.CKPT_FORMAT if self.store_kind == "dense"
+                       else self.CKPT_FORMAT_V2),
+            "store": self.store_kind,
+            "store_wcap": self._store_wcap,
             "num_topics": self.num_topics,
             "num_workers": self.num_workers,
             "blocks_per_worker": self.blocks_per_worker,
@@ -362,9 +414,8 @@ class ModelParallelLDA:
         # writes a temp file, fsyncs, os.replace-s, then stamps <path>.sum
         # — its npz.tmp_written fire point plus mp_ckpt.begin/promoted here
         # bracket every instant the kill-during-checkpoint tests target
-        integrity.save_npz(
-            final,
-            cdk=np.asarray(s.cdk), ckt=np.asarray(s.ckt),
+        arrays = dict(
+            cdk=np.asarray(s.cdk),
             block_id=np.asarray(s.block_id),
             ck_synced=np.asarray(s.ck_synced),
             ck_local=np.asarray(s.ck_local), z=np.asarray(s.z),
@@ -372,6 +423,21 @@ class ModelParallelLDA:
                 json.dumps(cfg).encode(), np.uint8),
             rng_state=np.frombuffer(
                 json.dumps(rng_state).encode(), np.uint8))
+        if self.store_kind == "dense":
+            arrays["ckt"] = np.asarray(s.ckt)
+        else:
+            # v2: the slot queue as per-slot CountStore records
+            stores = engine_state.ckt_to_stores(
+                np.asarray(s.ckt), self.store_kind, self._store_wcap)
+            aux_list = []
+            for i, st in enumerate(stores):
+                aux, arrs = st.pack()
+                aux_list.append(aux)
+                for name, arr in arrs.items():
+                    arrays[f"store{i}_{name}"] = arr
+            arrays["store_aux"] = np.frombuffer(
+                json.dumps(aux_list).encode(), np.uint8)
+        integrity.save_npz(final, **arrays)
         faults.fire("mp_ckpt.promoted", final)
         return final
 
@@ -379,16 +445,26 @@ class ModelParallelLDA:
     def resume(cls, corpus: Corpus, path: str, backend: str = "vmap",
                mesh: Optional[Mesh] = None, axis: str = "w",
                data_axis: str = "data",
-               track_error: bool = True) -> "ModelParallelLDA":
+               track_error: bool = True,
+               store: Optional[str] = None) -> "ModelParallelLDA":
         """Rebuild a trainer from :meth:`save_checkpoint` output.  The
         geometry, sampler, and hyperparameters come from the checkpoint's
         config echo; the backend is the caller's choice (checkpoints are
         backend-agnostic).  The restored run is draw-for-draw identical
         to one that never stopped: the static layout is a pure function
         of ``(corpus, M, S, D)``, the chain state is restored bitwise,
-        and the rng continues from the saved bit-generator state."""
+        and the rng continues from the saved bit-generator state.
+
+        Both checkpoint formats load: v1 stores ``ckt`` dense, v2 as
+        per-slot CountStore records — either decodes to the identical
+        device state (integer round-trip), so resuming a v2 checkpoint
+        continues the v1 chain bitwise and vice versa.  ``store``
+        overrides the checkpoint's store kind for the resumed trainer
+        (``None`` keeps it); the override only changes how FUTURE
+        checkpoints are encoded, never the chain."""
         from repro.data import integrity
         from repro.data.corpus import npz_stem
+        from repro.core.engine import countstore
         stem = npz_stem(path)
         # validated load: a bit-flipped or torn checkpoint raises the
         # integrity taxonomy here instead of np.load's zip errors (or
@@ -398,16 +474,31 @@ class ModelParallelLDA:
             cfg = json.loads(bytes(data["config"]).decode())
             rng_state = json.loads(bytes(data["rng_state"]).decode())
             arrays = {k: np.asarray(data[k]) for k in
-                      ("cdk", "ckt", "block_id", "ck_synced",
+                      ("cdk", "block_id", "ck_synced",
                        "ck_local", "z")}
         except KeyError as e:
             raise ValueError(
                 f"{stem}.npz is not an engine checkpoint: "
                 f"missing {e}") from e
-        if cfg.get("format") != cls.CKPT_FORMAT:
+        fmt = cfg.get("format")
+        if fmt not in (cls.CKPT_FORMAT, cls.CKPT_FORMAT_V2):
             raise ValueError(
-                f"unknown checkpoint format {cfg.get('format')!r} in "
-                f"{stem}.npz; expected {cls.CKPT_FORMAT!r}")
+                f"unknown checkpoint format {fmt!r} in {stem}.npz; "
+                f"expected {cls.CKPT_FORMAT!r} or {cls.CKPT_FORMAT_V2!r}")
+        if fmt == cls.CKPT_FORMAT:
+            arrays["ckt"] = np.asarray(data["ckt"])
+        else:
+            aux_list = json.loads(bytes(data["store_aux"]).decode())
+            keys = list(data.keys())
+            stores = []
+            for i, aux in enumerate(aux_list):
+                pre = f"store{i}_"
+                arrs = {k[len(pre):]: np.asarray(data[k])
+                        for k in keys if k.startswith(pre)}
+                stores.append(countstore.unpack_record(aux, arrs))
+            r = int(cfg["data_parallel"]) * int(cfg["num_workers"])
+            arrays["ckt"] = engine_state.ckt_from_stores(
+                stores, r, int(cfg["blocks_per_worker"]))
         for key in ("num_tokens", "vocab_size", "num_docs"):
             if int(cfg[key]) != int(getattr(corpus, key)):
                 raise ValueError(
@@ -425,7 +516,9 @@ class ModelParallelLDA:
                   table_lifetime=cfg["table_lifetime"],
                   track_error=track_error,
                   sampler_args=tuple(
-                      tuple(p) for p in cfg["sampler_args"]))
+                      tuple(p) for p in cfg["sampler_args"]),
+                  store=(store if store is not None
+                         else cfg.get("store", "dense")))
         lda.state = engine_state.MPState(
             cdk=jnp.asarray(arrays["cdk"]),
             ckt=jnp.asarray(arrays["ckt"]),

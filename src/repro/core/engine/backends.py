@@ -52,6 +52,15 @@ reads was built earlier in the same iteration, so the state pytree
 carries none and checkpoints stay sampler-agnostic.  Both iteration
 functions donate the state buffers (``donate_argnums``), so the big
 count/assignment arrays are updated in place instead of copied.
+
+CountStore boundary (DESIGN.md §16): the device chain both backends run
+keeps every slot of ``MPState.ckt`` DENSE — jit caching, buffer
+donation, and the ``ppermute`` ring all want static shapes — so the
+pluggable store layouts (``engine/countstore.py``) live strictly AT
+REST: checkpoints, streaming block files, sharded snapshots, and the
+serving row loads.  The streaming engine is where a store's layout also
+reaches compute, via the store-native sampler registry
+(``rounds.resolve_store_sampler``).
 """
 from __future__ import annotations
 

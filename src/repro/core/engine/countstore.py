@@ -1,0 +1,508 @@
+"""Pluggable model-count storage: the ``CountStore`` interface (DESIGN.md §16).
+
+Every layer that persists or parks word-topic count blocks — the
+streaming engine's block files, engine checkpoints, sharded serving
+snapshots, the host oracle's KV store — used to hard-code a dense
+``[Vb, K]`` ndarray.  This module is the storage abstraction that breaks
+that assumption: a :class:`CountStore` owns one block's AT-REST
+representation and answers row reads, delta folds, and (de)serialization
+behind a uniform interface, so the resident footprint of a block can
+track its OCCUPANCY instead of ``Vb·K·4`` bytes.
+
+Two registered implementations:
+
+* :class:`DenseStore` — a thin wrapper around today's ``[Vb, K]`` int32
+  array.  The bitwise-frozen default: its file format is the plain
+  ``.npy`` + crc32 sidecar the PR-7 streaming engine already writes, so
+  existing workdirs and sharded snapshots ARE DenseStore files.
+* :class:`TailStore` — the hybrid dense-head/sparse-tail layout of the
+  §12 sparse samplers, made persistent: per word a CSR-style padded lane
+  pair ``(topics [Vb, wcap], counts [Vb, wcap])`` (ascending topic ids,
+  sentinel ``K`` past the row's nnz — byte-compatible with
+  ``sparse_device._extract_lanes`` output on the same row), plus an
+  explicit DENSE-OVERFLOW escape hatch: rows whose nnz exceeds the lanes
+  (``nnz > wcap`` — the §12 head predicate, verbatim) are stored as full
+  dense rows, so no configuration of ``wcap`` can drop counts.  In the
+  long-tail regime nearly all rows fit the lanes (Peacock's
+  concentration observation), so resident bytes per block drop from
+  ``Vb·K·4`` to ``Vb·wcap·8`` + head occupancy.
+
+Integer exactness is the bitwise-equivalence anchor: counts are int32,
+every fold is integer addition (order-free), and the head/tail split is
+a pure function of the stored values — so ``from_dense``/``to_dense``
+round-trips are exact and a chain run through either store is the same
+chain (tests pin engine == oracle, streaming == in-memory, and
+cross-store checkpoint resume draw-for-draw).
+
+Persistence rides the §15 integrity layer: DenseStore keeps the plain
+``<stem>.npy`` artifact; TailStore writes a ``<stem>.npz`` record
+(format ``store-v2``) with a JSON aux header + its lane/overflow arrays.
+Both are atomically published with checksum sidecars, so a torn or
+bit-flipped tail-lane file raises the structured taxonomy at load
+(:mod:`repro.data.integrity`) instead of poisoning a resumed chain.
+:func:`load` dispatches on whichever artifact exists, which is what
+makes cross-store resume and old-workdir compatibility automatic.
+
+This module is numpy-pure (no jax import): the same code is the host
+oracle's numpy mirror and the serving path's row loader.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Tuple, Type
+
+import numpy as np
+
+from repro.data import integrity
+
+STORE_RECORD_FORMAT = "store-v2"
+
+# Head/tail threshold default — numerically equal to
+# sparse_device.DEFAULT_WCAP (asserted by tests); duplicated so this
+# module stays importable without jax.
+DEFAULT_TAIL_WCAP = 32
+
+_STORES: Dict[str, Type["CountStore"]] = {}
+
+
+def register_store(name: str):
+    """Decorator registering a :class:`CountStore` subclass under ``name``."""
+    def deco(cls: Type["CountStore"]):
+        cls.kind = name
+        _STORES[name] = cls
+        return cls
+    return deco
+
+
+def resolve_store(name: str) -> Type["CountStore"]:
+    try:
+        return _STORES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown store kind {name!r}; "
+            f"registered: {sorted(_STORES)}") from None
+
+
+def available_stores() -> List[str]:
+    return sorted(_STORES)
+
+
+class CountStore:
+    """One ``[Vb, K]`` count block behind a storage-agnostic interface.
+
+    Subclasses implement the representation; the CHAIN-facing contract
+    is integer exactness — ``to_dense(from_dense(x)) == x`` bitwise and
+    every delta fold is exact int32 addition."""
+
+    kind: str = ""
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def empty(cls, vb: int, k: int, wcap: int = DEFAULT_TAIL_WCAP) \
+            -> "CountStore":
+        raise NotImplementedError
+
+    @classmethod
+    def from_dense(cls, dense: np.ndarray,
+                   wcap: int = DEFAULT_TAIL_WCAP) -> "CountStore":
+        raise NotImplementedError
+
+    # -- views -------------------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, int]:
+        raise NotImplementedError
+
+    def to_dense(self) -> np.ndarray:
+        """The full ``[Vb, K]`` int32 block (the explicit densify)."""
+        raise NotImplementedError
+
+    def rows(self, idx) -> np.ndarray:
+        """Dense ``[len(idx), K]`` view of selected rows WITHOUT
+        materializing the whole block — the row-restricted serving
+        primitive."""
+        raise NotImplementedError
+
+    def col_sums(self) -> np.ndarray:
+        """Per-topic totals ``[K]`` int64 (exact integer sums)."""
+        raise NotImplementedError
+
+    # -- mutation ----------------------------------------------------------
+    def apply_coo(self, rows, topics, vals) -> None:
+        """Fold sparse integer deltas ``counts[rows, topics] += vals``
+        (duplicates accumulate).  Raises on count underflow — a negative
+        count means the caller's delta stream is corrupt."""
+        raise NotImplementedError
+
+    def apply_token_delta(self, rows, z_old, z_new) -> None:
+        """Fold one round's token moves: ``-1`` at ``(rows, z_old)`` and
+        ``+1`` at ``(rows, z_new)`` — the store-native form of the
+        engine's ``new_block = frozen + Σ(out − frozen)`` commit (exact
+        integer arithmetic, so the two are equal)."""
+        rows = np.asarray(rows, np.int64).ravel()
+        z_old = np.asarray(z_old, np.int64).ravel()
+        z_new = np.asarray(z_new, np.int64).ravel()
+        self.apply_coo(np.concatenate([rows, rows]),
+                       np.concatenate([z_old, z_new]),
+                       np.concatenate([np.full(rows.size, -1, np.int64),
+                                       np.ones(rows.size, np.int64)]))
+
+    def add_delta(self, delta: np.ndarray) -> None:
+        """Fold a dense ``[Vb, K]`` integer delta (sparse-scattered)."""
+        delta = np.asarray(delta)
+        rr, tt = np.nonzero(delta)
+        self.apply_coo(rr, tt, delta[rr, tt])
+
+    # -- accounting --------------------------------------------------------
+    def nbytes_resident(self) -> int:
+        """Actual bytes this block occupies in memory (the quantity the
+        streaming memory report and the part-(f) bench record)."""
+        raise NotImplementedError
+
+    def occupancy(self) -> dict:
+        """Head/tail occupancy + overflow-row counters."""
+        raise NotImplementedError
+
+    # -- wire / persistence ------------------------------------------------
+    def pack(self) -> Tuple[dict, Dict[str, np.ndarray]]:
+        """``(aux, arrays)``: a JSON-able header plus the store's flat
+        ndarray components — the wire format a ring ppermute (or a
+        checkpoint record) moves; :meth:`unpack` inverts it exactly."""
+        raise NotImplementedError
+
+    @classmethod
+    def unpack(cls, aux: dict, arrays: Dict[str, np.ndarray]) \
+            -> "CountStore":
+        raise NotImplementedError
+
+    def save(self, stem: str) -> str:
+        """Publish this block at ``stem`` (extension chosen by the
+        implementation) atomically with a §15 checksum sidecar, removing
+        any other-kind artifact at the same stem (cross-store
+        migration leaves exactly one representation)."""
+        aux, arrays = self.pack()
+        aux = dict(aux)
+        aux["format"] = STORE_RECORD_FORMAT
+        path = stem + ".npz"
+        integrity.save_npz(
+            path,
+            store_json=np.frombuffer(json.dumps(aux).encode(), np.uint8),
+            **arrays)
+        _remove_artifact(stem + ".npy")
+        return path
+
+
+def _remove_artifact(path: str) -> None:
+    for p in (path, integrity.sidecar_path(path)):
+        if os.path.exists(p):
+            os.remove(p)
+
+
+def unpack_record(aux: dict, arrays: Dict[str, np.ndarray]) -> CountStore:
+    """Rebuild a store from a packed ``(aux, arrays)`` record (any
+    registered kind — the checkpoint/snapshot decode path)."""
+    return resolve_store(aux["kind"]).unpack(aux, arrays)
+
+
+def exists(stem: str) -> bool:
+    return os.path.exists(stem + ".npy") or os.path.exists(stem + ".npz")
+
+
+def load(stem: str) -> CountStore:
+    """Load the block stored at ``stem``, dispatching on the artifact
+    present: ``<stem>.npy`` is a DenseStore (the PR-7 on-disk format,
+    loadable unchanged), ``<stem>.npz`` a ``store-v2`` record of any
+    registered kind.  Integrity violations raise the §15 taxonomy."""
+    npy = stem + ".npy"
+    if os.path.exists(npy):
+        return DenseStore(integrity.load_npy(npy))
+    npz = stem + ".npz"
+    if os.path.exists(npz):
+        data = integrity.load_npz(npz)
+        try:
+            aux = json.loads(bytes(data["store_json"]).decode())
+        except KeyError:
+            raise integrity.CorruptArtifactError(
+                npz, f"not a {STORE_RECORD_FORMAT} record "
+                "(missing store_json header)") from None
+        if aux.get("format") != STORE_RECORD_FORMAT:
+            raise ValueError(
+                f"{npz}: unknown store record format "
+                f"{aux.get('format')!r}; expected {STORE_RECORD_FORMAT!r}")
+        arrays = {k: np.asarray(v) for k, v in data.items()
+                  if k != "store_json"}
+        return unpack_record(aux, arrays)
+    raise integrity.MissingArtifactError(
+        stem, "no count-store artifact (.npy/.npz)")
+
+
+# ---------------------------------------------------------------------------
+# DenseStore — the bitwise-frozen default
+# ---------------------------------------------------------------------------
+
+@register_store("dense")
+class DenseStore(CountStore):
+    """Thin wrapper around the dense ``[Vb, K]`` int32 block."""
+
+    def __init__(self, arr: np.ndarray):
+        self.arr = np.asarray(arr, np.int32)
+        if self.arr.ndim != 2:
+            raise ValueError(f"block must be [Vb, K], got {self.arr.shape}")
+
+    @classmethod
+    def empty(cls, vb, k, wcap=DEFAULT_TAIL_WCAP):
+        return cls(np.zeros((vb, k), np.int32))
+
+    @classmethod
+    def from_dense(cls, dense, wcap=DEFAULT_TAIL_WCAP):
+        return cls(np.array(dense, np.int32, copy=True))
+
+    @property
+    def shape(self):
+        return self.arr.shape
+
+    def to_dense(self):
+        return self.arr
+
+    def rows(self, idx):
+        return self.arr[np.atleast_1d(np.asarray(idx, np.int64))]
+
+    def col_sums(self):
+        return self.arr.sum(axis=0, dtype=np.int64)
+
+    def apply_coo(self, rows, topics, vals):
+        rows = np.asarray(rows, np.int64).ravel()
+        topics = np.asarray(topics, np.int64).ravel()
+        vals = np.asarray(vals, np.int64).ravel()
+        np.add.at(self.arr, (rows, topics), vals.astype(np.int32))
+        if vals.size and (self.arr[rows, topics] < 0).any():
+            raise ValueError("count underflow in DenseStore.apply_coo")
+
+    def nbytes_resident(self):
+        return int(self.arr.nbytes)
+
+    def occupancy(self):
+        vb, k = self.arr.shape
+        return {"kind": self.kind, "rows": vb,
+                "head_rows": vb, "tail_rows": 0, "overflow_rows": 0,
+                "tail_nnz": int((self.arr > 0).sum()),
+                "nbytes_resident": self.nbytes_resident(),
+                "dense_bytes": vb * k * 4}
+
+    def pack(self):
+        vb, k = self.arr.shape
+        return {"kind": self.kind, "vb": vb, "k": k}, {"dense": self.arr}
+
+    @classmethod
+    def unpack(cls, aux, arrays):
+        return cls(arrays["dense"])
+
+    def save(self, stem):
+        # the plain-.npy artifact keeps dense block files byte-identical
+        # to the pre-store streaming format (old workdirs stay loadable,
+        # new dense runs stay byte-comparable)
+        path = stem + ".npy"
+        integrity.save_npy(path, self.arr)
+        _remove_artifact(stem + ".npz")
+        return path
+
+
+# ---------------------------------------------------------------------------
+# TailStore — dense head / sparse tail with an overflow escape hatch
+# ---------------------------------------------------------------------------
+
+@register_store("tail")
+class TailStore(CountStore):
+    """Hybrid lane-layout block: ``wcap`` CSR-padded lanes per row, dense
+    overflow rows for ``nnz > wcap`` (the §12 head predicate).
+
+    Internal state:
+
+    * ``tail_topics``/``tail_counts`` [Vb, wcap] int32 — ascending topic
+      ids (sentinel ``K``) and their counts, for TAIL rows; head rows
+      keep all-sentinel lanes (no stale shadow data — ``col_sums`` and
+      the device operand build rely on it).
+    * ``_over`` dict ``row -> [K] int32`` — the overflow escape hatch.
+    """
+
+    def __init__(self, shape: Tuple[int, int], wcap: int,
+                 tail_topics: np.ndarray, tail_counts: np.ndarray,
+                 over: Dict[int, np.ndarray]):
+        self._shape = (int(shape[0]), int(shape[1]))
+        self.wcap = int(wcap)
+        self.tail_topics = np.asarray(tail_topics, np.int32)
+        self.tail_counts = np.asarray(tail_counts, np.int32)
+        self._over = {int(r): np.asarray(v, np.int32)
+                      for r, v in over.items()}
+
+    @classmethod
+    def empty(cls, vb, k, wcap=DEFAULT_TAIL_WCAP):
+        wcap = max(1, min(int(k), int(wcap)))
+        return cls((vb, k), wcap,
+                   np.full((vb, wcap), k, np.int32),
+                   np.zeros((vb, wcap), np.int32), {})
+
+    @classmethod
+    def from_dense(cls, dense, wcap=DEFAULT_TAIL_WCAP):
+        dense = np.asarray(dense, np.int32)
+        vb, k = dense.shape
+        st = cls.empty(vb, k, wcap)
+        if vb:
+            chunk = st._row_chunk()
+            for c0 in range(0, vb, chunk):
+                idx = np.arange(c0, min(c0 + chunk, vb), dtype=np.int64)
+                st._set_rows(idx, dense[c0:c0 + chunk])
+        return st
+
+    def _row_chunk(self) -> int:
+        # bound transient dense [chunk, K] buffers to ~16 MiB
+        return max(1, (1 << 22) // max(1, self._shape[1]))
+
+    @property
+    def shape(self):
+        return self._shape
+
+    @property
+    def over_rows(self) -> np.ndarray:
+        return np.array(sorted(self._over), np.int64)
+
+    # -- row classification (the single writer) ----------------------------
+    def _set_rows(self, idx: np.ndarray, dense: np.ndarray) -> None:
+        """Install dense row values for ``idx``, re-deciding head/tail
+        per row: ``nnz > wcap`` rows go dense into the overflow dict
+        (lanes cleared to sentinel), the rest get ascending-topic lanes
+        — the exact classification the §12 sampler derives from frozen
+        counts, so store-native sweeps see the same split."""
+        idx = np.asarray(idx, np.int64)
+        dense = np.asarray(dense, np.int32)
+        n = idx.size
+        k, wcap = self._shape[1], self.wcap
+        nnz = (dense > 0).sum(axis=1)
+        head = nnz > wcap
+        lanes_t = np.full((n, wcap), k, np.int32)
+        lanes_c = np.zeros((n, wcap), np.int32)
+        tail_nnz = np.where(head, 0, nnz)
+        if tail_nnz.any():
+            rr, tt = np.nonzero(np.where(head[:, None], 0, dense))
+            starts = np.zeros(n + 1, np.int64)
+            np.cumsum(tail_nnz, out=starts[1:])
+            pos = np.arange(rr.size) - starts[rr]
+            lanes_t[rr, pos] = tt
+            lanes_c[rr, pos] = dense[rr, tt]
+        self.tail_topics[idx] = lanes_t
+        self.tail_counts[idx] = lanes_c
+        for i, r in enumerate(idx):
+            r = int(r)
+            if head[i]:
+                self._over[r] = dense[i].copy()
+            else:
+                self._over.pop(r, None)
+
+    # -- views -------------------------------------------------------------
+    def rows(self, idx):
+        idx = np.atleast_1d(np.asarray(idx, np.int64))
+        n, k = idx.size, self._shape[1]
+        out = np.zeros((n, k), np.int32)
+        tt = self.tail_topics[idx]
+        val = tt < k
+        ri = np.broadcast_to(np.arange(n)[:, None], tt.shape)
+        out[ri[val], tt[val]] = self.tail_counts[idx][val]
+        for i, r in enumerate(idx):
+            o = self._over.get(int(r))
+            if o is not None:
+                out[i] = o
+        return out
+
+    def to_dense(self):
+        vb = self._shape[0]
+        return self.rows(np.arange(vb, dtype=np.int64))
+
+    def col_sums(self):
+        k = self._shape[1]
+        out = np.zeros(k, np.int64)
+        val = self.tail_topics < k
+        np.add.at(out, self.tail_topics[val].astype(np.int64),
+                  self.tail_counts[val].astype(np.int64))
+        for o in self._over.values():
+            out += o.astype(np.int64)
+        return out
+
+    # -- mutation ----------------------------------------------------------
+    def apply_coo(self, rows, topics, vals):
+        rows = np.asarray(rows, np.int64).ravel()
+        topics = np.asarray(topics, np.int64).ravel()
+        vals = np.asarray(vals, np.int64).ravel()
+        if not rows.size:
+            return
+        order = np.argsort(rows, kind="stable")
+        rs, ts, vs = rows[order], topics[order], vals[order]
+        touched = np.unique(rs)
+        chunk = self._row_chunk()
+        for c0 in range(0, touched.size, chunk):
+            cr = touched[c0:c0 + chunk]
+            lo = np.searchsorted(rs, cr[0], "left")
+            hi = np.searchsorted(rs, cr[-1], "right")
+            dense_c = self.rows(cr)
+            local = np.searchsorted(cr, rs[lo:hi])
+            np.add.at(dense_c, (local, ts[lo:hi]), vs[lo:hi].astype(np.int32))
+            if (dense_c < 0).any():
+                raise ValueError("count underflow in TailStore.apply_coo")
+            self._set_rows(cr, dense_c)
+
+    # -- accounting --------------------------------------------------------
+    def nbytes_resident(self):
+        return int(self.tail_topics.nbytes + self.tail_counts.nbytes
+                   + sum(o.nbytes for o in self._over.values())
+                   + 8 * len(self._over))
+
+    def occupancy(self):
+        vb, k = self._shape
+        h = len(self._over)
+        return {"kind": self.kind, "rows": vb,
+                "head_rows": h, "tail_rows": vb - h, "overflow_rows": h,
+                "tail_nnz": int((self.tail_topics < k).sum()),
+                "nbytes_resident": self.nbytes_resident(),
+                "dense_bytes": vb * k * 4}
+
+    # -- wire / persistence ------------------------------------------------
+    def pack(self):
+        vb, k = self._shape
+        orr = self.over_rows
+        over = (np.stack([self._over[int(r)] for r in orr])
+                if orr.size else np.zeros((0, k), np.int32))
+        return ({"kind": self.kind, "vb": vb, "k": k, "wcap": self.wcap},
+                {"tail_topics": self.tail_topics,
+                 "tail_counts": self.tail_counts,
+                 "over_rows": orr, "over": over})
+
+    @classmethod
+    def unpack(cls, aux, arrays):
+        over = {int(r): arrays["over"][i]
+                for i, r in enumerate(np.asarray(arrays["over_rows"]))}
+        return cls((aux["vb"], aux["k"]), aux["wcap"],
+                   arrays["tail_topics"], arrays["tail_counts"], over)
+
+    # -- device operand build (store-native sampling) ----------------------
+    def device_operands(self, hcap: int | None = None) -> Dict[str, np.ndarray]:
+        """Host-side operand build for the store-native sparse sweep
+        (``sparse_device.sweep_block_sparse_tail``): the lane pair as-is,
+        the overflow rows stacked into ``over_pad [Hcap, K]`` (Hcap a
+        power of two ≥ the head count, so jit retraces stay logarithmic
+        in head growth), and ``row_map [Vb]`` with 0 for tail rows and
+        ``1 + i`` pointing at overflow slot ``i`` — the indirection that
+        lets every tail row share ONE dense-segment cumsum row."""
+        vb, k = self._shape
+        orr = self.over_rows
+        h = orr.size
+        if hcap is None:
+            hcap = 1 << max(0, int(h - 1).bit_length()) if h > 1 else 1
+        if hcap < h:
+            raise ValueError(f"hcap {hcap} < head rows {h}")
+        over_pad = np.zeros((hcap, k), np.int32)
+        for i, r in enumerate(orr):
+            over_pad[i] = self._over[int(r)]
+        row_map = np.zeros(vb, np.int32)
+        row_map[orr] = np.arange(1, h + 1, dtype=np.int32)
+        return {"tail_topics": self.tail_topics,
+                "tail_counts": self.tail_counts,
+                "over_pad": over_pad, "row_map": row_map}

@@ -137,6 +137,62 @@ def _sparse_pallas_sampler(dcap: int = 64, wcap: int = None):
 
 
 # ---------------------------------------------------------------------------
+# Store-native samplers (pluggable CountStore layouts, DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+# fn(cdk, *store_device_operands, ck, doc, woff, z, mask, u, alpha, beta,
+#    vbeta) -> (cdk, ck, z_new) — the word-block fold happens in the
+# store (exact integer token deltas), not on device.
+_STORE_SAMPLERS: Dict[tuple, Callable[[], Callable]] = {}
+
+
+def register_store_sampler(mode: str, store_kind: str):
+    """Decorator registering a STORE-NATIVE sampler factory for the
+    ``(sampler mode, store kind)`` pair: a form that consumes the store's
+    device operands directly instead of a densified ``[Vb, K]`` block."""
+    def deco(factory: Callable[[], Callable]):
+        _STORE_SAMPLERS[(mode, store_kind)] = factory
+        return factory
+    return deco
+
+
+def resolve_store_sampler(mode: str, store_kind: str,
+                          sampler_args: tuple = ()):
+    """The store-native sampler for ``(mode, store_kind)``, or ``None``
+    when the pair has no native form — the caller then goes through the
+    store's explicit ``to_dense`` escape hatch (and should SAY so in its
+    config echo: densification is never silent, DESIGN.md §16)."""
+    factory = _STORE_SAMPLERS.get((mode, store_kind))
+    if factory is None:
+        return None
+    return factory(**dict(sampler_args)) if sampler_args else factory()
+
+
+def store_native(mode: str, store_kind: str) -> bool:
+    """Whether ``mode`` consumes ``store_kind``'s layout with zero
+    conversion (dense stores are native to every sampler by definition)."""
+    return store_kind == "dense" or (mode, store_kind) in _STORE_SAMPLERS
+
+
+@register_store_sampler("sparse", "tail")
+@register_store_sampler("sparse_pallas", "tail")
+def _sparse_tail_sampler(dcap: int = 64, wcap: int = None):
+    # The §12 sparse family reads the TailStore's lane layout natively:
+    # the store IS the sampler's working format, so no [Vb, K] buffer
+    # exists anywhere on the path.  wcap is accepted for signature parity
+    # with the dense factory but is implied by the lane shape — the
+    # engine guarantees the store was built with the same wcap.
+    from repro.core.sparse_device import sweep_block_sparse_tail
+
+    def f(cdk, tail_topics, tail_counts, over_pad, row_map,
+          ck, d, t, z, mk, u, alpha, beta, vbeta):
+        return sweep_block_sparse_tail(
+            cdk, tail_topics, tail_counts, over_pad, row_map, ck,
+            d, t, z, mk, u, alpha, beta, vbeta, dcap=dcap)
+    return f
+
+
+# ---------------------------------------------------------------------------
 # Table-aware samplers (iteration table lifetime, DESIGN.md §10)
 # ---------------------------------------------------------------------------
 

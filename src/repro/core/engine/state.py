@@ -248,3 +248,35 @@ def gather_assignments(layout: EngineLayout, state: MPState) -> np.ndarray:
         z_local = scatter_assignments(idx, zs[w], shard.token_id.shape[0])
         z[shard.token_id] = z_local
     return z
+
+
+# ---------------------------------------------------------------------------
+# CountStore bridging (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+# The device chain keeps MPState.ckt dense — jit/donation/ppermute need
+# static shapes — so the CountStore boundary for the in-memory engine is
+# AT REST: these helpers encode/decode the [R, S, Vb, K] slot queue as a
+# flat list of per-slot store records for checkpoints (and any future
+# host-side parking of non-resident slots).
+
+def ckt_to_stores(ckt: np.ndarray, kind: str, wcap: int) -> list:
+    """Encode every ``(r, s)`` slot of the queue as a CountStore of
+    ``kind`` (exact integer round-trip)."""
+    from repro.core.engine import countstore
+    r, s, vb, k = ckt.shape
+    cls = countstore.resolve_store(kind)
+    return [cls.from_dense(ckt[i, j], wcap=wcap)
+            for i in range(r) for j in range(s)]
+
+
+def ckt_from_stores(stores: list, r: int, s: int) -> np.ndarray:
+    """Inverse of :func:`ckt_to_stores`: rebuild the dense slot queue."""
+    if len(stores) != r * s:
+        raise ValueError(
+            f"expected {r * s} store records, got {len(stores)}")
+    vb, k = stores[0].shape
+    out = np.zeros((r, s, vb, k), np.int32)
+    for i in range(r):
+        for j in range(s):
+            out[i, j] = stores[i * s + j].to_dense()
+    return out

@@ -7,10 +7,12 @@ state out of core:
 * the corpus stays in its sharded on-disk format (`data/stream.py`) and
   is demultiplexed once into per-(grid row, block) token files under a
   working directory — training never holds the full token stream;
-* the model blocks live in a disk-backed block store (one ``.npy`` file
-  per ``[Vb, K]`` block — the paper's key-value store made literal), and
-  at most ONE block (plus its traveling table, for the MH family) is in
-  memory at any time.
+* the model blocks live in a disk-backed block store (one
+  :class:`~repro.core.engine.countstore.CountStore` record per
+  ``[Vb, K]`` block — a plain ``.npy`` for the dense store, a
+  ``store-v2`` ``.npz`` for the tail store; DESIGN.md §16 — the paper's
+  key-value store made literal), and at most ONE block (plus its
+  traveling table, for the MH family) is in memory at any time.
 
 Peak training memory is therefore bounded by the resident ``[Vb, K]``
 block and one in-flight row/block token group, independent of corpus
@@ -52,6 +54,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core import faults, schedule as sched
+from repro.core.engine import countstore
 from repro.core.invindex import build_inverted_index
 from repro.data import integrity
 from repro.data.stream import ShardedCorpus
@@ -101,7 +104,8 @@ class StreamingLDA:
                  sampler_mode: str = "scan", blocks_per_worker: int = 1,
                  data_parallel: int = 1,
                  table_lifetime: Optional[str] = None,
-                 sampler_args: Optional[tuple] = None):
+                 sampler_args: Optional[tuple] = None,
+                 store: str = "dense"):
         from repro.core.engine.rounds import table_capable
         if isinstance(corpus, str):
             corpus = ShardedCorpus(corpus)
@@ -145,6 +149,13 @@ class StreamingLDA:
             else:
                 sampler_args = ()
         self.sampler_args = tuple(sampler_args)
+        countstore.resolve_store(store)     # validate the kind early
+        self.store_kind = store
+        # head/tail split MUST match the sampler's (it is derived from
+        # the same frozen counts); samplers without a wcap get the
+        # module default, under which their store still round-trips
+        self._store_wcap = int(dict(self.sampler_args).get(
+            "wcap", countstore.DEFAULT_TAIL_WCAP))
         self._resolve_sampler()
         self.num_blocks = self.num_workers * self.blocks_per_worker
         self.num_shards = self.data_parallel * self.num_workers
@@ -163,8 +174,25 @@ class StreamingLDA:
     def _p(self, *parts: str) -> str:
         return os.path.join(self.workdir, *parts)
 
-    def _block_path(self, blk: int, root: str = "state") -> str:
-        return self._p(root, "blocks", f"block_{blk:05d}.npy")
+    def _block_stem(self, blk: int, root: str = "state") -> str:
+        # extensionless: the CountStore layer owns the artifact format
+        # (.npy dense / .npz store-v2 record) and `countstore.load`
+        # dispatches on whichever exists, so old dense workdirs and
+        # cross-store resumes need no migration step
+        return self._p(root, "blocks", f"block_{blk:05d}")
+
+    def _load_block_store(self, blk: int,
+                          root: str = "state") -> countstore.CountStore:
+        return countstore.load(self._block_stem(blk, root))
+
+    def _make_store(self, dense: np.ndarray) -> countstore.CountStore:
+        return countstore.resolve_store(self.store_kind).from_dense(
+            dense, wcap=self._store_wcap)
+
+    def _empty_store(self) -> countstore.CountStore:
+        return countstore.resolve_store(self.store_kind).empty(
+            self.partition.block_size, self.num_topics,
+            wcap=self._store_wcap)
 
     def _lay_path(self, g: int, b: int) -> str:
         return self._p("static", "rows", f"row{g:04d}_b{b:04d}.npz")
@@ -178,11 +206,34 @@ class StreamingLDA:
     # -- construction ------------------------------------------------------
     def _resolve_sampler(self) -> None:
         from repro.core.engine.rounds import (resolve_sampler,
+                                              resolve_store_sampler,
                                               resolve_table_sampler)
         self._sampler_fn = (resolve_table_sampler(self.sampler_mode)
                             if self.table_lifetime == "iteration"
                             else resolve_sampler(self.sampler_mode,
                                                  self.sampler_args))
+        # store-native form (zero-conversion lane path) when one exists
+        # for this (sampler, store) pair; otherwise step() densifies the
+        # resident block explicitly — surfaced by store_note()
+        self._store_sampler_fn = None
+        if self.store_kind != "dense" and self.table_lifetime == "round":
+            self._store_sampler_fn = resolve_store_sampler(
+                self.sampler_mode, self.store_kind, self.sampler_args)
+
+    def store_note(self) -> Optional[str]:
+        """One-line densification warning for the CLI config echo, or
+        ``None`` when the store never converts (dense store, or a
+        store-native sampler).  Satellite of DESIGN.md §16: densifying
+        a compressed store is allowed but NEVER silent."""
+        if self.store_kind == "dense" or self._store_sampler_fn is not None:
+            return None
+        vb, k = self.partition.block_size, self.num_topics
+        mib = vb * k * 4 / 2**20
+        return (f"store={self.store_kind!r}: sampler "
+                f"{self.sampler_mode!r} has no store-native form — each "
+                f"resident block densifies to [{vb}, {k}] "
+                f"({mib:.1f} MiB) per round (zero-conversion samplers: "
+                "sparse, sparse_pallas)")
 
     def _row_docs(self, g: int) -> np.ndarray:
         """Round-robin doc assignment — identical to `data/sharding.py`:
@@ -264,13 +315,17 @@ class StreamingLDA:
                                    woff=idx.word_off[b], mask=msk,
                                    tid=glob_tid)
                 _save_npy(self._z_path(g, b), zlay)
-                # scatter this (row, block) group's initial counts into the
-                # block store — one block in memory at a time
-                bp = self._block_path(b)
-                blk_arr = (_load_npy(bp) if os.path.exists(bp) else
-                           np.zeros((part.block_size, k), np.int32))
-                np.add.at(blk_arr, (idx.word_off[b][msk], zlay[msk]), 1)
-                _save_npy(bp, blk_arr)
+                # scatter this (row, block) group's initial counts into
+                # the block store — one block (at its store's occupancy,
+                # not [Vb, K]) in memory at a time
+                stem = self._block_stem(b)
+                blk_store = (countstore.load(stem)
+                             if countstore.exists(stem)
+                             else self._empty_store())
+                woff_b = idx.word_off[b][msk]
+                blk_store.apply_coo(woff_b, zlay[msk],
+                                    np.ones(woff_b.shape[0], np.int64))
+                blk_store.save(stem)
         for shard_entry in range(corpus.num_shards):
             z0p = self._p("static", f"z0_shard{shard_entry:05d}.npy")
             os.remove(z0p)
@@ -278,7 +333,7 @@ class StreamingLDA:
 
         ck = np.zeros(k, np.int64)
         for b in range(b_):
-            ck += _load_npy(self._block_path(b)).sum(axis=0, dtype=np.int64)
+            ck += self._load_block_store(b).col_sums()
         _save_npy(self._p("state", "ck.npy"), ck)
         self.iteration_count = 0
         self._write_run_json()
@@ -303,6 +358,8 @@ class StreamingLDA:
             "num_tokens": self.num_tokens,
             "max_doc_len": self.max_doc_len,
             "capacity": self.capacity,
+            "store": self.store_kind,
+            "store_wcap": self._store_wcap,
         }
         integrity.atomic_write_json(self._p(RUN_JSON), cfg, indent=1,
                                     checksum=True)
@@ -340,13 +397,21 @@ class StreamingLDA:
         return final
 
     @classmethod
-    def resume(cls, workdir: str) -> "StreamingLDA":
+    def resume(cls, workdir: str,
+               store: Optional[str] = None) -> "StreamingLDA":
         """Reopen a run from its last :meth:`save_checkpoint`.  Restores
         ``ckpt/`` over ``state/`` (a kill mid-iteration leaves ``state/``
         partially advanced — the checkpoint is the consistent truth),
         then reloads config, rng bit-generator state, and iteration
         count; subsequent draws are bit-identical to a run that never
-        stopped."""
+        stopped.
+
+        ``store`` optionally MIGRATES the run to a different count-store
+        kind: block files are re-encoded (exact integer round-trip, so
+        the continued chain stays bitwise identical — pinned by
+        tests/test_countstore.py) and run.json is rewritten.  Old
+        pre-store workdirs carry no ``store`` field and default to
+        ``dense``, which is exactly what their ``.npy`` blocks are."""
         with open(os.path.join(workdir, RUN_JSON)) as f:
             cfg = json.load(f)
         if cfg.get("format") != "streaming-lda-v1":
@@ -389,6 +454,10 @@ class StreamingLDA:
         self.vbeta = float(self.beta * self.vocab_size)
         self.sampler_args = tuple(
             tuple(p) for p in cfg.get("sampler_args", []))
+        self.store_kind = cfg.get("store", "dense")
+        self._store_wcap = int(cfg.get(
+            "store_wcap", dict(self.sampler_args).get(
+                "wcap", countstore.DEFAULT_TAIL_WCAP)))
         self._resolve_sampler()
         self.num_blocks = self.num_workers * self.blocks_per_worker
         self.num_shards = self.data_parallel * self.num_workers
@@ -404,7 +473,24 @@ class StreamingLDA:
         self.iteration_count = int(prog["iteration_count"])
         self._rng = np.random.default_rng(self.seed)
         self._rng.bit_generator.state = prog["rng_state"]
+        if store is not None and store != self.store_kind:
+            self.set_store(store)
         return self
+
+    def set_store(self, store: str) -> None:
+        """Migrate the live run's blocks to count-store kind ``store``
+        (the ``to_dense`` round-trip — exact, so the chain continues
+        bitwise) and make it the kind for all subsequent writes."""
+        countstore.resolve_store(store)
+        if store == self.store_kind:
+            return
+        self.store_kind = store
+        self._resolve_sampler()
+        for b in range(self.num_blocks):
+            st = self._load_block_store(b)
+            if st.kind != store:
+                self._make_store(st.to_dense()).save(self._block_stem(b))
+        self._write_run_json()
 
     # -- stepping ----------------------------------------------------------
     def step(self) -> None:
@@ -449,9 +535,51 @@ class StreamingLDA:
             # regrouping cannot change any draw
             for m in range(m_):
                 blk_id = sched.block_for(m, r, m_, s_)
-                blk_frozen = _load_npy(self._block_path(blk_id))
+                blk_store = self._load_block_store(blk_id)
+                if self._store_sampler_fn is not None:
+                    # STORE-NATIVE path (DESIGN.md §16): the sampler
+                    # consumes the lane layout directly — no [Vb, K]
+                    # buffer exists; the block fold is the store's exact
+                    # integer token-delta apply at the round boundary
+                    dev = blk_store.device_operands()
+                    dev_j = tuple(jnp.asarray(dev[n]) for n in
+                                  ("tail_topics", "tail_counts",
+                                   "over_pad", "row_map"))
+                    tok_w, tok_old, tok_new = [], [], []
+                    for d in range(d_):
+                        g = d * m_ + m
+                        lay = _load_npz(self._lay_path(g, blk_id))
+                        z = _load_npy(self._z_path(g, blk_id))
+                        cdk = _load_npy(self._cdk_path(g))
+                        out = self._store_sampler_fn(
+                            jnp.asarray(cdk), *dev_j,
+                            jnp.asarray(ck_frozen),
+                            jnp.asarray(lay["doc"]),
+                            jnp.asarray(lay["woff"]), jnp.asarray(z),
+                            jnp.asarray(lay["mask"]),
+                            jnp.asarray(u_r[g]), alpha_j, beta_j,
+                            vbeta_j)
+                        z_new = np.asarray(out[2])
+                        _save_npy(self._cdk_path(g), np.asarray(out[0]))
+                        _save_npy(self._z_path(g, blk_id), z_new)
+                        delta += (np.asarray(out[1]).astype(np.int64)
+                                  - ck_frozen)
+                        msk = lay["mask"]
+                        tok_w.append(lay["woff"][msk])
+                        tok_old.append(z[msk])
+                        tok_new.append(z_new[msk])
+                    if tok_w:
+                        blk_store.apply_token_delta(
+                            np.concatenate(tok_w),
+                            np.concatenate(tok_old),
+                            np.concatenate(tok_new))
+                    blk_store.save(self._block_stem(blk_id))
+                    continue
+                # dense-view path: DenseStore's to_dense IS the resident
+                # array (free); a compressed store densifies here — an
+                # EXPLICIT conversion, echoed by store_note()
+                blk_frozen = blk_store.to_dense()
                 blk_delta = np.zeros_like(blk_frozen)
-                tables = None
                 if travel:
                     wpath = self._p("tables", f"word_b{blk_id:04d}.npy")
                     if not os.path.exists(wpath):   # first residency
@@ -482,7 +610,8 @@ class StreamingLDA:
                     blk_delta += np.asarray(out[1]) - blk_frozen
                     delta += (np.asarray(out[2]).astype(np.int64)
                               - ck_frozen)
-                _save_npy(self._block_path(blk_id), blk_frozen + blk_delta)
+                self._make_store(blk_frozen + blk_delta).save(
+                    self._block_stem(blk_id))
             ck = ck + delta
             _save_npy(self._p("state", "ck.npy"), ck)
         self.iteration_count += 1
@@ -499,9 +628,16 @@ class StreamingLDA:
         return history
 
     # -- observation -------------------------------------------------------
-    def memory_report(self) -> dict:
+    def memory_report(self, scan_store: bool = True) -> dict:
+        """Resident-footprint report.  ``resident_block_bytes`` /
+        ``total_model_bytes`` stay the DENSE formulas (the paper's
+        capacity denominator, and what a densify would cost); the
+        ``store_*`` keys report what the block store ACTUALLY occupies —
+        max-over-blocks resident bytes plus aggregated head/tail
+        occupancy and overflow-row counters (``scan_store=False`` skips
+        the block scan for cheap formula-only calls)."""
         vb, k = self.partition.block_size, self.num_topics
-        return {
+        rep = {
             "num_workers": self.num_workers,
             "blocks_per_worker": self.blocks_per_worker,
             "data_parallel": self.data_parallel,
@@ -511,7 +647,22 @@ class StreamingLDA:
             "total_model_bytes": self.vocab_size * k * 4,
             "row_group_bytes": self.capacity * 4 * 4,
             "row_cdk_bytes": self.dloc * k * 4,
+            "store": self.store_kind,
         }
+        if scan_store:
+            agg = {"head_rows": 0, "tail_rows": 0, "overflow_rows": 0,
+                   "tail_nnz": 0}
+            resident = total = 0
+            for b in range(self.num_blocks):
+                occ = self._load_block_store(b).occupancy()
+                for key in agg:
+                    agg[key] += occ[key]
+                resident = max(resident, occ["nbytes_resident"])
+                total += occ["nbytes_resident"]
+            rep["store_occupancy"] = agg
+            rep["resident_store_bytes"] = resident
+            rep["total_store_bytes"] = total
+        return rep
 
     def gather_counts(self):
         """Reassemble the global model — materializes ``[V, K]``; for
@@ -522,7 +673,7 @@ class StreamingLDA:
         vb, k = self.partition.block_size, self.num_topics
         ckt = np.zeros((self.partition.padded_vocab, k), np.int32)
         for b in range(self.num_blocks):
-            ckt[b * vb:(b + 1) * vb] = _load_npy(self._block_path(b))
+            ckt[b * vb:(b + 1) * vb] = self._load_block_store(b).to_dense()
         ckt = ckt[:self.vocab_size]
         cdk = np.zeros((self.num_docs, k), np.int32)
         for g in range(self.num_shards):
@@ -560,21 +711,26 @@ class StreamingLDA:
             self.beta, build_tables=build_tables)
 
     def save_snapshot_sharded(self, out_dir: str) -> str:
-        """Streaming snapshot export: one block file at a time is copied
+        """Streaming snapshot export: one block store at a time is copied
         into a sharded snapshot directory (`core/infer.py`
-        ``load_snapshot_rows`` serves from it row-by-row) — the full
-        ``[V, K]`` model is never materialized."""
+        ``load_snapshot_rows`` serves from it row-restricted) — the full
+        ``[V, K]`` model is never materialized.  A dense-store run writes
+        the unchanged ``sharded-snapshot-v1`` layout (plain ``.npy``
+        blocks); a compressed store exports its own records under format
+        v2 with the store kind stamped in meta.json."""
         os.makedirs(out_dir, exist_ok=True)
         ck = np.zeros(self.num_topics, np.int64)
         for b in range(self.num_blocks):
-            blk = _load_npy(self._block_path(b))
-            integrity.save_npy(
-                os.path.join(out_dir, f"block_{b:05d}.npy"), blk)
-            ck += blk.sum(axis=0, dtype=np.int64)
+            st = self._load_block_store(b)
+            st.save(os.path.join(out_dir, f"block_{b:05d}"))
+            ck += st.col_sums()
         integrity.save_npy(os.path.join(out_dir, "ck.npy"),
                            ck.astype(np.int64))
         meta = {
-            "format": "sharded-snapshot-v1",
+            "format": ("sharded-snapshot-v1"
+                       if self.store_kind == "dense"
+                       else "sharded-snapshot-v2"),
+            "store": self.store_kind,
             "vocab_size": self.vocab_size,
             "num_topics": self.num_topics,
             "num_blocks": self.num_blocks,

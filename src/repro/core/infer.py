@@ -210,12 +210,16 @@ def load_snapshot(path: str) -> ModelSnapshot:
 # ---------------------------------------------------------------------------
 
 SHARDED_SNAPSHOT_FORMAT = "sharded-snapshot-v1"
+SHARDED_SNAPSHOT_FORMAT_V2 = "sharded-snapshot-v2"
+_SNAPSHOT_FORMATS = (SHARDED_SNAPSHOT_FORMAT, SHARDED_SNAPSHOT_FORMAT_V2)
 
 
 def load_sharded_snapshot_meta(snap_dir: str) -> dict:
     """Manifest of a sharded snapshot directory
     (``StreamingLDA.save_snapshot_sharded`` output) — O(1) in model
-    size."""
+    size.  Accepts v1 (plain dense ``.npy`` blocks, the pre-store
+    layout) and v2 (blocks are CountStore records of the ``store`` kind
+    stamped here); the returned dict always carries ``store``."""
     import json
     import os
     try:
@@ -225,10 +229,11 @@ def load_sharded_snapshot_meta(snap_dir: str) -> dict:
         raise ValueError(
             f"{snap_dir!r} is not a sharded snapshot directory "
             "(missing meta.json)") from e
-    if meta.get("format") != SHARDED_SNAPSHOT_FORMAT:
+    if meta.get("format") not in _SNAPSHOT_FORMATS:
         raise ValueError(
             f"unknown snapshot format {meta.get('format')!r} in "
-            f"{snap_dir!r}; expected {SHARDED_SNAPSHOT_FORMAT!r}")
+            f"{snap_dir!r}; expected one of {_SNAPSHOT_FORMATS}")
+    meta.setdefault("store", "dense")
     return meta
 
 
@@ -243,11 +248,14 @@ def load_snapshot_rows(snap_dir: str, word: np.ndarray):
     computed per vocabulary row with the full-vocabulary smoothing
     denominator (``true_vocab_size`` keeps ``Vβ`` honest) — so fold-in
     against this view is BITWISE the full-snapshot fold-in, while peak
-    serving memory is O(unique query words × K) + one block file,
-    never ``[V, K]``.
+    serving memory is O(unique query words × K) + one block STORE at
+    its occupancy — a TailStore block answers ``rows(idx)`` from its
+    lanes + overflow dict (only the touched rows' heads and tails are
+    ever densified), never ``[Vb, K]``, let alone ``[V, K]``.
     """
     import os
 
+    from repro.core.engine import countstore
     from repro.data import integrity
     meta = load_sharded_snapshot_meta(snap_dir)
     word = np.asarray(word, np.int32)
@@ -261,9 +269,9 @@ def load_snapshot_rows(snap_dir: str, word: np.ndarray):
     rows = np.zeros((max(uniq.shape[0], 1), k), np.int32)
     for b in np.unique(uniq // vb):
         sel = (uniq // vb) == b
-        blk = integrity.load_npy(
-            os.path.join(snap_dir, f"block_{int(b):05d}.npy"))
-        rows[:uniq.shape[0]][sel] = blk[uniq[sel] - b * vb]
+        blk = countstore.load(
+            os.path.join(snap_dir, f"block_{int(b):05d}"))
+        rows[:uniq.shape[0]][sel] = blk.rows(uniq[sel] - b * vb)
     ck = integrity.load_npy(
         os.path.join(snap_dir, "ck.npy")).astype(np.int32)
     alpha = meta["alpha"]

@@ -64,22 +64,42 @@ class KVStore:
 
     Keys are block ids for ``C_k^t`` blocks plus the special key ``"ck"``
     for the non-separable topic totals (§3.3 special channel).
+
+    ``store`` selects the at-rest encoding of each entry (DESIGN.md §16):
+    ``"dense"`` keeps the raw ``[Vb, K]`` array; ``"tail"`` holds the
+    hybrid head/tail CountStore record.  Encode/decode is an exact
+    integer round-trip, so the oracle's chain is bit-identical under
+    either — which is precisely the equivalence the engine tests lean
+    on.  ``bytes_moved`` keeps counting LOGICAL dense traffic (the §3.2
+    cost model the perf tests pin); ``resident_bytes()`` reports what
+    the chosen encoding actually holds.
     """
 
-    def __init__(self):
-        self._blocks: Dict[int, np.ndarray] = {}
+    def __init__(self, store: str = "dense", wcap: int | None = None):
+        from repro.core.engine import countstore
+        countstore.resolve_store(store)     # fail fast on unknown kinds
+        self.store_kind = store
+        self.wcap = (countstore.DEFAULT_TAIL_WCAP if wcap is None
+                     else int(wcap))
+        self._store_cls = countstore.resolve_store(store)
+        self._blocks: Dict[int, object] = {}
         self._ck: np.ndarray | None = None
         self.bytes_moved = 0
 
     # -- word-topic blocks (on-demand, §3.2) --
     def put_block(self, block_id: int, rows: np.ndarray) -> None:
         self.bytes_moved += rows.nbytes
-        self._blocks[block_id] = rows.copy()
+        self._blocks[block_id] = self._store_cls.from_dense(
+            np.asarray(rows, np.int32), wcap=self.wcap)
 
     def get_block(self, block_id: int) -> np.ndarray:
-        rows = self._blocks[block_id]
+        rows = self._blocks[block_id].to_dense()
         self.bytes_moved += rows.nbytes
-        return rows.copy()
+        return np.array(rows, copy=True)
+
+    def resident_bytes(self) -> int:
+        """Bytes the store's encoding actually holds across all blocks."""
+        return sum(st.nbytes_resident() for st in self._blocks.values())
 
     # -- topic totals (per-round lazy sync, §3.3) --
     def put_ck_delta(self, delta: np.ndarray) -> None:
@@ -199,7 +219,8 @@ class HostModelParallelLDA:
                  blocks_per_worker: int = 1, sampler: str = "numpy",
                  ck_sync: str = "eager", data_parallel: int = 1,
                  table_lifetime: str | None = None,
-                 sampler_args: tuple | None = None):
+                 sampler_args: tuple | None = None,
+                 store: str = "dense"):
         if ck_sync not in ("eager", "round"):
             raise ValueError(f"unknown ck_sync {ck_sync!r}")
         if ck_sync == "round" and sampler == "numpy":
@@ -233,7 +254,7 @@ class HostModelParallelLDA:
                                                self.num_blocks)
         sched.validate_schedule(num_workers, self.blocks_per_worker)
         self.rng = np.random.default_rng(seed)
-        self.store = KVStore()
+        self.store_kind = store
         k = num_topics
         b = self.num_blocks
         vb = self.partition.block_size
@@ -296,6 +317,13 @@ class HostModelParallelLDA:
                                     self.partition) \
             if sampler != "numpy" else None
         self.capacity = cap
+        # same wcap derivation as the SPMD engine, so a tail-encoded
+        # store splits head/tail rows exactly where the sampler does
+        from repro.core.engine import countstore
+        self.store = KVStore(
+            store=store,
+            wcap=int(dict(self.sampler_args).get(
+                "wcap", countstore.DEFAULT_TAIL_WCAP)))
         self.workers: List[HostWorker] = []
         for w, s in enumerate(shards):
             idx = build_inverted_index(s.doc_local, s.word, self.partition,
@@ -411,6 +439,7 @@ class HostModelParallelLDA:
             "data_parallel": self.data_parallel,
             "sampler": self.sampler,
             "ck_sync": self.ck_sync,
+            "store": self.store_kind,
             "table_lifetime": self.table_lifetime,
             "sampler_args": [list(p) for p in self.sampler_args],
             "alpha": np.asarray(self.alpha, np.float32).tolist(),
@@ -479,6 +508,7 @@ class HostModelParallelLDA:
                    blocks_per_worker=cfg["blocks_per_worker"],
                    sampler=cfg["sampler"], ck_sync=cfg["ck_sync"],
                    data_parallel=cfg["data_parallel"],
+                   store=cfg.get("store", "dense"),
                    table_lifetime=cfg["table_lifetime"],
                    sampler_args=tuple(
                        tuple(p) for p in cfg["sampler_args"]))

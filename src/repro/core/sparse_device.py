@@ -202,7 +202,79 @@ def sparse_prologue(cdk, ckt_block, ck, doc, word_off, z, mask, alpha,
     sdense = sdense_row[word_off] + delta
 
     return {"wops": wops, "dops": dops, "h_t": h_t, "dcs": dcs,
-            "sdense": sdense, "delta": delta}
+            "dcs_rows": word_off, "sdense": sdense, "delta": delta}
+
+
+def tail_prologue(cdk, tail_topics, tail_counts, over_pad, row_map, ck,
+                  doc, word_off, z, mask, alpha, beta, vbeta,
+                  dcap: int) -> dict:
+    """Store-native twin of :func:`sparse_prologue`: consumes a
+    ``TailStore``'s device operands (`engine/countstore.py`) instead of a
+    dense ``[Vb, K]`` block, producing a bitwise-identical ops dict.
+
+    The memory win hinges on one observation: every TAIL row's dense
+    segment is the SAME vector — ``head_v = 0`` makes
+    ``D_v = α(β + 0)/denom`` word-independent — so instead of a
+    ``[Vb, K]`` cumsum the dense segment is a ``[1 + Hcap, K]`` stack
+    (row 0 the shared tail base, rows 1.. the overflow heads) reached
+    through ``row_map``'s indirection.  Nothing in this function
+    materializes a ``[Vb, K]`` buffer.
+
+    Bitwise equivalence with the dense prologue is by construction:
+    the stack rows run the exact op chain of the dense ``dmass``/cumsum
+    (a zero ``hterm`` row for tails, the gathered head row otherwise),
+    per-token gathers read the same count values (store lanes ==
+    ``_extract_lanes`` of the frozen row, by the store's invariant), and
+    every substitute gather on the indirection (sentinel lanes, clamped
+    overflow indices for tail tokens) feeds positions the downstream
+    ``where(valid, ·)`` / ``where(h_t, ·)`` masks discard — values may
+    differ only where they are never consumed (no NaN risk: all
+    denominators are positive)."""
+    k = ck.shape[0]
+    over_f = over_pad.astype(jnp.float32)
+    cdk_f = cdk.astype(jnp.float32)
+    ck_f = ck.astype(jnp.float32)
+    denom = ck_f + vbeta
+
+    dl = _extract_lanes(cdk, dcap)                         # [Dloc, dcap]
+
+    # dense-segment stack: row 0 = shared tail base (hterm ≡ 0), rows
+    # 1.. = overflow heads — same addend arithmetic as the dense path
+    hstack = jnp.concatenate(
+        [jnp.zeros((1, k), jnp.float32), over_f], axis=0)  # [1+Hcap, K]
+    dmass = alpha[None, :] * (beta + hstack) / denom[None, :]
+    dcs = jnp.cumsum(dmass, axis=1)
+    sdense_row = dcs[:, -1]
+
+    rows_t = row_map[word_off]                             # [T]; 0 = tail
+    h_t = rows_t > 0
+    orow = jnp.maximum(rows_t - 1, 0)                      # clamped: masked
+
+    wlanes = tail_topics[word_off]                         # [T, wcap]
+    wkk = jnp.minimum(wlanes, k - 1)
+    wops = {"kk": wkk,
+            "valid": (wlanes < k) & ~h_t[:, None],
+            "ckt": tail_counts[word_off].astype(jnp.float32),
+            "cdk": cdk_f[doc[:, None], wkk],
+            "ck": ck_f[wkk], "alpha": alpha[wkk]}
+
+    dlanes = dl[doc]                                       # [T, dcap]
+    dkk = jnp.minimum(dlanes, k - 1)
+    dops = {"kk": dkk, "valid": dlanes < k,
+            "ckt": over_f[orow[:, None], dkk],
+            "cdk": cdk_f[doc[:, None], dkk],
+            "ck": ck_f[dkk], "alpha": alpha[dkk]}
+
+    a0 = alpha[z]
+    c0 = over_f[orow, z]
+    k0 = ck_f[z]
+    dz0 = a0 * (beta + jnp.where(h_t, c0, 0.0)) / (k0 + vbeta)
+    dz0x = a0 * (beta + jnp.where(h_t, c0 - 1.0, 0.0)) / (k0 - 1.0 + vbeta)
+    delta = jnp.where(mask, dz0x - dz0, 0.0)
+    sdense = sdense_row[rows_t] + delta
+
+    return {"wops": wops, "dops": dops, "h_t": h_t, "dcs": dcs,
+            "dcs_rows": rows_t, "sdense": sdense, "delta": delta}
 
 
 def lane_masses_jnp(wops, dops, h_t, z0, mask, beta, vbeta):
@@ -246,23 +318,31 @@ def _lane_draw_jnp(ops, z0, mask, u, beta, vbeta):
     return z_lane, ~(in_w | in_d), ydense
 
 
+def _dense_segment_pick(ops, ydense, z, k):
+    """Dense-segment draw: shifted-suffix bisection on the frozen cumsum
+    rows, indexed through ``ops["dcs_rows"]`` (the word row itself in the
+    dense layout, the shared-base/overflow indirection in the tail
+    layout — same gathered values either way).
+
+    Counted draw on the z0-perturbed cumsum Dcs'_k = Dcs_k + δ·[k ≥ z0]:
+    split the count at z0 — prefix counts against y, suffix against
+    y − δ — so the rank-1 exclusion never materializes a dense row."""
+    dcs, delta, rows = ops["dcs"], ops["delta"], ops["dcs_rows"]
+    c1 = _row_count(dcs, rows, ydense)
+    c2 = _row_count(dcs, rows, ydense - delta)
+    idx = jnp.minimum(c1, z) + jnp.maximum(c2 - z, 0)
+    l1 = _row_count(dcs, rows, ops["sdense"], strict=True)
+    l2 = _row_count(dcs, rows, ops["sdense"] - delta, strict=True)
+    last = jnp.minimum(l1, z) + jnp.maximum(l2 - z, 0)
+    return jnp.minimum(jnp.minimum(idx, last), k - 1).astype(jnp.int32)
+
+
 def sparse_epilogue(ops, z_lane, is_dense, ydense, cdk, ckt_block, ck,
                     doc, word_off, z, mask):
-    """Dense-segment draw (shifted-suffix bisection on the frozen cumsum)
-    + final select + exact delta fold — downstream of the lane block,
-    shared by the jnp and Pallas paths."""
+    """Dense-segment draw + final select + exact delta fold — downstream
+    of the lane block, shared by the jnp and Pallas paths."""
     k = ck.shape[0]
-    dcs, delta = ops["dcs"], ops["delta"]
-    # counted draw on the z0-perturbed cumsum Dcs'_k = Dcs_k + δ·[k ≥ z0]:
-    # split the count at z0 — prefix counts against y, suffix against
-    # y − δ — so the rank-1 exclusion never materializes a dense row.
-    c1 = _row_count(dcs, word_off, ydense)
-    c2 = _row_count(dcs, word_off, ydense - delta)
-    idx = jnp.minimum(c1, z) + jnp.maximum(c2 - z, 0)
-    l1 = _row_count(dcs, word_off, ops["sdense"], strict=True)
-    l2 = _row_count(dcs, word_off, ops["sdense"] - delta, strict=True)
-    last = jnp.minimum(l1, z) + jnp.maximum(l2 - z, 0)
-    k_dense = jnp.minimum(jnp.minimum(idx, last), k - 1).astype(jnp.int32)
+    k_dense = _dense_segment_pick(ops, ydense, z, k)
 
     z_new = jnp.where(is_dense, k_dense, z_lane)
     z_new = jnp.where(mask, z_new, z)
@@ -286,3 +366,33 @@ def sweep_block_sparse(cdk, ckt_block, ck, doc, word_off, z, mask, u,
     z_lane, is_dense, ydense = _lane_draw_jnp(ops, z, mask, u, beta, vbeta)
     return sparse_epilogue(ops, z_lane, is_dense, ydense, cdk, ckt_block,
                            ck, doc, word_off, z, mask)
+
+
+@partial(jax.jit, static_argnames=("dcap",))
+def sweep_block_sparse_tail(cdk, tail_topics, tail_counts, over_pad,
+                            row_map, ck, doc, word_off, z, mask, u,
+                            alpha, beta, vbeta, dcap: int = 64):
+    """Store-native form of :func:`sweep_block_sparse`: the word-count
+    block arrives as a ``TailStore``'s device operands (lane pair +
+    overflow stack + row map) and is never densified — the ZERO-
+    CONVERSION path of DESIGN.md §16.  ``wcap`` is implied by the lane
+    shape; ``dcap`` stays static (it shapes the doc-lane buffers).
+
+    Returns ``(cdk, ck, z_new)`` — the word-block fold happens host-side
+    via ``TailStore.apply_token_delta`` (exact, order-free integer
+    adds), which is bitwise equal to the dense path's
+    ``frozen + Σ(out − frozen)`` commit.  Draw-for-draw equality with
+    :func:`sweep_block_sparse` on the densified block is pinned by
+    tests/test_countstore.py."""
+    ops = tail_prologue(cdk, tail_topics, tail_counts, over_pad, row_map,
+                        ck, doc, word_off, z, mask, alpha, beta, vbeta,
+                        dcap)
+    z_lane, is_dense, ydense = _lane_draw_jnp(ops, z, mask, u, beta, vbeta)
+    k = ck.shape[0]
+    k_dense = _dense_segment_pick(ops, ydense, z, k)
+    z_new = jnp.where(is_dense, k_dense, z_lane)
+    z_new = jnp.where(mask, z_new, z)
+    d = mask.astype(jnp.int32)
+    cdk = cdk.at[doc, z].add(-d).at[doc, z_new].add(d)
+    ck = ck.at[z].add(-d).at[z_new].add(d)
+    return cdk, ck, z_new

@@ -110,12 +110,18 @@ def main() -> None:
         queries = np.split(remapped, np.cumsum(lens)[:-1])
         print(f"sharded snapshot: V={meta['vocab_size']:,} "
               f"K={meta['num_topics']} ({meta['num_blocks']} block "
-              f"files); batch touches {snap.vocab_size:,} distinct "
+              f"files, store={meta['store']}); batch touches "
+              f"{snap.vocab_size:,} distinct "
               f"words -> resident rows [{snap.vocab_size}, "
               f"{snap.num_topics}] "
               f"({snap.ckt.nbytes / 2**20:.2f} MiB of "
               f"{meta['vocab_size'] * meta['num_topics'] * 4 / 2**20:.1f}"
               f" MiB full model)")
+        if meta["store"] != "dense":
+            # densification is never silent (DESIGN.md §16): only the
+            # touched rows decode to dense — never the full model
+            print(f"NOTE: store={meta['store']!r} block records decode "
+                  f"their touched rows to dense [U, K] for serving")
     elif args.snapshot:
         snap = load_snapshot(args.snapshot)
         print(f"snapshot: V={snap.vocab_size} K={snap.num_topics} "

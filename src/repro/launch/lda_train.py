@@ -36,6 +36,7 @@ from repro.data.corpus import split_corpus
 from repro.data.synthetic import synthetic_corpus
 from repro.launch.samplers import (infer_sampler_choices,
                                    resolve_sampler_choice,
+                                   resolve_store_choice, store_choices,
                                    train_sampler_choices)
 from repro.train.checkpoint import save_checkpoint
 
@@ -54,6 +55,15 @@ def main() -> None:
     ap.add_argument("--force", action="store_true",
                     help="run an explicitly requested *_pallas sampler "
                          "in interpret mode off-TPU instead of refusing")
+    ap.add_argument("--store", choices=store_choices(), default=None,
+                    help="model CountStore layout (DESIGN.md §16): "
+                         "'dense' keeps raw [Vb, K] blocks (default), "
+                         "'tail' the hybrid dense-head/sparse-tail "
+                         "record whose resident bytes track occupancy "
+                         "instead of V*K; 'auto' picks tail exactly "
+                         "where the regime map picks the sparse sampler "
+                         "family. Draw-identical either way; on "
+                         "--resume, keeps the run's store unless given")
     ap.add_argument("--table-lifetime",
                     choices=["auto", "round", "iteration"], default="auto",
                     help="MH proposal-table build schedule (DESIGN.md "
@@ -168,8 +178,20 @@ def main() -> None:
         from repro.data.stream import ShardedCorpus
         if args.resume:
             lda = StreamingLDA.resume(args.workdir)
+            if args.store is not None:
+                # the run's geometry is known now, so 'auto' can consult
+                # the regime map; set_store converts the on-disk block
+                # files (the chain itself is store-invariant)
+                new_store = resolve_store_choice(
+                    args.store, num_topics=lda.num_topics,
+                    max_doc_len=lda.max_doc_len)
+                if new_store != lda.store_kind:
+                    print(f"switching store {lda.store_kind!r} -> "
+                          f"{new_store!r} (chain unchanged)")
+                    lda.set_store(new_store)
             print(f"resumed streaming run at iteration "
-                  f"{lda.iteration_count} (sampler={lda.sampler_mode})")
+                  f"{lda.iteration_count} (sampler={lda.sampler_mode}, "
+                  f"store={lda.store_kind})")
         else:
             corpus = ShardedCorpus(args.corpus_dir)
             # the corpus exists now, so 'auto' can consult the measured
@@ -177,16 +199,23 @@ def main() -> None:
             sampler = resolve_sampler_choice(
                 args.sampler, force=args.force, num_topics=args.topics,
                 max_doc_len=corpus.max_doc_len)
+            store = resolve_store_choice(
+                args.store or "dense", num_topics=args.topics,
+                max_doc_len=corpus.max_doc_len)
             print(f"corpus: {corpus.num_tokens:,} tokens (sharded, "
                   f"{corpus.num_shards} shards), V={corpus.vocab_size:,}, "
-                  f"K={args.topics}, sampler={sampler}")
+                  f"K={args.topics}, sampler={sampler}, store={store}")
             lda = StreamingLDA(corpus, args.workdir, args.topics,
                                args.workers, alpha=args.alpha,
                                beta=args.beta, seed=args.seed,
                                sampler_mode=sampler,
                                blocks_per_worker=args.blocks_per_worker,
                                data_parallel=args.data_parallel,
-                               table_lifetime=lifetime)
+                               table_lifetime=lifetime, store=store)
+        note = lda.store_note()
+        if note:
+            # densification is never silent (DESIGN.md §16)
+            print(f"NOTE: {note}")
         rep = lda.memory_report()
         print(f"resident block: {rep['resident_block_shape']} "
               f"({rep['resident_block_bytes'] / 2**20:.1f} MiB of "
@@ -209,20 +238,36 @@ def main() -> None:
         print(f"corpus: {corpus.num_tokens:,} tokens, V={args.vocab}, "
               f"K={args.topics}, model vars={args.vocab * args.topics:,}, "
               f"sampler={args.sampler}")
+        max_len = int(corpus.doc_lengths().max(initial=1))
         if args.engine == "mp":
             if args.resume:
-                lda = ModelParallelLDA.resume(corpus, mp_ckpt)
-                print(f"resumed mp run at iteration {lda.iteration_count}")
+                store = (resolve_store_choice(args.store,
+                                              num_topics=args.topics,
+                                              max_doc_len=max_len)
+                         if args.store is not None else None)
+                lda = ModelParallelLDA.resume(corpus, mp_ckpt, store=store)
+                print(f"resumed mp run at iteration {lda.iteration_count}"
+                      f" (store={lda.store_kind})")
             else:
+                store = resolve_store_choice(args.store or "dense",
+                                             num_topics=args.topics,
+                                             max_doc_len=max_len)
                 lda = ModelParallelLDA(
                     corpus, args.topics, args.workers, alpha=args.alpha,
                     beta=args.beta, seed=args.seed,
                     sampler_mode=args.sampler,
                     blocks_per_worker=args.blocks_per_worker,
                     data_parallel=args.data_parallel,
-                    table_lifetime=lifetime)
+                    table_lifetime=lifetime, store=store)
             print(f"table lifetime: {lda.table_lifetime}")
+            note = lda.store_note()
+            if note:
+                # densification is never silent (DESIGN.md §16)
+                print(f"NOTE: {note}")
         else:
+            if args.store not in (None, "dense"):
+                ap.error("--store supports the mp engines only; the dp "
+                         "baseline replicates the dense model")
             lda = DataParallelLDA(corpus, args.topics, args.workers,
                                   alpha=args.alpha, beta=args.beta,
                                   seed=args.seed)

@@ -105,3 +105,42 @@ def resolve_sampler_choice(name: str, *, force: bool = False,
             f"jnp twin {name.removesuffix('_pallas')!r}, or pass --force "
             f"to run interpret mode anyway.")
     return name
+
+
+# ---------------------------------------------------------------------------
+# CountStore selection (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+def store_choices() -> list:
+    """``--store`` choices: every registered CountStore kind, plus
+    ``auto`` (regime-derived)."""
+    from repro.core.engine.countstore import available_stores
+    return available_stores() + ["auto"]
+
+
+def resolve_store_choice(name: str, *,
+                         num_topics: int | None = None,
+                         max_doc_len: int | None = None) -> str:
+    """Resolve a CLI ``--store`` value to a registered CountStore kind.
+
+    ``auto`` reuses the measured :data:`REGIME_MAP`: the tail store pays
+    off exactly where the sparse sampler family does — long-tailed
+    word-topic rows whose nnz ≪ K — so ``auto`` picks ``tail`` iff the
+    regime probe picks the sparse family for this workload, and the
+    bitwise-frozen ``dense`` default otherwise (also the fallback when
+    the workload parameters are unknown, e.g. before the corpus exists).
+    The choice never affects the chain — stores are draw-equivalent by
+    construction — only memory/layout, so resolving it per-workload is
+    always safe.
+    """
+    from repro.core.engine.countstore import available_stores
+    if name == "auto":
+        if num_topics is not None and max_doc_len is not None:
+            family = regime_sampler(num_topics, max_doc_len)
+            return "tail" if family == "sparse" else "dense"
+        return "dense"
+    if name not in available_stores():
+        raise SystemExit(
+            f"--store {name}: unknown store kind; "
+            f"choices: {store_choices()}")
+    return name
